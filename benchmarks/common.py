@@ -1,0 +1,139 @@
+"""Shared benchmark machinery: workload builders for the paper's
+micro-benchmarks (Table I) and result formatting."""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GCounter, GMap, GSet
+from repro.sync import scuttlebutt, simulate, topology
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+ALGOS = ("state", "classic", "bp", "rr", "bprr")
+
+# paper defaults: 15 nodes, 100 events per replica, 1000 GMap keys
+NODES = 15
+EVENTS = 100
+GMAP_KEYS = 1000
+QUIET = 20
+
+
+def topo_of(name: str, nodes: int = NODES):
+    return topology.by_name(name, nodes, degree=4)
+
+
+def gset_workload(nodes=NODES, events=EVENTS):
+    """Table I GSet: addition of a globally unique element per node/tick."""
+    lat = GSet(universe=nodes * events).lattice
+
+    def op_fn(x, t):
+        ids = jnp.arange(nodes) * events + jnp.minimum(t, events - 1)
+        d = jnp.zeros((nodes, nodes * events), jnp.bool_)
+        return d.at[jnp.arange(nodes), ids].set(True)
+
+    return lat, op_fn
+
+
+def gcounter_workload(nodes=NODES):
+    """Table I GCounter: one increment per node/tick."""
+    lat = GCounter(nodes).lattice
+
+    def op_fn(x, t):
+        idx = jnp.arange(nodes)
+        d = jnp.zeros((nodes, nodes), jnp.int32)
+        return d.at[idx, idx].set(x[idx, idx] + 1)
+
+    return lat, op_fn
+
+
+def gmap_workload(k_pct: int, nodes=NODES, keys=GMAP_KEYS):
+    """Table I GMap K%: each node updates (K/N)% of keys per tick (disjoint
+    per-node key blocks), so K% of all keys change per interval. Blocks are
+    clamped to the per-node span so rounding never makes them overlap (an
+    overlap would create cross-node version contention the paper's
+    benchmark doesn't have)."""
+    span = keys // nodes
+    per_node = min(max(int(round(keys * k_pct / 100.0 / nodes)), 1), span)
+    lat = GMap(num_keys=keys).lattice
+    blocks = np.zeros((nodes, keys), bool)
+    for i in range(nodes):
+        start = i * span
+        blocks[i, start:start + per_node] = True
+    blocks = jnp.asarray(blocks)
+
+    def op_fn(x, t):
+        return jnp.where(blocks, x + 1, 0).astype(x.dtype)
+
+    return lat, op_fn
+
+
+def scuttlebutt_gset_codec(nodes=NODES, events=EVENTS):
+    def range_join(lo, hi):
+        s_idx = jnp.arange(events)
+        mask = (s_idx >= lo[..., :, None]) & (s_idx < hi[..., :, None])
+        return mask.reshape(lo.shape[:-1] + (nodes * events,))
+
+    return scuttlebutt.DeltaCodec(
+        range_join=range_join,
+        delta_elems=jnp.ones((nodes,), jnp.int32),
+        state_size=lambda kv: jnp.sum(kv, axis=-1),
+    )
+
+
+def scuttlebutt_gcounter_codec(nodes=NODES):
+    return scuttlebutt.DeltaCodec(
+        range_join=lambda lo, hi: jnp.where(hi > lo, hi, 0),
+        delta_elems=jnp.ones((nodes,), jnp.int32),
+        state_size=lambda kv: jnp.sum(kv > 0, axis=-1),
+    )
+
+
+def scuttlebutt_gmap_codec(k_pct: int, nodes=NODES, keys=GMAP_KEYS):
+    span = keys // nodes
+    per_node = min(max(int(round(keys * k_pct / 100.0 / nodes)), 1), span)
+    blocks = np.zeros((nodes, keys), np.int32)
+    for i in range(nodes):
+        blocks[i, i * span:i * span + per_node] = 1
+    blocks = jnp.asarray(blocks)
+
+    def range_join(lo, hi):
+        ver = jnp.where(hi > lo, hi, 0)
+        return jnp.max(blocks[None] * ver[..., :, None], axis=-2)
+
+    return scuttlebutt.DeltaCodec(
+        range_join=range_join,
+        delta_elems=jnp.full((nodes,), per_node, jnp.int32),
+        state_size=lambda kv: jnp.sum((kv > 0) * per_node, axis=-1),
+    )
+
+
+def run_delta_algos(lat, op_fn, topo, events=EVENTS, quiet=QUIET):
+    out = {}
+    for algo in ALGOS:
+        t0 = time.time()
+        res = simulate(algo, lat, topo, op_fn, active_rounds=events,
+                       quiet_rounds=quiet)
+        out[algo] = {
+            "tx": res.total_tx,
+            "mem_avg": res.avg_mem,
+            "mem_max_node": int(res.max_mem_node.max()),
+            "cpu": res.total_cpu,
+            "wall_s": round(time.time() - t0, 2),
+        }
+    return out
+
+
+def save_result(name: str, payload):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{name}.json").write_text(json.dumps(payload, indent=2))
+
+
+def ratio_table(rows, base_key="bprr", metric="tx"):
+    base = rows[base_key][metric]
+    return {k: round(v[metric] / max(base, 1), 3) for k, v in rows.items()}

@@ -1,0 +1,157 @@
+"""Fig 11/12 reproduction: Retwis workload under Zipf contention.
+
+Retwis objects (paper §V-D): per-user followers (GSet), wall (GMap
+tweet-id → content), timeline (GMap ts → id). Ops: 15% follow (1 update),
+35% post (1 + #followers updates), 50% timeline read (0 updates). Updates
+target objects via a Zipf distribution (coefficient 0.5 → 1.5); every
+object is an independent CRDT with its own δ-buffer — the simulation vmaps
+the Algorithm-1/2 round step over the object axis, so the per-object
+inflation check semantics of classic delta-based are preserved.
+
+Byte accounting uses the paper's sizes: 31B tweet ids, 270B content,
+20B node/user ids. Default is a scaled-down config (CPU container);
+``--full`` approaches the paper's 50-node / 30K-object setting.
+
+Measured: transmission bytes/node and memory bytes/node for classic vs
+BP+RR, split into first/second experiment half (Fig 11), and the CPU
+(element-ops) overhead of classic vs BP+RR (Fig 12).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lattice import MapLattice
+from repro.core import value_lattices as vl
+from repro.sync.algorithms import SyncAlgorithm
+from repro.sync import topology
+
+from benchmarks import common as C
+
+ZIPFS = (0.5, 0.75, 1.0, 1.25, 1.5)
+ID_B, CONTENT_B = 31, 270
+FOLLOW_B = 20
+WALL_B = ID_B + CONTENT_B
+TL_B = ID_B + 8
+
+
+def build_schedule(rng, zipf, rounds, nodes, objects, ops_per_node):
+    """[T, N, K] object targets (Zipf) + op-kind mix per paper Table II."""
+    ranks = np.arange(1, objects + 1, dtype=np.float64)
+    probs = ranks ** -zipf
+    probs /= probs.sum()
+    targets = rng.choice(objects, size=(rounds, nodes, ops_per_node), p=probs)
+    kinds = rng.choice(3, size=(rounds, nodes, ops_per_node),
+                       p=[0.15, 0.35, 0.50])  # follow / post / read
+    return targets, kinds
+
+
+def run_one(algo, topo, zipf, rounds, objects, slots, ops_per_node, seed=0):
+    rng = np.random.default_rng(seed)
+    nodes = topo.num_nodes
+    targets, kinds = build_schedule(rng, zipf, rounds, nodes, objects,
+                                    ops_per_node)
+    # object classes cycle follower/wall/timeline; per-element byte weights
+    obj_bytes = np.array([FOLLOW_B, WALL_B, TL_B])[
+        np.arange(objects) % 3].astype(np.float64)
+
+    # per-(round, node, object): number of updates (reads contribute 0)
+    upd = np.zeros((rounds, nodes, objects), np.int32)
+    writes = kinds < 2
+    for t in range(rounds):
+        for n in range(nodes):
+            objs = targets[t, n][writes[t, n]]
+            np.add.at(upd[t, n], objs, 1)
+    upd = jnp.asarray(upd)
+
+    lat = MapLattice(slots, vl.max_int(), "retwis").build()
+    alg = SyncAlgorithm(name=algo, lattice=lat, topo=topo)
+
+    # vmap the round step over the object axis
+    def round_all(carry, t):
+        def op_fn_obj(x_obj, cnt_obj):
+            # each node bumps `cnt` slots of the object starting at a
+            # rotating index — concurrent updates from different nodes hit
+            # overlapping slots, which is exactly the contention the paper's
+            # Zipf workload creates
+            ver = jnp.max(x_obj, axis=-1, keepdims=True)
+            idx = (ver % slots).astype(jnp.int32)
+            sel = (jnp.arange(slots)[None, :] - idx) % slots < cnt_obj[:, None]
+            return jnp.where(sel, x_obj + 1, 0)
+
+        cnt = upd[t]                       # [N, R]
+        def step_obj(c, cnt_o):
+            d = op_fn_obj(c.x, cnt_o)
+            return alg.round_step(c, d)
+
+        carry, metrics = jax.vmap(step_obj, in_axes=(0, 1))(carry, cnt)
+        return carry, metrics
+
+    carry0 = jax.vmap(lambda _: alg.init())(jnp.arange(objects))
+    def scan_fn(carry, t):
+        return round_all(carry, t)
+    carry, metrics = jax.lax.scan(scan_fn, carry0, jnp.arange(rounds))
+    tx = np.asarray(metrics.tx, np.float64)          # [T, R]
+    mem = np.asarray(metrics.mem, np.float64)
+    cpu = np.asarray(metrics.cpu, np.float64)
+    tx_bytes = (tx * obj_bytes[None, :]).sum(axis=1)
+    mem_bytes = (mem * obj_bytes[None, :]).sum(axis=1)
+    return tx_bytes, mem_bytes, cpu.sum(axis=1)
+
+
+def run(nodes=16, objects=96, slots=32, rounds=40, ops_per_node=6,
+        verbose=True, full=False):
+    if full:
+        nodes, objects, slots, rounds, ops_per_node = 50, 1500, 64, 100, 10
+    topo = topology.partial_mesh(nodes, 4)
+    out = {}
+    for zipf in ZIPFS:
+        row = {}
+        for algo in ("classic", "bprr"):
+            tx, mem, cpu = run_one(algo, topo, zipf, rounds, objects, slots,
+                                   ops_per_node)
+            half = len(tx) // 2
+            row[algo] = {
+                "tx_mb_node_h1": float(tx[:half].sum() / nodes / 1e6),
+                "tx_mb_node_h2": float(tx[half:].sum() / nodes / 1e6),
+                "mem_mb_node_h1": float(mem[:half].mean() / nodes / 1e6),
+                "mem_mb_node_h2": float(mem[half:].mean() / nodes / 1e6),
+                "cpu": float(cpu.sum()),
+            }
+        row["tx_ratio_h2"] = row["classic"]["tx_mb_node_h2"] / max(
+            row["bprr"]["tx_mb_node_h2"], 1e-9)
+        row["cpu_overhead"] = row["classic"]["cpu"] / max(
+            row["bprr"]["cpu"], 1e-9) - 1.0
+        out[f"zipf_{zipf}"] = row
+        if verbose:
+            print(f"zipf={zipf:4.2f}: classic h2 {row['classic']['tx_mb_node_h2']:9.2f} MB/node, "
+                  f"bprr h2 {row['bprr']['tx_mb_node_h2']:9.2f} MB/node, "
+                  f"tx_ratio={row['tx_ratio_h2']:6.2f}  "
+                  f"cpu_overhead={row['cpu_overhead']:5.2f}x")
+    C.save_result("fig11_retwis", out)
+    return out
+
+
+def validate(out):
+    lo = out["zipf_0.5"]["tx_ratio_h2"]
+    hi = out["zipf_1.5"]["tx_ratio_h2"]
+    return [
+        ("low contention: classic near-optimal", lo < 2.0),
+        # the paper's extreme (7.9×) needs its 50-node/30K-object scale
+        # (--full); the scaled default must still show a clear monotone
+        # contention effect
+        ("high contention: classic blows up", hi > 1.4 * lo and hi > 2.0),
+        ("cpu overhead grows with contention",
+         out["zipf_1.5"]["cpu_overhead"] > out["zipf_0.5"]["cpu_overhead"]),
+    ]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    validate(run(full=args.full))

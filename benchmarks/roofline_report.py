@@ -1,0 +1,61 @@
+"""Roofline table from saved dry-run JSONs (EXPERIMENTS.md §Roofline).
+
+Reads benchmarks/results/dryrun/*.json, prints the per-(arch × shape × mesh)
+three-term table with bottleneck, usefulness ratio, and fit status."""
+
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def load(mesh_filter=None):
+    rows = []
+    for f in sorted(glob.glob(str(RESULTS / "*.json"))):
+        d = json.load(open(f))
+        if mesh_filter and d.get("mesh") != mesh_filter:
+            continue
+        rows.append(d)
+    return rows
+
+
+def table(mesh="pod16x16", out=print):
+    rows = load(mesh)
+    out(f"Roofline — mesh {mesh} (terms in seconds; v5e constants)")
+    out(f"{'arch':<20} {'shape':<12} {'GB/dev':>7} {'adjGB':>6} {'fit':>5} "
+        f"{'compute':>9} {'memory':>9} {'collect':>9} {'bneck':<10} "
+        f"{'useful':>6} {'MFU':>7}")
+    n_ok = 0
+    for d in rows:
+        if d["status"] == "skipped":
+            out(f"{d['arch']:<20} {d['shape']:<12} —      skip: {d['reason'][:48]}")
+            continue
+        if d["status"] == "error":
+            out(f"{d['arch']:<20} {d['shape']:<12} ERROR: {d['error'][:60]}")
+            continue
+        n_ok += 1
+        r = d["roofline"]
+        m = d["memory"]
+        gb = m["peak_gb_per_device"]
+        adj = m.get("peak_gb_tpu_adjusted", gb)
+        # fit on the bf16-staging-adjusted estimate (EXPERIMENTS §Dry-run)
+        fit = "ok" if adj < 16 else "over"
+        out(f"{d['arch']:<20} {d['shape']:<12} {gb:7.1f} {adj:6.1f} {fit:>5} "
+            f"{r['compute_s']:9.3f} {r['memory_s']:9.3f} "
+            f"{r['collective_s']:9.3f} {r['bottleneck']:<10} "
+            f"{r['useful_ratio']:6.2f} {r['mfu']:7.4f}")
+    out(f"({n_ok} live cells)")
+    return rows
+
+
+def main():
+    table("pod16x16")
+    print()
+    table("pod2x16x16")
+
+
+if __name__ == "__main__":
+    main()

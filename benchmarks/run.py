@@ -1,0 +1,121 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--full]
+
+Sections:
+  fig7   GSet/GCounter transmission, tree + mesh     (paper Fig 7, Fig 1)
+  fig8   GMap 10/30/60/100% transmission             (paper Fig 8)
+  fig9   metadata per node vs cluster size           (paper Fig 9)
+  fig10  memory ratio vs BP+RR                       (paper Fig 10)
+  fig11  Retwis under Zipf (bandwidth/memory/CPU)    (paper Fig 11-12)
+  kernels  CRDT Pallas kernel correctness sweep (interpret mode — TPU perf
+           claims come from the roofline analysis, not CPU timings)
+  roofline  dry-run roofline table (if results exist)
+
+Each section prints its table and appends PASS/FAIL validation checks
+against the paper's qualitative claims.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+
+def _section(title):
+    print(f"\n{'='*72}\n== {title}\n{'='*72}")
+
+
+def _checks(checks):
+    ok = True
+    for name, passed in checks:
+        print(f"  [{'PASS' if passed else 'FAIL'}] {name}")
+        ok &= bool(passed)
+    return ok
+
+
+def bench_kernels():
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(0)
+    results = []
+    for shape in [(4096, 1024), (1 << 20,)]:
+        d = jnp.asarray(rng.integers(0, 100, size=shape), jnp.int32)
+        x = jnp.asarray(rng.integers(0, 100, size=shape), jnp.int32)
+        s, xj, cnt = ops.delta_extract(d, x)
+        rs, rxj, rcnt = ref.delta_extract(d, x)
+        ok = bool((s == rs).all() and (xj == rxj).all() and cnt == rcnt)
+        results.append((f"delta_extract {shape}", ok))
+        print(f"  delta_extract {str(shape):>14} == ref: {ok}")
+    buf = jnp.asarray(rng.integers(0, 50, size=(5, 1 << 18)), jnp.int32)
+    ok = bool((ops.buffer_fold(buf) == ref.buffer_fold(buf)).all())
+    results.append(("buffer_fold", ok))
+    print(f"  buffer_fold  (5, 262144) == ref: {ok}")
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale Retwis (50 nodes / 1500 objects)")
+    ap.add_argument("--skip", default="", help="comma list of sections")
+    args = ap.parse_args()
+    skip = set(args.skip.split(",")) if args.skip else set()
+
+    t0 = time.time()
+    all_ok = True
+
+    if "fig7" not in skip:
+        _section("Fig 7 — GSet/GCounter transmission (tree, mesh)")
+        from benchmarks import fig7_transmission as f7
+        out = f7.run()
+        all_ok &= _checks(f7.validate(out))
+
+    if "fig8" not in skip:
+        _section("Fig 8 — GMap K% transmission")
+        from benchmarks import fig8_gmap as f8
+        out = f8.run()
+        all_ok &= _checks(f8.validate(out))
+
+    if "fig9" not in skip:
+        _section("Fig 9 — synchronization metadata per node")
+        from benchmarks import fig9_metadata as f9
+        out = f9.run()
+        all_ok &= _checks(f9.validate(out))
+
+    if "fig10" not in skip:
+        _section("Fig 10 — memory ratio vs BP+RR (mesh)")
+        from benchmarks import fig10_memory as f10
+        out = f10.run()
+        all_ok &= _checks(f10.validate(out))
+
+    if "fig11" not in skip:
+        _section("Fig 11/12 — Retwis under Zipf contention")
+        from benchmarks import fig11_retwis as f11
+        out = f11.run(full=args.full)
+        all_ok &= _checks(f11.validate(out))
+
+    if "kernels" not in skip:
+        _section("CRDT Pallas kernels (interpret-mode correctness sweep)")
+        res = bench_kernels()
+        all_ok &= all(ok for _, ok in res)
+
+    if "roofline" not in skip:
+        _section("Roofline table (from dry-run artifacts, if present)")
+        try:
+            from benchmarks import roofline_report
+            roofline_report.table("pod16x16")
+        except Exception as e:  # noqa: BLE001
+            print(f"  (no dry-run results: {e})")
+
+    print(f"\nbenchmarks done in {time.time()-t0:.0f}s — "
+          f"{'ALL CHECKS PASSED' if all_ok else 'SOME CHECKS FAILED'}")
+    sys.exit(0 if all_ok else 1)
+
+
+if __name__ == "__main__":
+    main()

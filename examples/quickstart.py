@@ -1,0 +1,66 @@
+"""Quickstart: the paper's core objects in five minutes.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Covers: CRDT states and mutators, join decompositions, optimal deltas
+Δ(a,b), optimal δ-mutators, Algorithm 2 (BP+RR) vs the classic algorithm on
+a cyclic topology, and the fused Pallas kernels.
+"""
+
+import jax.numpy as jnp
+
+from repro.core import GCounter, GSet
+from repro.kernels import ops as kops
+from repro.sync import simulate, topology, converged
+
+
+def main():
+    print("== 1. GCounter: states, mutators, optimal δ-mutators ==")
+    gc = GCounter(num_replicas=3)
+    lat = gc.lattice
+    p = lat.bottom()
+    for _ in range(5):
+        p = gc.inc(p, 0)          # replica A increments 5 times
+    p = gc.inc(p, 1)              # replica B once
+    print(f"state={p}, value={int(gc.value(p))}")
+    d = gc.inc_delta(p, 2)        # optimal delta: a single map entry
+    print(f"incᵟ by C -> delta={d} (1 irreducible, not the whole map)")
+
+    print("\n== 2. Optimal deltas Δ(a, b) ==")
+    gs = GSet(universe=8)
+    a = jnp.asarray([1, 1, 1, 0, 0, 0, 0, 0], bool)
+    b = jnp.asarray([1, 0, 0, 1, 0, 0, 0, 0], bool)
+    delta = gs.lattice.delta(a, b)
+    print(f"a={a.astype(int)}  b={b.astype(int)}")
+    print(f"Δ(a,b)={delta.astype(int)}  (exactly what b is missing from a)")
+    assert bool(gs.lattice.leq(gs.lattice.join(delta, b),
+                               gs.lattice.join(a, b)))
+
+    print("\n== 3. Classic delta-based vs Algorithm 2 (BP+RR) on a mesh ==")
+    n, rounds = 15, 30
+    topo = topology.partial_mesh(n, 4)
+    lat = GSet(universe=n * rounds).lattice
+
+    def op_fn(x, t):
+        ids = jnp.arange(n) * rounds + jnp.minimum(t, rounds - 1)
+        return jnp.zeros((n, n * rounds), bool).at[
+            jnp.arange(n), ids].set(True)
+
+    for algo in ("state", "classic", "bprr"):
+        res = simulate(algo, lat, topo, op_fn, active_rounds=rounds,
+                       quiet_rounds=10)
+        print(f"  {algo:8s}: {res.total_tx:>9,} elements transmitted "
+              f"(converged={converged(lat, res.final_x)})")
+
+    print("\n== 4. Fused Pallas kernels (RR hot path) ==")
+    import numpy as np
+    rng = np.random.default_rng(0)
+    d = jnp.asarray(rng.integers(0, 10, size=(1 << 16,)), jnp.int32)
+    x = jnp.asarray(rng.integers(0, 10, size=(1 << 16,)), jnp.int32)
+    s, xj, cnt = kops.delta_extract(d, x)   # Δ + join + |⇓Δ| in one pass
+    print(f"  delta_extract over 65k-entry map: {int(cnt)} novel irreducibles")
+    print("\nquickstart OK")
+
+
+if __name__ == "__main__":
+    main()

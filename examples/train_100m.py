@@ -1,0 +1,75 @@
+"""End-to-end driver: train a ~100M-param qwen3-family model for a few
+hundred steps on CPU, with checkpoint/restart and CRDT progress gossip.
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 200] [--tiny]
+
+The model is the qwen3 architecture family at ~100M scale (d_model 512,
+12 layers, 16k vocab — exact count printed at start). Deterministic
+synthetic data; loss should fall from ~ln(V)≈9.7 to well below within a few
+hundred steps. ``--tiny`` runs a 1-minute smoke variant.
+"""
+
+import argparse
+
+from repro.launch.train import TrainRun, run
+from repro.models.config import ModelConfig
+
+
+def model_100m():
+    return ModelConfig(
+        name="qwen3-100m",
+        num_layers=12,
+        d_model=512,
+        num_heads=8,
+        num_kv_heads=4,
+        head_dim=64,
+        d_ff=2048,
+        vocab_size=16384,
+        pattern=("global",),
+        qk_norm=True,
+        act="swiglu",
+        tie_embeddings=True,
+        attn_q_chunk=256,
+        attn_kv_chunk=256,
+        remat="none",           # CPU example: speed over memory
+    )
+
+
+def model_tiny():
+    return ModelConfig(
+        name="qwen3-tiny", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=512,
+        pattern=("global",), qk_norm=True, act="swiglu",
+        tie_embeddings=True, attn_q_chunk=64, attn_kv_chunk=64,
+        remat="none",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt", default="/tmp/repro_train_100m")
+    args = ap.parse_args()
+
+    cfg = model_tiny() if args.tiny else model_100m()
+    if args.tiny:
+        args.steps, args.batch, args.seq = min(args.steps, 30), 4, 64
+    print(f"model: {cfg.name}  params≈{cfg.param_count()/1e6:.1f}M")
+
+    tr = TrainRun(
+        cfg=cfg, steps=args.steps, global_batch=args.batch,
+        seq_len=args.seq, lr=3e-4, warmup=20,
+        checkpoint_dir=args.ckpt, checkpoint_every=max(args.steps // 4, 10),
+        log_every=10,
+    )
+    state, history, progress = run(tr)
+    print(f"\nfinal loss {history[-1]:.4f} (start {history[0]:.4f}); "
+          f"tokens consumed (CRDT progress counter): {progress.total:,}")
+    assert history[-1] < history[0], "loss must improve"
+
+
+if __name__ == "__main__":
+    main()

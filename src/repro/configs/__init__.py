@@ -1,0 +1,19 @@
+"""Architecture registry: exact published configs + reduced smoke variants."""
+
+from repro.configs.registry import (
+    ARCH_IDS,
+    SHAPES,
+    get_config,
+    get_smoke_config,
+    input_specs,
+    shape_applicable,
+)
+
+__all__ = [
+    "ARCH_IDS",
+    "SHAPES",
+    "get_config",
+    "get_smoke_config",
+    "input_specs",
+    "shape_applicable",
+]

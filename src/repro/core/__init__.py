@@ -1,0 +1,38 @@
+"""Core CRDT library: lattices, join decompositions, optimal deltas.
+
+Paper: "Efficient Synchronization of State-based CRDTs" (Enes et al., 2018).
+"""
+
+from repro.core.lattice import (
+    Lattice,
+    MapLattice,
+    decompose_dense,
+    join_all,
+    leq_from_join,
+    product,
+)
+from repro.core.types import (
+    GCounter,
+    GMap,
+    GSet,
+    LWWMap,
+    LexCounter,
+    PNCounter,
+)
+from repro.core import value_lattices
+
+__all__ = [
+    "Lattice",
+    "MapLattice",
+    "decompose_dense",
+    "join_all",
+    "leq_from_join",
+    "product",
+    "GCounter",
+    "GMap",
+    "GSet",
+    "LWWMap",
+    "LexCounter",
+    "PNCounter",
+    "value_lattices",
+]

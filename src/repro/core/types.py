@@ -1,0 +1,194 @@
+"""Concrete state-based CRDTs (paper §II-A, Appendix B).
+
+Each type bundles a `Lattice` with its mutators m and optimal δ-mutators
+mᵟ(x) = Δ(m(x), x). States are plain jnp arrays (or tuples thereof), so they
+nest into pytrees, `lax.scan` carries, and pjit shardings without wrappers.
+
+Dense-universe adaptation (DESIGN.md §3): element/key/replica identifiers are
+static integer indices into a fixed universe.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import value_lattices as vl
+from repro.core.lattice import Lattice, MapLattice, product
+
+
+# ---------------------------------------------------------------------------
+# GCounter  (Figure 2a)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GCounter:
+    """Grow-only counter: I ↪ ℕ under pointwise max."""
+
+    num_replicas: int
+
+    @property
+    def lattice(self) -> Lattice:
+        return MapLattice(self.num_replicas, vl.max_int(), "gcounter").build()
+
+    def inc(self, p, i):
+        """m: p{i ↦ p(i)+1}"""
+        return p.at[i].add(1)
+
+    def inc_delta(self, p, i):
+        """mᵟ: {i ↦ p(i)+1} — a single irreducible (optimal)."""
+        d = jnp.zeros_like(p)
+        return d.at[i].set(p[i] + 1)
+
+    def value(self, p):
+        return jnp.sum(p, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# PNCounter  (product of two GCounters; Appendix B: A × B)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PNCounter:
+    num_replicas: int
+
+    @property
+    def lattice(self) -> Lattice:
+        g = MapLattice(self.num_replicas, vl.max_int(), "g").build()
+        return product("pncounter", (g, g))
+
+    def inc(self, s, i):
+        p, n = s
+        return (p.at[i].add(1), n)
+
+    def dec(self, s, i):
+        p, n = s
+        return (p, n.at[i].add(1))
+
+    def inc_delta(self, s, i):
+        p, n = s
+        d = jnp.zeros_like(p).at[i].set(p[i] + 1)
+        return (d, jnp.zeros_like(n))
+
+    def dec_delta(self, s, i):
+        p, n = s
+        d = jnp.zeros_like(n).at[i].set(n[i] + 1)
+        return (jnp.zeros_like(p), d)
+
+    def value(self, s):
+        p, n = s
+        return jnp.sum(p, axis=-1) - jnp.sum(n, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# GSet  (Figure 2b)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GSet:
+    """Grow-only set over a static universe, P(E) under union."""
+
+    universe: int
+
+    @property
+    def lattice(self) -> Lattice:
+        return MapLattice(self.universe, vl.or_bool(), "gset").build()
+
+    def add(self, s, e):
+        return s.at[e].set(True)
+
+    def add_delta(self, s, e):
+        """mᵟ: {e} if e ∉ s else ⊥ (the paper's *optimal* addᵟ)."""
+        d = jnp.zeros_like(s)
+        return d.at[e].set(jnp.logical_not(s[e]))
+
+    def add_mask(self, s, mask):
+        return jnp.logical_or(s, mask)
+
+    def add_mask_delta(self, s, mask):
+        return jnp.logical_and(mask, jnp.logical_not(s))
+
+    def value(self, s):
+        return s
+
+
+# ---------------------------------------------------------------------------
+# GMap (K% benchmark, Table I): keys ↪ max-versioned values.
+#
+# The paper's GMap micro-benchmark "changes the value of K/N% of keys" per
+# node per tick; each change inflates the per-key value lattice. We model the
+# per-key value as a version counter under max (a chain), which is exactly
+# what makes GCounter "a particular case of GMap with K=100".
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GMap:
+    num_keys: int
+
+    @property
+    def lattice(self) -> Lattice:
+        return MapLattice(self.num_keys, vl.max_int(), "gmap").build()
+
+    def bump(self, m, key_mask):
+        """m: inflate the value of every key in ``key_mask``."""
+        return m + key_mask.astype(m.dtype)
+
+    def bump_delta(self, m, key_mask):
+        """mᵟ: only the updated entries, at their new versions (optimal)."""
+        return jnp.where(key_mask, m + 1, jnp.zeros_like(m))
+
+
+# ---------------------------------------------------------------------------
+# LWWMap: keys ↪ lexicographic (timestamp, value) — Retwis walls/timelines.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LWWMap:
+    num_keys: int
+
+    @property
+    def lattice(self) -> Lattice:
+        return MapLattice(self.num_keys, vl.lex_pair(), "lwwmap").build()
+
+    def put(self, s, key, ts, val):
+        t, v = s
+        return (t.at[key].set(ts), v.at[key].set(val))
+
+    def put_delta(self, s, key, ts, val):
+        t, v = s
+        dt = jnp.zeros_like(t).at[key].set(ts)
+        dv = jnp.zeros_like(v).at[key].set(val)
+        return (dt, dv)
+
+
+# ---------------------------------------------------------------------------
+# LexCounter: I ↪ (ℕ ⊠ ℕ) — Cassandra-style counter (Appendix B: the
+# single-writer principle keeps the lex product distributive because the
+# first component is a chain and only the owner writes its own entry).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LexCounter:
+    num_replicas: int
+
+    @property
+    def lattice(self) -> Lattice:
+        return MapLattice(self.num_replicas, vl.lex_pair(), "lexcounter").build()
+
+    def set_value(self, s, i, val):
+        """Owner i sets its component to an arbitrary value, bumping the
+        version (the paper's 'inflate or change arbitrarily' usage)."""
+        t, v = s
+        return (t.at[i].add(1), v.at[i].set(val))
+
+    def set_value_delta(self, s, i, val):
+        t, v = s
+        dt = jnp.zeros_like(t).at[i].set(t[i] + 1)
+        dv = jnp.zeros_like(v).at[i].set(val)
+        return (dt, dv)
+
+    def value(self, s):
+        _, v = s
+        return jnp.sum(v, axis=-1)

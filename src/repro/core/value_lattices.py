@@ -1,0 +1,95 @@
+"""Per-slot value lattices.
+
+A *value lattice* defines the order over a single map entry (one "slot" of a
+fixed universe). Map-like CRDT states are arrays of value-lattice points; the
+join-irreducibles of the map state are exactly the single-slot states whose
+slot value is non-bottom (see ``lattice.MapLattice``).
+
+All operations are elementwise over arrays so they vectorize over both the
+universe axis and any leading batch axes (e.g. the node axis of a simulated
+cluster).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+Array = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ValueLattice:
+    """Elementwise lattice over array "points".
+
+    A point is either a single array or a tuple of arrays (struct-of-arrays,
+    e.g. lexicographic pairs). All callables are elementwise/broadcasting.
+    """
+
+    name: str
+    # bottom(shape) -> point
+    bottom: Callable[[tuple], Any]
+    # join(a, b) -> point
+    join: Callable[[Any, Any], Any]
+    # leq(a, b) -> bool array   (pointwise a ⊑ b)
+    leq: Callable[[Any, Any], Array]
+    # is_bottom(a) -> bool array
+    is_bottom: Callable[[Any], Array]
+    # number of arrays making up a point (1 for scalar lattices)
+    arity: int = 1
+
+
+def max_int(dtype=jnp.int32) -> ValueLattice:
+    """Natural numbers under max — GCounter entries, GMap versions."""
+    return ValueLattice(
+        name=f"max_{jnp.dtype(dtype).name}",
+        bottom=lambda shape: jnp.zeros(shape, dtype),
+        join=jnp.maximum,
+        leq=lambda a, b: a <= b,
+        is_bottom=lambda a: a == 0,
+    )
+
+
+def or_bool() -> ValueLattice:
+    """Booleans under disjunction — GSet membership flags."""
+    return ValueLattice(
+        name="or_bool",
+        bottom=lambda shape: jnp.zeros(shape, jnp.bool_),
+        join=jnp.logical_or,
+        leq=lambda a, b: jnp.logical_or(jnp.logical_not(a), b),
+        is_bottom=jnp.logical_not,
+    )
+
+
+def lex_pair(ts_dtype=jnp.int32, val_dtype=jnp.int32) -> ValueLattice:
+    """Lexicographic pair (version, value) — LWW registers / Cassandra-style
+    counters (single-writer principle: the version is a chain, so the lex
+    product stays distributive; see paper Appendix B, Table III)."""
+
+    def bottom(shape):
+        return (jnp.zeros(shape, ts_dtype), jnp.zeros(shape, val_dtype))
+
+    def join(a, b):
+        ta, va = a
+        tb, vb = b
+        take_a = ta > tb
+        eq = ta == tb
+        ts = jnp.maximum(ta, tb)
+        val = jnp.where(eq, jnp.maximum(va, vb), jnp.where(take_a, va, vb))
+        return (ts, val)
+
+    def leq(a, b):
+        ta, va = a
+        tb, vb = b
+        return (ta < tb) | ((ta == tb) & (va <= vb))
+
+    def is_bottom(a):
+        ta, va = a
+        return (ta == 0) & (va == 0)
+
+    return ValueLattice(
+        name="lex_pair", bottom=bottom, join=join, leq=leq,
+        is_bottom=is_bottom, arity=2,
+    )

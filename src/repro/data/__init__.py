@@ -1,0 +1,1 @@
+from repro.data.pipeline import DataConfig, ProgressCounter, ShardLedger, batch_for_step, synth_block

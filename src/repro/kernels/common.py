@@ -1,0 +1,53 @@
+"""Shared tiling helpers for the CRDT Pallas kernels.
+
+TPU adaptation (DESIGN.md §3): lattice states are dense arrays; the paper's
+hot operations (join, Δ-extraction, per-neighbor buffer folds) are
+elementwise selects/maxes plus small reductions — VPU work. We tile the
+(flattened) universe into (8k, 128m)-aligned 2D blocks so each block maps
+onto VPU sublanes×lanes and streams HBM→VMEM once.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Default VMEM tile: 512×1024 int32 = 2 MiB per operand — comfortably inside
+# the ~16 MiB/core VMEM budget with 2-3 operands + outputs double-buffered.
+DEFAULT_BLOCK = (512, 1024)
+LANE = 128
+SUBLANE = 8
+
+
+def interpret_default() -> bool:
+    """Run kernels in interpret mode off-TPU (this container is CPU-only)."""
+    return jax.default_backend() != "tpu"
+
+
+def pad_to_2d(x: jnp.ndarray, block=DEFAULT_BLOCK):
+    """Flatten trailing axes to 1D, pad, reshape to [M, N] tiles.
+
+    Returns (x2d, orig_shape, valid_len). Padding value 0 is ⊥ for every
+    value lattice we use (max over ℕ, or over bool, bit-or over packed words),
+    so padded slots never contribute to joins/sizes.
+    """
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    bm, bn = block
+    cols = bn
+    rows = -(-n // cols)
+    rows_pad = -(-rows // bm) * bm
+    total = rows_pad * cols
+    flat = jnp.pad(flat, (0, total - n))
+    return flat.reshape(rows_pad, cols), shape, n
+
+
+def unpad_from_2d(x2d: jnp.ndarray, shape, n):
+    return x2d.reshape(-1)[:n].reshape(shape)
+
+
+def grid_for(shape_2d, block=DEFAULT_BLOCK):
+    m, n = shape_2d
+    bm, bn = block
+    return (-(-m // bm), -(-n // bn))

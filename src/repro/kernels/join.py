@@ -1,0 +1,50 @@
+"""Tiled lattice join kernel: c = a ⊔ b.
+
+Kinds:
+* ``max``   — pointwise max (GCounter entries, GMap versions; OR on 0/1 ints)
+* ``bitor`` — bitwise or on uint32 words (bit-packed GSet, 8× denser wire/
+              memory format — beyond-paper optimization, DESIGN.md §9)
+
+One VMEM tile per operand per grid step; pure VPU elementwise, so the kernel
+is memory-bound by design — the roofline win over the naive jnp composition
+comes from fusing with Δ-extraction (see ``delta_extract.py``), this
+standalone join exists for buffer stores and as the simplest reference tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import DEFAULT_BLOCK, grid_for
+
+
+def _join_kernel(a_ref, b_ref, o_ref, *, kind: str):
+    a = a_ref[...]
+    b = b_ref[...]
+    if kind == "max":
+        o_ref[...] = jnp.maximum(a, b)
+    elif kind == "bitor":
+        o_ref[...] = jnp.bitwise_or(a, b)
+    else:
+        raise ValueError(kind)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "block", "interpret"))
+def join_2d(a, b, *, kind: str = "max", block=DEFAULT_BLOCK, interpret: bool = True):
+    """a, b: [M, N] (M % block_m == 0, N % block_n == 0) -> a ⊔ b."""
+    assert a.shape == b.shape and a.dtype == b.dtype
+    bm, bn = block
+    grid = grid_for(a.shape, block)
+    spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    return pl.pallas_call(
+        functools.partial(_join_kernel, kind=kind),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        interpret=interpret,
+    )(a, b)

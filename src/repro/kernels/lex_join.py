@@ -1,0 +1,64 @@
+"""Lexicographic-pair map join + Δ: LWWMap/LexCounter hot path.
+
+The Retwis store (paper §V-D) is maps of (timestamp, value) lex pairs; its
+join must couple the two component arrays (winner-takes-value), so it cannot
+be expressed as two independent elementwise joins. The kernel fuses:
+
+    t', v'  = (ta, va) ⊔ (tb, vb)        pointwise lex join
+    novel   = (tb, vb) ⋢ (ta, va)        per-slot Δ mask of b against a
+    count   = Σ novel
+
+reading the four operand arrays once.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import DEFAULT_BLOCK, grid_for
+
+
+def _lex_kernel(ta_ref, va_ref, tb_ref, vb_ref,
+                t_ref, v_ref, dt_ref, dv_ref, cnt_ref):
+    ta, va = ta_ref[...], va_ref[...]
+    tb, vb = tb_ref[...], vb_ref[...]
+    eq = ta == tb
+    a_wins = ta > tb
+    t_ref[...] = jnp.maximum(ta, tb)
+    v_ref[...] = jnp.where(eq, jnp.maximum(va, vb), jnp.where(a_wins, va, vb))
+    # Δ((tb,vb), (ta,va)): b's slots not ⊑ a and non-bottom.
+    leq_b_a = (tb < ta) | (eq & (vb <= va))
+    bot_b = (tb == 0) & (vb == 0)
+    novel = jnp.logical_not(leq_b_a) & jnp.logical_not(bot_b)
+    dt_ref[...] = jnp.where(novel, tb, jnp.zeros_like(tb))
+    dv_ref[...] = jnp.where(novel, vb, jnp.zeros_like(vb))
+    cnt_ref[0, 0] = jnp.sum(novel.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def lex_join_delta_2d(ta, va, tb, vb, *, block=DEFAULT_BLOCK, interpret: bool = True):
+    """All inputs [M, N] tile-aligned. Returns (t', v', dt, dv, count) where
+    (t', v') = a ⊔ b and (dt, dv) = Δ(b, a)."""
+    bm, bn = block
+    grid = grid_for(ta.shape, block)
+    spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    cnt_spec = pl.BlockSpec((1, 1), lambda i, j: (i, j))
+    t, v, dt, dv, cnt = pl.pallas_call(
+        _lex_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec, spec],
+        out_specs=[spec, spec, spec, spec, cnt_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(ta.shape, ta.dtype),
+            jax.ShapeDtypeStruct(va.shape, va.dtype),
+            jax.ShapeDtypeStruct(ta.shape, ta.dtype),
+            jax.ShapeDtypeStruct(va.shape, va.dtype),
+            jax.ShapeDtypeStruct(grid, jnp.int32),
+        ],
+        interpret=interpret,
+    )(ta, va, tb, vb)
+    return t, v, dt, dv, jnp.sum(cnt)

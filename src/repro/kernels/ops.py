@@ -1,0 +1,95 @@
+"""Public jit'd wrappers around the CRDT Pallas kernels.
+
+Handle arbitrary state shapes by flattening + ⊥-padding to tile multiples
+(⊥ = 0 for every supported value lattice, so padding is inert), dispatch to
+the tiled kernels, and unpad. ``interpret`` defaults to True off-TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.buffer_fold import FOLD_BLOCK, buffer_fold_2d
+from repro.kernels.common import (
+    DEFAULT_BLOCK,
+    interpret_default,
+    pad_to_2d,
+    unpad_from_2d,
+)
+from repro.kernels.delta_extract import delta_extract_2d
+from repro.kernels.join import join_2d
+from repro.kernels.lex_join import lex_join_delta_2d
+
+
+def join(a, b, *, kind: str = "max", block=DEFAULT_BLOCK, interpret=None):
+    """Lattice join a ⊔ b over arbitrary-shaped dense states."""
+    interpret = interpret_default() if interpret is None else interpret
+    a2, shape, n = pad_to_2d(a, block)
+    b2, _, _ = pad_to_2d(b, block)
+    out = join_2d(a2, b2, kind=kind, block=block, interpret=interpret)
+    return unpad_from_2d(out, shape, n)
+
+
+def delta_extract(d, x, *, kind: str = "max", block=DEFAULT_BLOCK, interpret=None):
+    """Fused RR step: returns (Δ(d,x), x ⊔ d, |⇓Δ|)."""
+    interpret = interpret_default() if interpret is None else interpret
+    d2, shape, n = pad_to_2d(d, block)
+    x2, _, _ = pad_to_2d(x, block)
+    s, xj, cnt = delta_extract_2d(d2, x2, kind=kind, block=block, interpret=interpret)
+    return unpad_from_2d(s, shape, n), unpad_from_2d(xj, shape, n), cnt
+
+
+def lex_join_delta(a, b, *, block=DEFAULT_BLOCK, interpret=None):
+    """Fused LWW-map step on lex-pair states a=(ta,va), b=(tb,vb):
+    returns (a ⊔ b, Δ(b, a), |⇓Δ|)."""
+    interpret = interpret_default() if interpret is None else interpret
+    ta, va = a
+    tb, vb = b
+    ta2, shape, n = pad_to_2d(ta, block)
+    va2, _, _ = pad_to_2d(va, block)
+    tb2, _, _ = pad_to_2d(tb, block)
+    vb2, _, _ = pad_to_2d(vb, block)
+    t, v, dt, dv, cnt = lex_join_delta_2d(
+        ta2, va2, tb2, vb2, block=block, interpret=interpret
+    )
+    unp = functools.partial(unpad_from_2d, shape=shape, n=n)
+    return ((unp(t), unp(v)), (unp(dt), unp(dv)), cnt)
+
+
+def buffer_fold(buf, *, kind: str = "max", block=FOLD_BLOCK, interpret=None):
+    """Per-neighbor BP sends from an origin-indexed buffer [K, ...U] ->
+    [K-1, ...U] leave-one-out joins."""
+    interpret = interpret_default() if interpret is None else interpret
+    k = buf.shape[0]
+    flat = buf.reshape(k, -1)
+    n = flat.shape[1]
+    bm, bn = block
+    cols = bn
+    rows = -(-n // cols)
+    rows_pad = -(-rows // bm) * bm
+    flat = jnp.pad(flat, ((0, 0), (0, rows_pad * cols - n)))
+    out = buffer_fold_2d(
+        flat.reshape(k, rows_pad, cols), kind=kind, block=block, interpret=interpret
+    )
+    return out.reshape(k - 1, -1)[:, :n].reshape((k - 1,) + buf.shape[1:])
+
+
+# -- bit-packed GSet helpers (beyond-paper wire/memory format) ---------------
+
+def pack_bits(mask: jnp.ndarray) -> jnp.ndarray:
+    """bool[..., U] -> uint32[..., ceil(U/32)] little-endian bit packing."""
+    u = mask.shape[-1]
+    pad = (-u) % 32
+    m = jnp.pad(mask, [(0, 0)] * (mask.ndim - 1) + [(0, pad)])
+    m = m.reshape(mask.shape[:-1] + (-1, 32)).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(m * weights, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(words: jnp.ndarray, universe: int) -> jnp.ndarray:
+    bits = (words[..., :, None] >> jnp.arange(32, dtype=jnp.uint32)) & jnp.uint32(1)
+    return bits.reshape(words.shape[:-1] + (-1,))[..., :universe].astype(jnp.bool_)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (correctness references).
+
+These are deliberately naive — multiple passes, materialized masks — and are
+what the tests `assert_allclose` each kernel against across shape/dtype
+sweeps (exact equality: all kernels are integer/boolean).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def join(a, b, kind: str = "max"):
+    if kind == "max":
+        return jnp.maximum(a, b)
+    if kind == "bitor":
+        return jnp.bitwise_or(a, b)
+    raise ValueError(kind)
+
+
+def delta_extract(d, x, kind: str = "max"):
+    if kind == "max":
+        novel = d > x
+        s = jnp.where(novel, d, jnp.zeros_like(d))
+        return s, jnp.maximum(x, d), jnp.sum(novel.astype(jnp.int32))
+    if kind == "bitor":
+        s = jnp.bitwise_and(d, jnp.bitwise_not(x))
+        cnt = jnp.sum(jax.lax.population_count(s).astype(jnp.int32))
+        return s, jnp.bitwise_or(x, d), cnt
+    raise ValueError(kind)
+
+
+def lex_join_delta(ta, va, tb, vb):
+    eq = ta == tb
+    a_wins = ta > tb
+    t = jnp.maximum(ta, tb)
+    v = jnp.where(eq, jnp.maximum(va, vb), jnp.where(a_wins, va, vb))
+    leq_b_a = (tb < ta) | (eq & (vb <= va))
+    bot_b = (tb == 0) & (vb == 0)
+    novel = ~leq_b_a & ~bot_b
+    dt = jnp.where(novel, tb, jnp.zeros_like(tb))
+    dv = jnp.where(novel, vb, jnp.zeros_like(vb))
+    return t, v, dt, dv, jnp.sum(novel.astype(jnp.int32))
+
+
+def buffer_fold(buf, kind: str = "max"):
+    """buf [K, ...] -> sends [K-1, ...]: sends[j] = ⊔_{o≠j} buf[o]."""
+    k = buf.shape[0]
+    outs = []
+    for j in range(k - 1):
+        acc = None
+        for o in range(k):
+            if o == j:
+                continue
+            acc = buf[o] if acc is None else join(acc, buf[o], kind)
+        outs.append(acc)
+    return jnp.stack(outs, axis=0)

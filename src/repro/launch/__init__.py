@@ -1,0 +1,6 @@
+"""Launchers: mesh construction, dry-run, roofline, train/serve drivers.
+
+NOTE: repro.launch.dryrun sets XLA_FLAGS at import — import it only in a
+fresh process (the CLI entry point or a subprocess test).
+"""
+from repro.launch.mesh import make_mesh, make_production_mesh

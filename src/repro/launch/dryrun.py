@@ -1,0 +1,382 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run driver (deliverable e).
+#
+# Lowers + compiles every (architecture × input shape × mesh) cell against
+# placeholder host devices — ShapeDtypeStruct inputs, no allocation — and
+# records memory_analysis / cost_analysis / collective stats for the
+# roofline (EXPERIMENTS.md §Dry-run, §Roofline).
+#
+# The XLA_FLAGS line above MUST run before any jax import (jax locks the
+# device count at first init). REPRO_DEVICE_COUNT overrides the placeholder
+# count for subprocess tests with small meshes.
+
+if os.environ.get("REPRO_DEVICE_COUNT"):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count="
+        + os.environ["REPRO_DEVICE_COUNT"]
+    )
+
+import argparse
+import json
+import math
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, input_specs, shape_applicable
+from repro.launch import hlo_analysis, hlo_cost, roofline
+from repro.launch.mesh import make_mesh, make_production_mesh
+from repro.models import transformer as TR
+from repro.models.params import tree_shapes
+from repro.optim.adamw import AdamW, AdamWState
+from repro.optim.schedule import cosine_with_warmup
+from repro.train import sharding as SH
+from repro.train import steps as ST
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+# Per-cell microbatch counts (memory-fit tuning; see EXPERIMENTS.md §Dry-run).
+MICROBATCHES = {
+    ("deepseek-coder-33b", "train_4k"): 4,
+    ("gemma2-27b", "train_4k"): 8,
+    ("qwen2.5-14b", "train_4k"): 4,
+    ("internvl2-26b", "train_4k"): 4,
+    ("mixtral-8x22b", "train_4k"): 16,
+    ("qwen3-moe-30b-a3b", "train_4k"): 8,
+    ("musicgen-large", "train_4k"): 2,
+    ("recurrentgemma-2b", "train_4k"): 2,
+}
+
+# Archs whose weights exceed the TP-only serving budget (16 chips × ~6 GB):
+# serve with FSDP×TP shardings instead (per-layer weight gathers).
+FSDP_SERVE_BYTES = 6e9 * 16
+
+
+def _serve_mode(cfg) -> str:
+    return "train" if cfg.param_count() * 2 > FSDP_SERVE_BYTES else "serve"
+
+
+# bf16 Adam moments (masters stay fp32) for the 100B+-scale cells — §Perf
+# iter 9; halves moment memory (mixtral: −3.3 GB/dev of opt state).
+MOMENTS_BF16 = {("mixtral-8x22b", "train_4k")}
+
+# Per-cell ModelConfig overrides from the §Perf hillclimb (EXPERIMENTS.md).
+CELL_OVERRIDES = {
+    # iter 4-6: 4k KV tiles (4× less online-softmax accumulator traffic) +
+    # 16 microbatches. SP is mesh-conditional (iter 9): single-pod keeps
+    # sequence-sharded carries to fit 16 GB (step term 187s); at ≥2 pods the
+    # batch shards 32-way and SP can be dropped for the faster 94s config.
+    ("mixtral-8x22b", "train_4k"): lambda mesh: {
+        "seq_shard_activations": mesh.devices.size < 512,
+        "attn_kv_chunk": 4096, "attn_q_chunk": 2048,
+    },
+    ("mixtral-8x22b", "prefill_32k"): {
+        "attn_kv_chunk": 4096, "attn_q_chunk": 2048,
+    },
+    # iter 7: 4k KV tiles — 4× less accumulator traffic (memory 89.6→29.1s)
+    # and less remat recompute; mb stays 4 (10.9 GB raw fit; mb2 variant
+    # hits 52.5s collective but 17.3 GB raw — see §Perf)
+    ("deepseek-coder-33b", "train_4k"): {
+        "attn_kv_chunk": 4096, "attn_q_chunk": 2048,
+    },
+    ("qwen3-moe-30b-a3b", "prefill_32k"): {
+        "attn_kv_chunk": 4096, "attn_q_chunk": 2048,
+    },
+    ("deepseek-coder-33b", "prefill_32k"): {
+        "attn_kv_chunk": 4096, "attn_q_chunk": 2048,
+    },
+}
+
+
+def _apply_overrides(cfg, arch, shape_name, mesh=None):
+    import dataclasses as _dc
+    ov = CELL_OVERRIDES.get((arch, shape_name))
+    if callable(ov):
+        ov = ov(mesh)
+    if ov:
+        cfg = _dc.replace(cfg, **ov)
+    return cfg
+
+
+def _named(tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+_F32_SHAPE_RE = re.compile(r"f32\[([\d,]+)\]")
+
+
+def _staged_f32_estimate(hlo: str, args_sds, mesh, in_sp) -> int:
+    """CPU-backend bf16→f32 staging estimate (see EXPERIMENTS.md §Dry-run).
+
+    The CPU compiler materializes f32 copies of bf16 tensors (no native
+    bf16 compute); a TPU build holds none of these. Estimate: the set of
+    distinct f32 buffer shapes in the compiled module that exactly match a
+    bf16 *argument* leaf's per-device shape, counted once each (the live
+    set typically holds one staging copy per operand)."""
+    # per-device shapes of bf16 args
+    bf16_shapes = set()
+    flat_args = jax.tree.leaves(args_sds)
+    flat_specs = jax.tree.leaves(in_sp, is_leaf=lambda x: isinstance(x, P))
+    for sds, spec in zip(flat_args, flat_specs):
+        if getattr(sds, "dtype", None) != jnp.bfloat16:
+            continue
+        dims = list(sds.shape)
+        if isinstance(spec, P):
+            for i, ax in enumerate(spec):
+                if ax is None or i >= len(dims):
+                    continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                size = 1
+                for a in axes:
+                    size *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+                dims[i] = max(dims[i] // size, 1)
+        bf16_shapes.add(tuple(dims))
+    total = 0
+    seen = set()
+    for m in _F32_SHAPE_RE.finditer(hlo):
+        dims = tuple(int(d) for d in m.group(1).split(","))
+        if dims in bf16_shapes and dims not in seen:
+            seen.add(dims)
+            n = 1
+            for d in dims:
+                n *= d
+            total += 4 * n
+    return total
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, microbatches=None):
+    """Returns (fn, args_sds, in_shardings, out_shardings, donate, meta)."""
+    cfg = _apply_overrides(get_config(arch), arch, shape_name, mesh)
+    shape = SHAPES[shape_name]
+    specs = input_specs(cfg, shape)
+    da = SH.data_axes_of(mesh)
+    hints = TR.ShardingHints(
+        data_axes=da, model_axis="model",
+        seq_shard=cfg.seq_shard_activations and shape.mode == "train",
+    )
+
+    if shape.mode == "train":
+        mb = microbatches or MICROBATCHES.get((arch, shape_name), 1)
+        mdt = (jnp.bfloat16 if (arch, shape_name) in MOMENTS_BF16
+               else jnp.float32)
+        optim = AdamW(lr=cosine_with_warmup(3e-4, 100, 10_000),
+                      moments_dtype=mdt)
+        defs = TR.param_defs(cfg)
+        p_sds = tree_shapes(defs)
+        p_sp = SH.param_specs(cfg, mesh, "train")
+        step_fn = ST.make_train_step(cfg, optim, microbatches=mb, hints=hints,
+                                     grad_specs=p_sp)
+        as_dt = lambda t, dt: jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, dt), t)
+        state_sds = ST.TrainState(
+            params=p_sds,
+            opt=AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                           master=as_dt(p_sds, jnp.float32),
+                           mu=as_dt(p_sds, mdt), nu=as_dt(p_sds, mdt)),
+        )
+        state_sp = ST.TrainState(
+            params=p_sp,
+            opt=AdamWState(step=P(), master=p_sp, mu=p_sp, nu=p_sp),
+        )
+        batch_sds = specs["batch"]
+        batch_sp = SH.batch_specs(cfg, mesh, batch_sds)
+        metrics_sp = {k: P() for k in
+                      ("ce", "aux", "tokens", "loss", "grad_norm", "lr")}
+        return (step_fn, (state_sds, batch_sds),
+                (state_sp, batch_sp), (state_sp, metrics_sp),
+                (0,), {"cfg": cfg, "shape": shape, "microbatches": mb})
+
+    defs = TR.param_defs(cfg)
+    p_sds = tree_shapes(defs)
+    p_sp = SH.param_specs(cfg, mesh, _serve_mode(cfg))
+    # padded vocabs slice logits to the true size -> not 16-divisible;
+    # replicate the (tiny) per-step logits instead
+    vocab_ax = "model" if cfg.padded_vocab == cfg.vocab_size else None
+
+    if shape.mode == "prefill":
+        fn = ST.make_prefill(cfg, hints=hints)
+        batch_sds = specs["batch"]
+        batch_sp = SH.batch_specs(cfg, mesh, batch_sds)
+        cache_sp = SH.cache_specs(cfg, mesh, seq_shard="model")
+        logits_sp = P(da, None, vocab_ax)
+        return (fn, (p_sds, batch_sds), (p_sp, batch_sp),
+                (logits_sp, cache_sp), (), {"cfg": cfg, "shape": shape})
+
+    # decode: flash-decoding layout — cache *sequence* shards over model
+    # (long_500k: over data+model; batch 1 cannot shard)
+    fn = ST.make_decode(cfg, hints=hints)
+    long_ctx = shape_name == "long_500k"
+    cache_sds = jax.eval_shape(
+        lambda: TR.init_cache(cfg, shape.global_batch, shape.seq_len)
+    )
+    cache_sp = SH.cache_specs(cfg, mesh,
+                              seq_shard="all" if long_ctx else "model")
+    batch_sds = specs["batch"]
+    batch_sp = SH.batch_specs(cfg, mesh, batch_sds,
+                              shard_batch=not long_ctx)
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    logits_sp = P(None if long_ctx else da, None, vocab_ax)
+    return (fn, (p_sds, cache_sds, batch_sds, pos_sds),
+            (p_sp, cache_sp, batch_sp, P()),
+            (logits_sp, cache_sp), (1,), {"cfg": cfg, "shape": shape})
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+             *, microbatches=None, save=True, verbose=True):
+    applicable, why = shape_applicable(arch, shape_name)
+    if not applicable:
+        result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                  "status": "skipped", "reason": why}
+        if save:
+            _save(result)
+        return result
+
+    t0 = time.time()
+    try:
+        fn, sds, in_sp, out_sp, donate, meta = build_cell(
+            arch, shape_name, mesh, microbatches=microbatches)
+        with mesh:
+            jitted = jax.jit(
+                fn,
+                in_shardings=_named(in_sp, mesh),
+                out_shardings=_named(out_sp, mesh),
+                donate_argnums=donate,
+            )
+            lowered = jitted.lower(*sds)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        chips = mesh.devices.size
+        coll = hlo_analysis.analyze_collectives(hlo, chips)
+        # loop-corrected cost model (cost_analysis counts while bodies once)
+        cost = hlo_cost.analyze(hlo, chips)
+        staged = _staged_f32_estimate(hlo, sds, mesh, in_sp)
+
+        cfg, shape = meta["cfg"], meta["shape"]
+        rl = roofline.Roofline(
+            arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+            hlo_flops_per_device=cost.flops,
+            hlo_bytes_per_device=cost.hbm_bytes,
+            collective_bytes_per_chip=cost.total_collective_chip_bytes,
+            model_flops=roofline.model_flops(cfg, shape),
+            memory_per_device=float(
+                ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+            ),
+        )
+        result = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "status": "ok",
+            "chips": chips,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "peak_gb_per_device": rl.memory_per_device / 2**30,
+                "fits_16gb": rl.memory_per_device < 16 * 2**30,
+                "staged_f32_gb_estimate": staged / 2**30,
+                "peak_gb_tpu_adjusted": max(
+                    rl.memory_per_device - staged,
+                    ma.argument_size_in_bytes) / 2**30,
+                "fits_16gb_tpu_adjusted": max(
+                    rl.memory_per_device - staged,
+                    ma.argument_size_in_bytes) < 16 * 2**30,
+            },
+            "cost_analysis_raw": {k: float(v) for k, v in ca.items()
+                                  if isinstance(v, (int, float)) and "{" not in k},
+            "hlo_cost": {
+                "flops": cost.flops,
+                "hbm_bytes": cost.hbm_bytes,
+                "collective_counts": cost.collective_counts,
+                "collective_chip_bytes": cost.collective_chip_bytes,
+                "trip_counts": cost.trip_counts,
+            },
+            "collectives_uncorrected": {
+                "counts": coll.counts,
+                "per_chip_bytes": coll.per_chip_bytes,
+                "result_bytes": coll.result_bytes,
+            },
+            "roofline": rl.row(),
+            "microbatches": meta.get("microbatches", 1),
+        }
+        if verbose:
+            print(f"[{arch} × {shape_name} × {mesh_name}] OK "
+                  f"compile={t_compile:.0f}s "
+                  f"mem={rl.memory_per_device/2**30:.2f}GiB/dev "
+                  f"flops/dev={rl.hlo_flops_per_device:.3e} "
+                  f"bottleneck={rl.bottleneck} "
+                  f"terms(c/m/n)=({rl.compute_s:.4f},{rl.memory_s:.4f},"
+                  f"{rl.collective_s:.4f})s useful={rl.useful_flops_ratio:.2f}")
+            print("  memory_analysis:", ma)
+    except Exception as e:  # noqa: BLE001 — a cell failure is a finding
+        result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                  "status": "error", "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-4000:]}
+        if verbose:
+            print(f"[{arch} × {shape_name} × {mesh_name}] FAILED: {e}")
+    if save:
+        _save(result)
+    return result
+
+
+def _save(result):
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    name = f"{result['arch']}__{result['shape']}__{result['mesh']}.json"
+    (RESULTS_DIR / name).write_text(json.dumps(result, indent=2))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="single", choices=("single", "multi", "both"))
+    ap.add_argument("--mesh-shape", default=None,
+                    help="override, e.g. '4,4' or '2,4,4' (testing)")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--no-save", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = []
+    if args.mesh_shape:
+        dims = tuple(int(x) for x in args.mesh_shape.split(","))
+        axes = ("pod", "data", "model")[-len(dims):]
+        meshes.append((make_mesh(dims, axes), f"mesh{args.mesh_shape}"))
+    else:
+        if args.mesh in ("single", "both"):
+            meshes.append((make_production_mesh(multi_pod=False), "pod16x16"))
+        if args.mesh in ("multi", "both"):
+            meshes.append((make_production_mesh(multi_pod=True), "pod2x16x16"))
+
+    n_ok = n_skip = n_fail = 0
+    for mesh, mesh_name in meshes:
+        for arch in archs:
+            for shape in shapes:
+                r = run_cell(arch, shape, mesh, mesh_name,
+                             microbatches=args.microbatches,
+                             save=not args.no_save)
+                n_ok += r["status"] == "ok"
+                n_skip += r["status"] == "skipped"
+                n_fail += r["status"] == "error"
+    print(f"dry-run complete: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,117 @@
+"""Compiled-HLO analysis: collective bytes for the roofline collective term.
+
+``compiled.as_text()`` is the SPMD-partitioned module — shapes are
+PER-DEVICE. For every collective op we parse the result shape(s) and the
+replica-group size, then model per-chip link traffic with ring formulas:
+
+    all-reduce       2·X·(g−1)/g      (reduce-scatter + all-gather halves)
+    all-gather       X·(g−1)/g        (X = full gathered output)
+    reduce-scatter   X·(g−1)/g        (X = full input = g × output)
+    all-to-all       X·(g−1)/g
+    collective-permute X
+
+The roofline collective term is Σ per-chip bytes / link bandwidth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|c\d+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_GROUPS_ITOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    # per-kind: (op count, per-chip modeled bytes, raw result bytes)
+    counts: Dict[str, int]
+    per_chip_bytes: Dict[str, float]
+    result_bytes: Dict[str, float]
+
+    @property
+    def total_per_chip_bytes(self) -> float:
+        return sum(self.per_chip_bytes.values())
+
+    @property
+    def total_ops(self) -> int:
+        return sum(self.counts.values())
+
+
+def _shapes_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_ITOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("},")[0].strip("{}")
+        if first:
+            return len(first.split(","))
+    return default
+
+
+def analyze_collectives(hlo_text: str, num_devices: int) -> CollectiveStats:
+    counts = {k: 0 for k in COLLECTIVE_KINDS}
+    chip_bytes = {k: 0.0 for k in COLLECTIVE_KINDS}
+    res_bytes = {k: 0.0 for k in COLLECTIVE_KINDS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # match " = <shape> <kind>(" — result declaration lines
+        m = re.search(r"=\s+((?:\([^)]*\))|(?:[^\s]+))\s+([a-z0-9-]+)\(", stripped)
+        if not m:
+            continue
+        kind = m.group(2)
+        base = None
+        for k in COLLECTIVE_KINDS:
+            if kind == k or kind.startswith(k + "-"):  # e.g. all-gather-start
+                base = k
+                break
+        if base is None or kind.endswith("-done"):
+            continue
+        result_text = m.group(1)
+        x = _shapes_bytes(result_text)
+        if x == 0:
+            continue
+        g = _group_size(stripped, num_devices)
+        if g <= 1:
+            per_chip = 0.0
+        elif base == "all-reduce":
+            per_chip = 2.0 * x * (g - 1) / g
+        elif base == "all-gather":
+            per_chip = x * (g - 1) / g
+        elif base == "reduce-scatter":
+            per_chip = x * (g - 1)          # x = per-device OUTPUT shard
+        elif base == "all-to-all":
+            per_chip = x * (g - 1) / g
+        else:  # collective-permute
+            per_chip = float(x)
+        counts[base] += 1
+        chip_bytes[base] += per_chip
+        res_bytes[base] += float(x)
+    return CollectiveStats(counts=counts, per_chip_bytes=chip_bytes,
+                           result_bytes=res_bytes)

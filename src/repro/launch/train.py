@@ -1,0 +1,100 @@
+"""Single-process training driver (CPU-runnable; pjit-ready).
+
+Used by the end-to-end example (examples/train_100m.py) and the integration
+tests: builds a model from a ModelConfig, a deterministic data pipeline, the
+sharded AdamW step, optional mesh (1-device mesh on CPU), CRDT-backed
+checkpoint registry + progress counters, and runs N steps with periodic
+checkpointing and restart support.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer, CheckpointRegistry
+from repro.data import DataConfig, ProgressCounter, ShardLedger, batch_for_step
+from repro.models import transformer as TR
+from repro.models.config import ModelConfig
+from repro.models.params import init_tree
+from repro.optim import AdamW, cosine_with_warmup
+from repro.train import steps as ST
+
+
+@dataclasses.dataclass
+class TrainRun:
+    cfg: ModelConfig
+    steps: int = 100
+    global_batch: int = 8
+    seq_len: int = 256
+    lr: float = 3e-4
+    warmup: int = 20
+    microbatches: int = 1
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 50
+    seed: int = 0
+    log_every: int = 10
+
+
+def run(tr: TrainRun, resume: bool = True, node_id: int = 0,
+        num_nodes: int = 1, on_step=None):
+    cfg = tr.cfg
+    optim = AdamW(lr=cosine_with_warmup(tr.lr, tr.warmup, tr.steps))
+    params = init_tree(TR.param_defs(cfg), seed=tr.seed)
+    state = ST.init_train_state(cfg, optim, params)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=tr.seq_len,
+                      global_batch=tr.global_batch, seed=tr.seed)
+
+    ckpt = registry = None
+    start_step = 0
+    if tr.checkpoint_dir:
+        ckpt = Checkpointer(tr.checkpoint_dir)
+        registry = CheckpointRegistry()
+        if resume:
+            avail = ckpt.available_steps()
+            if avail:
+                start_step = avail[-1]
+                state = ckpt.restore(start_step, state)
+                registry.announce(start_step)
+
+    progress = ProgressCounter(num_nodes=max(num_nodes, 1), node_id=node_id)
+    ledger = ShardLedger(num_shards=dcfg.num_shards)
+    shard = ledger.next_unclaimed() or 0
+    ledger.claim(shard)
+
+    step_fn = jax.jit(
+        ST.make_train_step(cfg, optim, microbatches=tr.microbatches),
+        donate_argnums=(0,),
+    )
+
+    history = []
+    t0 = time.time()
+    for step in range(start_step, tr.steps):
+        batch = batch_for_step(
+            dcfg, shard, step, frontend=cfg.frontend,
+            d_model=cfg.d_model, frontend_len=cfg.frontend_len,
+        )
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        history.append(loss)
+        progress.add(tr.global_batch * tr.seq_len)
+        if on_step is not None:
+            on_step(step, metrics, progress)
+        if tr.log_every and (step + 1) % tr.log_every == 0:
+            dt = time.time() - t0
+            print(f"step {step+1:5d} loss {loss:8.4f} "
+                  f"grad_norm {float(metrics['grad_norm']):7.3f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"tok/s {progress.total/max(dt,1e-9):,.0f}")
+        if ckpt is not None and (step + 1) % tr.checkpoint_every == 0:
+            digest = ckpt.save(step + 1, state)
+            registry.announce(step + 1)
+            print(f"  checkpoint @ {step+1} digest={digest}")
+
+    return state, history, progress

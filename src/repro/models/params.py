@@ -1,0 +1,108 @@
+"""Parameter trees with logical sharding axes.
+
+Params are nested dicts of ``ParamDef`` (shape, logical axes, init) that
+materialize either as real arrays (smoke tests, the 100M example) or as
+``jax.ShapeDtypeStruct`` stand-ins (the multi-pod dry-run never allocates).
+
+Logical axes translate to mesh ``PartitionSpec`` via a rules table
+(MaxText-style). Training rules implement ZeRO-3/FSDP×TP: weights shard over
+both the data axes (fsdp) and the model axis (tp); serving rules shard over
+model only (weights replicated across data for low-latency decode).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "fan_in"       # "fan_in" | "zeros" | "ones" | "normal" | "rnn_lambda"
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+# logical axis -> mesh axes, per execution mode
+TRAIN_RULES = {
+    "fsdp": ("pod", "data"),   # weight shards over data axes (ZeRO-3)
+    "tp": ("model",),          # tensor-parallel dim
+    "stack": None,             # scan-stacked layer-group dim
+    "expert": None,            # expert dim (baseline: FSDP'd via fsdp dim)
+    None: None,
+}
+SERVE_RULES = {
+    "fsdp": None,
+    "tp": ("model",),
+    "stack": None,
+    "expert": None,
+    None: None,
+}
+
+
+def logical_to_spec(logical, rules, mesh_axes) -> P:
+    out = []
+    for ax in logical:
+        m = rules.get(ax, None)
+        if m is None:
+            out.append(None)
+        else:
+            present = tuple(a for a in m if a in mesh_axes)
+            out.append(present if len(present) > 1 else (present[0] if present else None))
+    return P(*out)
+
+
+def tree_specs(defs, rules, mesh_axes):
+    return jax.tree.map(
+        lambda d: logical_to_spec(d.logical, rules, mesh_axes),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def tree_shapes(defs):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def _init_one(d: ParamDef, key) -> jnp.ndarray:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "rnn_lambda":
+        # RG-LRU Λ init so that a = σ(Λ)^c lands in [0.9, 0.999]
+        u = jax.random.uniform(key, d.shape, jnp.float32, 0.9, 0.999)
+        lam = jnp.log(u ** (1.0 / 8.0) / (1 - u ** (1.0 / 8.0)))
+        return lam.astype(d.dtype)
+    if d.init == "embed":
+        # embeddings: std d^-1/2 keeps tied-head logits O(1)
+        scale = d.shape[-1] ** -0.5
+        return (jax.random.normal(key, d.shape, jnp.float32) * scale).astype(d.dtype)
+    fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+    scale = 1.0 if d.init == "normal" else fan_in ** -0.5
+    return (jax.random.normal(key, d.shape, jnp.float32) * scale).astype(d.dtype)
+
+
+def init_tree(defs, seed: int = 0):
+    """Materialize a ParamDef tree deterministically (path-keyed folds)."""
+    root = jax.random.PRNGKey(seed)
+
+    def init_with_path(path, d):
+        h = hash(jax.tree_util.keystr(path)) % (2 ** 31 - 1)
+        return _init_one(d, jax.random.fold_in(root, h))
+
+    return jax.tree_util.tree_map_with_path(
+        init_with_path, defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )

@@ -1,0 +1,540 @@
+"""Composable decoder-only stack covering all 10 assigned architectures.
+
+Structure: embeddings → repeat(pattern blocks, scanned over stacked groups)
+→ tail blocks → final norm → (tied/untied) LM head. Block kinds:
+
+* ``global``/``local`` — GQA attention (RoPE/sinusoidal, qk-norm, QKV bias,
+  logit softcap, sliding window) + gated MLP or MoE
+* ``rec``   — RG-LRU recurrent mixer + gated MLP (RecurrentGemma)
+* ``rwkv``  — RWKV-6 time-mix + channel-mix
+
+Execution modes: ``train``/``prefill`` (full sequences, chunked attention,
+optionally building a KV cache) and ``decode`` (single token against a
+full or ring cache / recurrent state).
+
+The layer stack is applied as ``lax.scan`` over pattern groups with stacked
+weights — compile time scales with the pattern, not the depth — wrapped in
+``jax.checkpoint`` for training (policy from config). Saved inter-block
+carries can be sequence-sharded over the model axis (Megatron-SP style,
+``cfg.seq_shard_activations``) which is what lets 62-layer × 4k×16-per-pod
+activations fit v5e HBM (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rglru as R
+from repro.models import rwkv as W
+from repro.models.config import ModelConfig
+from repro.models.params import ParamDef
+
+POS_SENTINEL = 2 ** 30
+
+
+# ---------------------------------------------------------------------------
+# Sharding hints (activation constraints; no-ops without a mesh)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardingHints:
+    """Activation sharding constraints applied inside the jitted step."""
+    data_axes: Any = None      # mesh axes for the batch dim, e.g. ("pod","data")
+    model_axis: Any = None     # mesh axis for tp, e.g. "model"
+    seq_shard: bool = False    # shard saved residual carries over seq
+
+    def _wsc(self, x, spec):
+        if self.data_axes is None and self.model_axis is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, spec)
+
+    def residual(self, x):
+        """Inter-block residual [B, S, d]."""
+        seq = self.model_axis if self.seq_shard else None
+        return self._wsc(x, P(self.data_axes, seq, None))
+
+    def batch_only(self, x):
+        nd = x.ndim
+        return self._wsc(x, P(*([self.data_axes] + [None] * (nd - 1))))
+
+
+NO_HINTS = ShardingHints()
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+def _attn_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "ln": ParamDef((d,), (None,), "zeros"),
+        "wq": ParamDef((d, h * hd), ("fsdp", "tp")),
+        "wk": ParamDef((d, kv * hd), ("fsdp", "tp")),
+        "wv": ParamDef((d, kv * hd), ("fsdp", "tp")),
+        "wo": ParamDef((h * hd, d), ("tp", "fsdp")),
+    }
+    if cfg.qkv_bias:
+        p.update(
+            bq=ParamDef((h * hd,), ("tp",), "zeros"),
+            bk=ParamDef((kv * hd,), ("tp",), "zeros"),
+            bv=ParamDef((kv * hd,), ("tp",), "zeros"),
+        )
+    if cfg.qk_norm:
+        p.update(
+            q_norm=ParamDef((hd,), (None,), "zeros"),
+            k_norm=ParamDef((hd,), (None,), "zeros"),
+        )
+    if cfg.post_norms:
+        p["post_ln"] = ParamDef((d,), (None,), "zeros")
+    return p
+
+
+def _mlp_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, f = cfg.d_model, cfg.d_ff
+    p = {"ln2": ParamDef((d,), (None,), "zeros")}
+    if cfg.moe is not None:
+        e, fe = cfg.moe.num_experts, cfg.moe.d_ff_expert
+        p.update(
+            router=ParamDef((d, e), ("fsdp", None)),
+            moe_wg=ParamDef((e, d, fe), ("expert", "fsdp", "tp")),
+            moe_wu=ParamDef((e, d, fe), ("expert", "fsdp", "tp")),
+            moe_wd=ParamDef((e, fe, d), ("expert", "tp", "fsdp")),
+        )
+    else:
+        p.update(
+            wg=ParamDef((d, f), ("fsdp", "tp")),
+            wu=ParamDef((d, f), ("fsdp", "tp")),
+            wd=ParamDef((f, d), ("tp", "fsdp")),
+        )
+    if cfg.post_norms:
+        p["post_ln2"] = ParamDef((d,), (None,), "zeros")
+    return p
+
+
+def _rec_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, r = cfg.d_model, cfg.rnn_width
+    h = cfg.num_heads
+    blk = r // h
+    return {
+        "ln": ParamDef((d,), (None,), "zeros"),
+        "w_x": ParamDef((d, r), ("fsdp", "tp")),
+        "w_g": ParamDef((d, r), ("fsdp", "tp")),
+        "conv_w": ParamDef((cfg.conv_width, r), (None, "tp")),
+        # block-diag gates replicate: head count (10) won't divide TP=16 and
+        # jit *argument* shardings must divide evenly (1.3 MB each — cheap)
+        "w_i": ParamDef((h, blk, blk), (None, None, None)),
+        "w_a": ParamDef((h, blk, blk), (None, None, None)),
+        "b_i": ParamDef((r,), ("tp",), "zeros"),
+        "b_a": ParamDef((r,), ("tp",), "zeros"),
+        "lam": ParamDef((r,), ("tp",), "rnn_lambda"),
+        "w_o": ParamDef((r, d), ("tp", "fsdp")),
+    }
+
+
+def _rwkv_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, f = cfg.d_model, cfg.d_ff
+    hk = cfg.rwkv_head_dim
+    h = d // hk
+    lora = 64
+    p = {
+        "ln": ParamDef((d,), (None,), "zeros"),
+        "ln2": ParamDef((d,), (None,), "zeros"),
+        "u": ParamDef((h, hk), ("tp", None), "zeros"),
+        "w0": ParamDef((d,), ("tp",), "zeros"),
+        "w_lora_a": ParamDef((d, lora), ("fsdp", None)),
+        "w_lora_b": ParamDef((lora, d), (None, "tp")),
+        "cm_w_r": ParamDef((d, d), ("fsdp", None)),
+        "cm_w_k": ParamDef((d, f), ("fsdp", "tp")),
+        "cm_w_v": ParamDef((f, d), ("tp", "fsdp")),
+    }
+    for n in ("mu_r", "mu_k", "mu_v", "mu_w", "mu_g", "cm_mu_r", "cm_mu_k"):
+        p[n] = ParamDef((d,), (None,), "zeros")
+    for n in ("w_r", "w_k", "w_v", "w_g"):
+        p[n] = ParamDef((d, d), ("fsdp", "tp"))
+    p["w_o"] = ParamDef((d, d), ("tp", "fsdp"))
+    return p
+
+
+def _layer_defs(cfg: ModelConfig, kind: str) -> Dict[str, ParamDef]:
+    if kind in ("global", "local"):
+        return {**_attn_defs(cfg), **_mlp_defs(cfg)}
+    if kind == "rec":
+        return {**_rec_defs(cfg), **_mlp_defs(cfg)}
+    if kind == "rwkv":
+        return _rwkv_defs(cfg)
+    raise ValueError(kind)
+
+
+def _stack_defs(defs: Dict[str, ParamDef], n: int) -> Dict[str, ParamDef]:
+    return {
+        k: ParamDef((n,) + d.shape, ("stack",) + d.logical, d.init, d.dtype)
+        for k, d in defs.items()
+    }
+
+
+def param_defs(cfg: ModelConfig):
+    """Full ParamDef tree for a config."""
+    d, v = cfg.d_model, cfg.padded_vocab
+    tree: Dict[str, Any] = {
+        "embed": ParamDef((v, d), ("tp", "fsdp"), "embed"),
+        "final_norm": ParamDef((d,), (None,), "zeros"),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = ParamDef((d, v), ("fsdp", "tp"))
+    g = cfg.num_groups
+    tree["blocks"] = [
+        _stack_defs(_layer_defs(cfg, kind), g) for kind in cfg.pattern
+    ]
+    tree["tail"] = [_layer_defs(cfg, kind) for kind in cfg.tail_pattern]
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def _cache_len(cfg: ModelConfig, kind: str, seq_len: int) -> int:
+    if kind == "local":
+        return min(cfg.window, seq_len)
+    return seq_len
+
+
+def _layer_cache(cfg: ModelConfig, kind: str, b: int, seq_len: int,
+                 stack: Optional[int]):
+    pre = (stack,) if stack is not None else ()
+
+    def z(shape, dtype):
+        return jnp.zeros(pre + shape, dtype)
+
+    if kind in ("global", "local"):
+        s = _cache_len(cfg, kind, seq_len)
+        kvh, hd = cfg.num_kv_heads, cfg.head_dim
+        return {
+            "k": z((b, s, kvh, hd), jnp.bfloat16),
+            "v": z((b, s, kvh, hd), jnp.bfloat16),
+            "kpos": jnp.full(pre + (b, s), POS_SENTINEL, jnp.int32),
+        }
+    if kind == "rec":
+        r = cfg.rnn_width
+        return {
+            "h": z((b, r), jnp.float32),
+            "conv": z((b, cfg.conv_width - 1, r), jnp.bfloat16),
+        }
+    if kind == "rwkv":
+        hk = cfg.rwkv_head_dim
+        h = cfg.d_model // hk
+        return {
+            "s": z((b, h, hk, hk), jnp.float32),
+            "last_tm": z((b, cfg.d_model), jnp.bfloat16),
+            "last_cm": z((b, cfg.d_model), jnp.bfloat16),
+        }
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    return {
+        "blocks": [
+            _layer_cache(cfg, kind, batch, seq_len, cfg.num_groups)
+            for kind in cfg.pattern
+        ],
+        "tail": [
+            _layer_cache(cfg, kind, batch, seq_len, None)
+            for kind in cfg.tail_pattern
+        ],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+def _project_qkv(cfg: ModelConfig, p, x):
+    b, t, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("btd,de->bte", x, p["wq"])
+    k = jnp.einsum("btd,de->bte", x, p["wk"])
+    v = jnp.einsum("btd,de->bte", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(b, t, h, hd)
+    k = k.reshape(b, t, kv, hd)
+    v = v.reshape(b, t, kv, hd)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = L.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _attn_scale(cfg: ModelConfig) -> float:
+    if cfg.name.startswith("gemma2"):
+        return (cfg.d_model / cfg.num_heads) ** -0.5
+    return cfg.head_dim ** -0.5
+
+
+def _apply_attn(cfg, p, x, positions, kind, mode, cache, pos, hints):
+    """Attention mixer. Returns (out, new_cache)."""
+    window = cfg.window if kind == "local" else None
+    scale = _attn_scale(cfg)
+    if mode == "decode":
+        q, k, v = _project_qkv(cfg, p, x)                    # t == 1
+        if cfg.pos == "rope":
+            pos_arr = jnp.reshape(pos, (1,))
+            q = L.rotary(q, pos_arr, cfg.rope_theta)
+            k = L.rotary(k, pos_arr, cfg.rope_theta)
+        s = cache["k"].shape[1]
+        slot = (pos % s) if window is not None else jnp.minimum(pos, s - 1)
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+        kp = jax.lax.dynamic_update_slice_in_dim(
+            cache["kpos"], jnp.full((x.shape[0], 1), pos, jnp.int32), slot, axis=1
+        )
+        out = L.decode_attention(
+            q, ck, cv, k_positions=kp, q_position=pos, scale=scale,
+            window=window, softcap=cfg.attn_softcap,
+        )
+        new_cache = {"k": ck, "v": cv, "kpos": kp}
+    else:
+        q, k, v = _project_qkv(cfg, p, x)
+        if cfg.pos == "rope":
+            q = L.rotary(q, positions, cfg.rope_theta)
+            k = L.rotary(k, positions, cfg.rope_theta)
+        out = L.chunked_attention(
+            q, k, v, q_positions=positions, k_positions=positions,
+            scale=scale, window=window, softcap=cfg.attn_softcap,
+            q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
+        )
+        new_cache = None
+        if cache is not None:                                # prefill
+            s = cache["k"].shape[1]
+            tq = k.shape[1]
+            if s <= tq:
+                # keep the last s positions (ring/window caches)
+                kk, vv = k[:, -s:], v[:, -s:]
+                kp = jnp.broadcast_to(positions[-s:][None],
+                                      cache["kpos"].shape)
+            else:
+                # cache longer than the prompt: fill [0:tq], sentinel rest
+                pad = s - tq
+                kk = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                vv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                kp = jnp.broadcast_to(
+                    jnp.pad(positions[:tq], (0, pad),
+                            constant_values=POS_SENTINEL)[None],
+                    cache["kpos"].shape)
+            new_cache = {
+                "k": kk.astype(cache["k"].dtype),
+                "v": vv.astype(cache["v"].dtype),
+                "kpos": kp.astype(jnp.int32),
+            }
+    out = jnp.einsum("bte,ed->btd", out.reshape(out.shape[0], out.shape[1], -1),
+                     p["wo"])
+    return out, new_cache
+
+
+def _apply_ffn(cfg, p, x, hints):
+    """Gated MLP or MoE. Returns (out, aux_loss)."""
+    if cfg.moe is not None:
+        out, mm = M.moe_ffn(cfg.moe, x, p["router"], p["moe_wg"],
+                            p["moe_wu"], p["moe_wd"], hints=hints)
+        return out, mm.aux_loss
+    return L.mlp(x, p["wg"], p["wu"], p["wd"], cfg.act), jnp.zeros((), jnp.float32)
+
+
+def _apply_layer(cfg, p, x, positions, kind, mode, cache, pos, hints):
+    """Residual block. Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "rwkv":
+        h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+        if mode == "decode":
+            st = W.RwkvState(s=cache["s"], last_tm=cache["last_tm"],
+                             last_cm=cache["last_cm"])
+        else:
+            st = None
+        tm_out, s_fin, last_tm = W.time_mix(p, h, cfg.rwkv_head_dim, st,
+                                            chunk=cfg.rwkv_chunk)
+        x = x + tm_out
+        h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        cm_out, last_cm = W.channel_mix(p, h2, st)
+        x = x + cm_out
+        new_cache = None
+        if cache is not None:
+            new_cache = {"s": s_fin, "last_tm": last_tm.astype(jnp.bfloat16),
+                         "last_cm": last_cm.astype(jnp.bfloat16)}
+        return hints.residual(x), new_cache, aux
+
+    # attention / recurrent mixer + FFN
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    if kind == "rec":
+        if mode == "decode":
+            st = R.RecState(h=cache["h"], conv=cache["conv"])
+            mix, new_st = R.rglru_step(p, h, st)
+        else:
+            st = None
+            mix, new_st = R.rglru_block(p, h, st)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"h": new_st.h, "conv": new_st.conv.astype(jnp.bfloat16)}
+    else:
+        mix, new_cache = _apply_attn(cfg, p, x=h, positions=positions,
+                                     kind=kind, mode=mode, cache=cache,
+                                     pos=pos, hints=hints)
+    if cfg.post_norms:
+        mix = L.rms_norm(mix, p["post_ln"], cfg.norm_eps)
+    x = x + mix
+
+    h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    ffn, aux = _apply_ffn(cfg, p, h2, hints)
+    if cfg.post_norms:
+        ffn = L.rms_norm(ffn, p["post_ln2"], cfg.norm_eps)
+    x = x + ffn
+    return hints.residual(x), new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Stack application
+# ---------------------------------------------------------------------------
+
+def _remat_policy(cfg: ModelConfig):
+    if cfg.remat == "none":
+        return None
+    if cfg.remat == "dots":
+        return jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def apply_stack(cfg: ModelConfig, params, x, positions, *, mode: str,
+                cache=None, pos=None, hints: ShardingHints = NO_HINTS):
+    """Apply all layers. Returns (x, new_cache, aux_total)."""
+    use_cache = cache is not None
+
+    def group_body(x, group_inputs):
+        if use_cache:
+            gp, gc = group_inputs
+        else:
+            (gp,) = group_inputs
+            gc = None
+        aux = jnp.zeros((), jnp.float32)
+        new_gc = []
+        for i, kind in enumerate(cfg.pattern):
+            c_i = gc[i] if use_cache else None
+            x, nc, a = _apply_layer(cfg, gp[i], x, positions, kind, mode,
+                                    c_i, pos, hints)
+            aux = aux + a
+            if use_cache:
+                new_gc.append(nc)
+        ys = (tuple(new_gc), aux) if use_cache else aux
+        return x, ys
+
+    body = group_body
+    if mode == "train" and cfg.remat != "none":
+        body = jax.checkpoint(group_body, policy=_remat_policy(cfg),
+                              prevent_cse=False)
+
+    gp_stack = tuple(params["blocks"])
+    xs = (gp_stack, tuple(cache["blocks"])) if use_cache else (gp_stack,)
+    if cfg.num_groups > 0:
+        x, ys = jax.lax.scan(body, x, xs)
+        if use_cache:
+            new_blocks, auxs = ys
+        else:
+            new_blocks, auxs = None, ys
+        aux_total = jnp.sum(auxs)
+    else:
+        new_blocks, aux_total = None, jnp.zeros((), jnp.float32)
+
+    new_tail = []
+    for i, kind in enumerate(cfg.tail_pattern):
+        c_i = cache["tail"][i] if use_cache else None
+        x, nc, a = _apply_layer(cfg, params["tail"][i], x, positions, kind,
+                                mode, c_i, pos, hints)
+        aux_total = aux_total + a
+        new_tail.append(nc)
+
+    new_cache = None
+    if use_cache:
+        new_cache = {"blocks": list(new_blocks) if new_blocks is not None else [],
+                     "tail": new_tail}
+    return x, new_cache, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Embeddings & heads
+# ---------------------------------------------------------------------------
+
+def embed(cfg: ModelConfig, params, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def build_inputs(cfg: ModelConfig, params, batch):
+    """Assemble input embeddings from tokens and/or stub-frontend embeds."""
+    if cfg.frontend is None:
+        x = embed(cfg, params, batch["tokens"])
+    elif cfg.frontend == "audio":
+        # stub: EnCodec frame embeddings provided directly
+        x = batch["embeds"].astype(params["embed"].dtype)
+    elif cfg.frontend == "vision":
+        img = batch["embeds"].astype(params["embed"].dtype)   # [B, F, d]
+        txt = embed(cfg, params, batch["tokens"])             # [B, S-F, d]
+        x = jnp.concatenate([img, txt], axis=1)
+    else:
+        raise ValueError(cfg.frontend)
+    if cfg.pos == "sinusoidal":
+        s = x.shape[1]
+        x = x + L.sinusoidal(jnp.arange(s), cfg.d_model)[None].astype(x.dtype)
+    return x
+
+
+def lm_head(cfg: ModelConfig, params, x):
+    """x: [B, T, d] -> logits [B, T, V] (callers chunk T)."""
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("btd,vd->btv", x, params["embed"])
+    else:
+        logits = jnp.einsum("btd,dv->btv", x, params["lm_head"])
+    if cfg.padded_vocab != cfg.vocab_size:
+        logits = logits[..., : cfg.vocab_size]
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(
+            logits.astype(jnp.float32) / cfg.final_softcap
+        ).astype(logits.dtype)
+    return logits
+
+
+def forward(cfg: ModelConfig, params, batch, *, mode: str = "train",
+            cache=None, pos=None, hints: ShardingHints = NO_HINTS):
+    """Full forward. train: returns (features, aux). prefill: (features,
+    cache, aux). decode: (logits, cache)."""
+    if mode == "decode":
+        x = (embed(cfg, params, batch["tokens"]) if cfg.frontend != "audio"
+             else batch["embeds"].astype(jnp.bfloat16))
+        if cfg.pos == "sinusoidal":
+            x = x + L.sinusoidal(jnp.reshape(pos, (1,)), cfg.d_model)[None].astype(x.dtype)
+        if cfg.scale_embeddings and cfg.frontend is None:
+            pass  # scaling already applied in embed()
+        x, new_cache, _ = apply_stack(cfg, params, x, None, mode="decode",
+                                      cache=cache, pos=pos, hints=hints)
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return lm_head(cfg, params, x), new_cache
+
+    x = build_inputs(cfg, params, batch)
+    x = hints.residual(x)
+    positions = jnp.arange(x.shape[1])
+    x, new_cache, aux = apply_stack(cfg, params, x, positions, mode=mode,
+                                    cache=cache, pos=pos, hints=hints)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if mode == "prefill":
+        return x, new_cache, aux
+    return x, aux

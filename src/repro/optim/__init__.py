@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamW, AdamWState
+from repro.optim.schedule import constant, cosine_with_warmup
+from repro.optim import compression

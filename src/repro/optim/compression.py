@@ -1,0 +1,52 @@
+"""Top-k gradient compression with error feedback (beyond-paper, DESIGN §7).
+
+At 1000+-node data parallelism the gradient all-reduce is the dominant
+collective; top-k sparsification with local error feedback (Stich et al.,
+"Sparsified SGD with Memory") cuts DP bandwidth by 10-100× at equal final
+loss for many workloads. This module provides the compressor as a library
+feature for the elastic/async DP boundary (the gossip runtime exchanges
+compressed grad summaries); the synchronous pjit path keeps XLA's fused
+all-reduces.
+
+The sparse wire format intentionally mirrors the paper's join-decomposition
+view: a compressed gradient is the "delta" of the momentum-error state, and
+repeated compression rounds accumulate exactly like δ-buffers (error
+feedback = what RR extraction leaves behind).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressedGrad(NamedTuple):
+    idx: jnp.ndarray      # int32 [k] flat indices
+    vals: jnp.ndarray     # f32 [k]
+    shape: tuple
+
+
+def topk_compress(g: jnp.ndarray, err: jnp.ndarray, frac: float = 0.01):
+    """Returns (compressed, new_err). ``err`` is the error-feedback carry."""
+    flat = (g + err).reshape(-1).astype(jnp.float32)
+    k = max(int(flat.shape[0] * frac), 1)
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    taken = flat[idx]
+    new_flat = flat.at[idx].set(0.0)
+    return CompressedGrad(idx=idx, vals=taken, shape=g.shape), new_flat.reshape(g.shape)
+
+
+def decompress(c: CompressedGrad) -> jnp.ndarray:
+    n = 1
+    for s in c.shape:
+        n *= s
+    return jnp.zeros((n,), jnp.float32).at[c.idx].set(c.vals).reshape(c.shape)
+
+
+def compression_ratio(c: CompressedGrad) -> float:
+    n = 1
+    for s in c.shape:
+        n *= s
+    return (2 * c.idx.shape[0]) / max(n, 1)

@@ -1,0 +1,25 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(peak: float, warmup_steps: int, total_steps: int,
+                       floor: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup_steps, 1)
+        frac = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(s < warmup_steps, warm, cos)
+
+    return lr
+
+
+def constant(value: float):
+    def lr(step):
+        return jnp.full((), value, jnp.float32)
+
+    return lr

@@ -1,0 +1,6 @@
+"""Control-plane runtime: gossip sync, membership, elasticity."""
+from repro.runtime.gossip import GossipNode, LocalTransport, Store, converged, sync_round
+from repro.runtime.membership import (
+    HEARTBEATS, MEMBERS, ElasticPlan, FailureDetector,
+    beat, join_cluster, plan_from_view, register_membership,
+)

@@ -1,0 +1,176 @@
+"""Gossip runtime: BP+RR synchronization of registered CRDT stores.
+
+This is Algorithm 2 run as the *control plane* of the training fleet. Each
+node hosts a ``GossipNode`` with named CRDT stores (membership, heartbeats,
+shard ledger, checkpoint registry, metrics). Local mutations enqueue their
+optimal deltas (δ-mutators); ``sync_round`` exchanges per-neighbor
+leave-one-out joins with origin filtering and Δ-extraction on receive —
+exactly Algorithm 2, per store.
+
+The transport is pluggable; ``LocalTransport`` is an in-process message
+board used by tests/examples (and by the elastic-churn simulation). A real
+deployment would back it with the ICI/DCN fabric or a side-channel TCP mesh;
+the algorithmic layer is transport-agnostic by construction (state-based
+CRDTs tolerate drops, duplication and reordering).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lattice import Lattice
+
+
+@dataclasses.dataclass
+class Store:
+    name: str
+    lattice: Lattice
+    state: Any
+    # origin-tagged δ-buffer: origin id -> joined delta (BP tags)
+    buffer: Dict[int, Any] = dataclasses.field(default_factory=dict)
+
+    def local_update(self, delta, self_id: int):
+        self.state = self.lattice.join(self.state, delta)
+        self._store(delta, self_id)
+
+    def _store(self, delta, origin: int):
+        if origin in self.buffer:
+            self.buffer[origin] = self.lattice.join(self.buffer[origin], delta)
+        else:
+            self.buffer[origin] = delta
+
+    def send_to(self, neighbor: int):
+        """Leave-one-out join: every buffered delta except ones from
+        ``neighbor`` (BP)."""
+        acc = None
+        for origin, d in self.buffer.items():
+            if origin == neighbor:
+                continue
+            acc = d if acc is None else self.lattice.join(acc, d)
+        return acc
+
+    def receive(self, d, origin: int) -> int:
+        """RR: extract Δ(d, x); store only the novel part. Returns novel
+        element count (telemetry)."""
+        s = self.lattice.delta(d, self.state)
+        if bool(self.lattice.is_bottom(s)):
+            return 0
+        self.state = self.lattice.join(self.state, s)
+        self._store(s, origin)
+        return int(self.lattice.size(s))
+
+    def clear(self):
+        self.buffer.clear()
+
+
+class LocalTransport:
+    """In-process mailbox (tests/simulations). Messages may be dropped or
+    duplicated by the chaos hooks — CRDT sync must tolerate both."""
+
+    def __init__(self):
+        self.mail: Dict[int, List[Tuple[int, str, Any]]] = {}
+        self.drop_fn: Optional[Callable[[int, int], bool]] = None
+        self.dup_fn: Optional[Callable[[int, int], bool]] = None
+        self.sent_elements = 0
+
+    def send(self, src: int, dst: int, store: str, payload, size: int):
+        if self.drop_fn is not None and self.drop_fn(src, dst):
+            return
+        self.mail.setdefault(dst, []).append((src, store, payload))
+        self.sent_elements += size
+        if self.dup_fn is not None and self.dup_fn(src, dst):
+            self.mail.setdefault(dst, []).append((src, store, payload))
+            self.sent_elements += size
+
+    def drain(self, node: int):
+        msgs = self.mail.get(node, [])
+        self.mail[node] = []
+        return msgs
+
+
+class GossipNode:
+    def __init__(self, node_id: int, neighbors: List[int],
+                 transport: LocalTransport):
+        self.id = node_id
+        self.neighbors = list(neighbors)
+        self.transport = transport
+        self.stores: Dict[str, Store] = {}
+        self.rx_novel = 0
+        self.rx_redundant = 0
+
+    def register(self, name: str, lattice: Lattice, state=None):
+        self.stores[name] = Store(
+            name=name, lattice=lattice,
+            state=lattice.bottom() if state is None else state,
+        )
+
+    def update(self, store: str, delta):
+        self.stores[store].local_update(delta, self.id)
+
+    def state(self, store: str):
+        return self.stores[store].state
+
+    def push(self):
+        """Send buffered deltas to all neighbors (Alg 2 lines 9-13)."""
+        for st in self.stores.values():
+            for j in self.neighbors:
+                d = st.send_to(j)
+                if d is None:
+                    continue
+                size = int(st.lattice.size(d))
+                if size == 0:
+                    continue
+                self.transport.send(self.id, j, st.name, d, size)
+            st.clear()
+
+    def pull(self):
+        """Process received δ-groups (Alg 2 lines 14-17)."""
+        for src, store, payload in self.transport.drain(self.id):
+            st = self.stores.get(store)
+            if st is None:
+                continue
+            total = int(st.lattice.size(payload))
+            novel = st.receive(payload, src)
+            self.rx_novel += novel
+            self.rx_redundant += total - novel
+
+
+def bootstrap(joiner: GossipNode, peer: GossipNode) -> int:
+    """State-driven sync on (re)join (paper §VI / Enes et al. PMLDC'16).
+
+    Deltas only carry *new* changes; a node (re)joining after loss must
+    exchange full states once with one peer: both sides RR-extract the novel
+    part, buffer it with the partner's origin tag, and gossip propagates it
+    onward. Returns transmitted elements (the recovery cost)."""
+    cost = 0
+    for name, st in peer.stores.items():
+        if name in joiner.stores:
+            cost += int(st.lattice.size(st.state))
+            joiner.stores[name].receive(st.state, peer.id)
+    for name, st in joiner.stores.items():
+        if name in peer.stores:
+            cost += int(st.lattice.size(st.state))
+            peer.stores[name].receive(st.state, joiner.id)
+    return cost
+
+
+def sync_round(nodes: Dict[int, GossipNode]):
+    for n in nodes.values():
+        n.push()
+    for n in nodes.values():
+        n.pull()
+
+
+def converged(nodes: Dict[int, GossipNode], store: str) -> bool:
+    vals = [n.stores[store] for n in nodes.values()]
+    first = vals[0]
+    for other in vals[1:]:
+        le = first.lattice.leq(first.state, other.state)
+        ge = first.lattice.leq(other.state, first.state)
+        if not (bool(le) and bool(ge)):
+            return False
+    return True

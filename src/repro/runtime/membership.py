@@ -1,0 +1,85 @@
+"""Cluster membership, heartbeats, failure detection, elastic rebuild.
+
+Membership = GSet of node slots (grow-only; departures are *suspected* via
+heartbeat staleness rather than removed — monotone, partition-safe).
+Heartbeats = GMap node → monotone beat counter. Both gossip via BP+RR.
+
+``ElasticPlan`` derives the data-parallel assignment from the converged
+view: alive nodes get contiguous DP ranks; a mesh-rebuild hook consumes the
+plan (on TPU, a real rebuild re-initializes the runtime with the survivor
+topology and restores from the CRDT checkpoint registry — exercised
+in-process by tests/examples via the simulated fleet).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GMap, GSet
+from repro.runtime.gossip import GossipNode
+
+
+MEMBERS = "members"
+HEARTBEATS = "heartbeats"
+
+
+def register_membership(node: GossipNode, max_nodes: int):
+    node.register(MEMBERS, GSet(universe=max_nodes).lattice)
+    node.register(HEARTBEATS, GMap(num_keys=max_nodes).lattice)
+
+
+def join_cluster(node: GossipNode, max_nodes: int):
+    gset = GSet(universe=max_nodes)
+    delta = jnp.zeros((max_nodes,), jnp.bool_).at[node.id].set(True)
+    node.update(MEMBERS, delta)
+    beat(node, max_nodes)
+
+
+def beat(node: GossipNode, max_nodes: int):
+    hb = node.state(HEARTBEATS)
+    delta = jnp.zeros_like(hb).at[node.id].set(hb[node.id] + 1)
+    node.update(HEARTBEATS, delta)
+
+
+@dataclasses.dataclass
+class FailureDetector:
+    staleness_rounds: int = 3
+    _last_seen: Dict[int, tuple] = dataclasses.field(default_factory=dict)
+
+    def suspects(self, node: GossipNode, round_no: int) -> List[int]:
+        members = np.nonzero(np.asarray(node.state(MEMBERS)))[0]
+        beats = np.asarray(node.state(HEARTBEATS))
+        out = []
+        for m in members:
+            m = int(m)
+            prev_beat, prev_round = self._last_seen.get(m, (-1, round_no))
+            if beats[m] > prev_beat:
+                self._last_seen[m] = (int(beats[m]), round_no)
+            elif round_no - prev_round >= self.staleness_rounds:
+                out.append(m)
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    alive: tuple
+    dp_rank: Dict[int, int]
+    dp_size: int
+
+    @property
+    def world_size(self) -> int:
+        return len(self.alive)
+
+
+def plan_from_view(node: GossipNode, suspects: List[int]) -> ElasticPlan:
+    members = np.nonzero(np.asarray(node.state(MEMBERS)))[0]
+    alive = tuple(int(m) for m in members if int(m) not in set(suspects))
+    return ElasticPlan(
+        alive=alive,
+        dp_rank={m: i for i, m in enumerate(alive)},
+        dp_size=len(alive),
+    )

@@ -1,0 +1,21 @@
+"""Synchronization algorithms and network simulation (paper §IV-V)."""
+
+from repro.sync.algorithms import ALGORITHMS, SyncAlgorithm
+from repro.sync.simulator import SimResult, converged, simulate
+from repro.sync.topology import Topology, by_name, full, partial_mesh, ring, tree
+from repro.sync import scuttlebutt
+
+__all__ = [
+    "ALGORITHMS",
+    "SyncAlgorithm",
+    "SimResult",
+    "converged",
+    "simulate",
+    "Topology",
+    "by_name",
+    "full",
+    "partial_mesh",
+    "ring",
+    "tree",
+    "scuttlebutt",
+]

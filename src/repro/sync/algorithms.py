@@ -1,0 +1,203 @@
+"""Synchronization algorithms (paper §IV, Algorithms 1 & 2).
+
+Implemented flavors:
+
+* ``state``    — state-based full-state sync (baseline)
+* ``classic``  — classic delta-based, Algorithm 1 (Almeida et al.)
+* ``bp``       — + avoid back-propagation of δ-groups (origin tags)
+* ``rr``       — + remove redundant state in received δ-groups (Δ-extract)
+* ``bprr``     — Algorithm 2 (BP + RR), the paper's contribution
+* ``state``/``classic``/… all share one synchronous-round step under scan.
+
+Buffer representation (DESIGN.md §3): entries with equal origin are kept
+joined in an origin-indexed slot ``B[N, P+1, ...]`` (slot P = local ops).
+This is exact w.r.t. what Algorithm 2 sends — the per-neighbor send is a
+join over entries filtered by origin, and join is associative/commutative —
+while per-entry *sizes* are tracked in a separate counter for the memory
+metric (the classic algorithm's buffer really holds every entry).
+
+The per-neighbor send for BP flavors is a leave-one-out join across slots.
+``loo="prefix"`` computes all P sends in O(P·U) via prefix/suffix joins
+(beyond-paper optimization, EXPERIMENTS.md §Perf); ``loo="naive"`` is the
+direct O(P²·U) fold for comparison.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lattice import Lattice
+from repro.sync import treeops as T
+from repro.sync.topology import Topology
+
+ALGORITHMS = ("state", "classic", "bp", "rr", "bprr")
+
+
+class RoundMetrics(NamedTuple):
+    tx: jnp.ndarray        # elements sent this round (scalar)
+    mem: jnp.ndarray       # elements held (state + buffer entries) at round end
+    cpu: jnp.ndarray       # element-ops processed this round (proxy, DESIGN §3)
+    max_mem_node: jnp.ndarray  # worst single-node memory
+
+
+class AlgoCarry(NamedTuple):
+    x: Any                 # [N, ...U] lattice states
+    buf: Any               # None | [N, ...U] | [N, P+1, ...U]
+    buf_elems: jnp.ndarray  # [N] buffered entry elements (memory metric)
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncAlgorithm:
+    name: str
+    lattice: Lattice
+    topo: Topology
+    loo: str = "prefix"    # leave-one-out strategy for BP sends
+
+    @property
+    def has_buffer(self) -> bool:
+        return self.name != "state"
+
+    @property
+    def per_origin(self) -> bool:
+        return self.name in ("bp", "bprr")
+
+    @property
+    def extracts(self) -> bool:
+        return self.name in ("rr", "bprr")
+
+    # -- state ---------------------------------------------------------------
+
+    def init(self, x0=None) -> AlgoCarry:
+        n = self.topo.num_nodes
+        p = self.topo.max_degree
+        bot = self.lattice.bottom()
+        x = T.bcast(bot, (n,)) if x0 is None else x0
+        if not self.has_buffer:
+            buf = None
+        elif self.per_origin:
+            buf = T.bcast(bot, (n, p + 1))
+        else:
+            buf = T.bcast(bot, (n,))
+        return AlgoCarry(x=x, buf=buf, buf_elems=jnp.zeros((n,), jnp.int32))
+
+    # -- helpers ---------------------------------------------------------------
+
+    def _loo_sends(self, buf):
+        """d[i, p] = ⊔ {B[i, o] | o ≠ p} for p in 0..P-1 (slot P always in)."""
+        lat = self.lattice
+        p = self.topo.max_degree
+        slots = [T.slot(buf, k) for k in range(p + 1)]
+        if self.loo == "naive":
+            outs = []
+            for j in range(p):
+                acc = None
+                for o in range(p + 1):
+                    if o == j:
+                        continue
+                    acc = slots[o] if acc is None else lat.join(acc, slots[o])
+                outs.append(acc)
+        else:
+            # prefix/suffix joins: O(P) joins for all P outputs.
+            bot = T.bcast(self.lattice.bottom(), (self.topo.num_nodes,))
+            prefix = [None] * (p + 1)
+            suffix = [None] * (p + 1)
+            acc = bot
+            for k in range(p + 1):
+                prefix[k] = acc
+                acc = lat.join(acc, slots[k])
+            acc = bot
+            for k in range(p, -1, -1):
+                suffix[k] = acc
+                acc = lat.join(acc, slots[k])
+            outs = [lat.join(prefix[j], suffix[j]) for j in range(p)]
+        # stack to [N, P, ...]
+        return jax.tree.map(lambda *xs: jnp.stack(xs, axis=1), *outs)
+
+    # -- one synchronous round -------------------------------------------------
+
+    def round_step(self, carry: AlgoCarry, op_delta) -> tuple[AlgoCarry, RoundMetrics]:
+        lat, topo = self.lattice, self.topo
+        n, p = topo.num_nodes, topo.max_degree
+        x, buf, buf_elems = carry
+
+        cpu = jnp.zeros((), jnp.int32)
+
+        # (1) local update: δ = mᵟ(xᵢ); store(δ, i)      [Alg 2, lines 6-8]
+        dsz = lat.size(op_delta).astype(jnp.int32)             # [N]
+        x = lat.join(x, op_delta)
+        if self.has_buffer:
+            if self.per_origin:
+                self_slot = T.slot(buf, p)
+                buf = T.set_slot(buf, p, lat.join(self_slot, op_delta))
+            else:
+                buf = lat.join(buf, op_delta)
+            buf_elems = buf_elems + dsz
+        cpu = cpu + jnp.sum(dsz.astype(jnp.int32))
+
+        # (2) sends                                        [Alg 2, lines 9-12]
+        if not self.has_buffer:
+            d_all = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[:, None], (n, p) + a.shape[1:]), x
+            )
+        elif self.per_origin:
+            d_all = self._loo_sends(buf)
+        else:
+            d_all = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[:, None], (n, p) + a.shape[1:]), buf
+            )
+        send_sizes = lat.size(d_all).astype(jnp.int32)          # [N, P]
+        send_sizes = send_sizes * topo.mask
+        tx = jnp.sum(send_sizes)
+        cpu = cpu + tx  # serialization cost ∝ elements sent
+
+        # (3) clear buffer                                 [Alg 2, line 13]
+        if self.has_buffer:
+            buf = jax.tree.map(jnp.zeros_like, buf)
+            buf_elems = jnp.zeros_like(buf_elems)
+
+        # (4) receive all messages, sequentially per slot  [Alg 2, lines 14-17]
+        for q in range(p):
+            sender = topo.nbrs[:, q]
+            sslot = topo.rev[:, q]
+            valid = topo.mask[:, q]
+            d = T.gather2(d_all, sender, sslot)                 # [N, ...U]
+            d = T.where(valid, d, T.bcast(lat.bottom(), (n,)))
+
+            if self.name == "state":
+                cpu = cpu + jnp.sum(lat.size(d).astype(jnp.int32))
+                x = lat.join(x, d)
+                continue
+
+            if self.extracts:
+                stored = lat.delta(d, x)                        # RR: Δ(d, xᵢ)
+                keep = jnp.logical_not(lat.is_bottom(stored)) & valid
+            else:
+                stored = d                                      # classic: whole group
+                keep = jnp.logical_not(lat.leq(d, x)) & valid   # inflation check
+
+            ssz = lat.size(stored).astype(jnp.int32) * keep
+            cpu = cpu + jnp.sum(lat.size(d).astype(jnp.int32)) \
+                      + jnp.sum(ssz.astype(jnp.int32))
+            x = lat.join(x, d)
+            if self.per_origin:
+                cur = T.slot(buf, q)
+                upd = T.where(keep, lat.join(cur, stored), cur)
+                buf = T.set_slot(buf, q, upd)
+            else:
+                buf = T.where(keep, lat.join(buf, stored), buf)
+            buf_elems = buf_elems + ssz
+
+        # (5) metrics
+        state_elems = lat.size(x).astype(jnp.int32)             # [N]
+        node_mem = state_elems + buf_elems.astype(jnp.int32)
+        metrics = RoundMetrics(
+            tx=tx,
+            mem=jnp.sum(node_mem),
+            cpu=cpu,
+            max_mem_node=jnp.max(node_mem),
+        )
+        return AlgoCarry(x=x, buf=buf, buf_elems=buf_elems), metrics

@@ -1,0 +1,150 @@
+"""Scuttlebutt anti-entropy baseline (paper §V-C "Scuttlebutt" variant).
+
+Van Renesse et al.'s push-pull reconciliation adapted to CRDT deltas exactly
+as the paper describes: values are the optimal deltas from δ-mutators, keys
+are (origin, seq) version pairs, knowledge is a version vector I ↪ ℕ, plus
+the paper's *safe-delete* extension — each node tracks the last summary
+vector seen from every node (a map I ↪ (I ↪ ℕ), gossiped on exchange) and
+deletes a delta once every node has seen it.
+
+Because per-origin versions are delivered in order, a node's whole CRDT
+state is a deterministic function of its version vector; the benchmark-type
+``DeltaCodec`` reconstructs states and sizes from vectors, so the simulator
+carries only O(N²) knowledge + O(N³) seen matrices instead of materialized
+per-delta stores.
+
+Scuttlebutt treats values as *opaque*: every (i, s) delta is transmitted
+individually even when consecutive deltas would compress under join — the
+paper's explanation for its poor GCounter behavior (§V-C a).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sync.topology import Topology
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaCodec:
+    """Benchmark-type-specific reconstruction of states/sizes from vectors."""
+
+    # join of all deltas {(i, s) | lo[i] < s ≤ hi[i]} as a dense state;
+    # signature: (lo [.., N], hi [.., N]) -> state [.., U]
+    range_join: Callable[[jnp.ndarray, jnp.ndarray], Any]
+    # elements in one (i, ·) delta, per origin: int32 [N]
+    delta_elems: jnp.ndarray
+    # lattice-state size given a knowledge vector: (kv [.., N]) -> int [..]
+    state_size: Callable[[jnp.ndarray], jnp.ndarray]
+
+
+class ScuttlebuttResult(NamedTuple):
+    tx: np.ndarray        # [T] data elements sent per round
+    meta_tx: np.ndarray   # [T] metadata entries sent per round (vectors+seen)
+    mem: np.ndarray       # [T] elements held (state + retained deltas)
+    cpu: np.ndarray       # [T] element-ops proxy
+    max_mem_node: np.ndarray
+    final_kv: np.ndarray  # [N, N]
+    final_x: Any
+
+    @property
+    def total_tx(self) -> int:
+        return int(self.tx.sum())
+
+
+def simulate(
+    codec: DeltaCodec,
+    topo: Topology,
+    active_rounds: int,
+    quiet_rounds: int = 0,
+    jit: bool = True,
+) -> ScuttlebuttResult:
+    n, p = topo.num_nodes, topo.max_degree
+    nbrs, mask = topo.nbrs, topo.mask
+    de = codec.delta_elems.astype(jnp.int32)
+
+    def step(carry, t):
+        kv, seen = carry
+        # (1) local op: bump own sequence.
+        active = t < active_rounds
+        kv = jnp.where(active, kv + jnp.eye(n, dtype=kv.dtype), kv)
+        seen = seen.at[jnp.arange(n), jnp.arange(n)].set(
+            jnp.maximum(seen[jnp.arange(n), jnp.arange(n)], kv[jnp.arange(n)])
+        )
+
+        # (2) per-edge push-pull on the pre-round vectors (each undirected
+        # edge reconciles once per round; data flows both directions).
+        kv_nbr = kv[nbrs]                                   # [N, P, N]
+        missing = jnp.maximum(kv_nbr - kv[:, None, :], 0)   # deltas I lack
+        recv_counts = jnp.sum(missing * de[None, None, :], axis=-1)  # [N, P]
+        recv_counts = recv_counts * mask
+        # Each edge's transfer is counted once per direction via the
+        # receiver's view: node i receives `recv_counts[i, q]` from nbr q.
+        tx = jnp.sum(recv_counts)
+
+        # metadata: per reconciliation each side ships its summary vector
+        # (N entries) and its seen-map (N² entries, the safe-delete gossip).
+        live_edges = jnp.sum(mask) // 2
+        meta_tx = live_edges * 2 * (n + n * n)
+
+        # (3) knowledge merge.
+        gain = jnp.where(mask[:, :, None], kv_nbr, 0)
+        kv_new = jnp.maximum(kv, jnp.max(gain, axis=1))
+
+        # (4) seen-map merge: neighbor vectors + gossiped seen-maps.
+        seen_nbr = seen[nbrs]                               # [N, P, N, N]
+        seen_gain = jnp.where(mask[:, :, None, None], seen_nbr, 0)
+        seen_new = jnp.maximum(seen, jnp.max(seen_gain, axis=1))
+        # direct observation: seen[i][j] ⊔= kv[j] for each neighbor j.
+        upd = jnp.where(mask[:, :, None], kv_nbr, 0)        # [N, P, N]
+        seen_new = seen_new.at[
+            jnp.arange(n)[:, None].repeat(p, 1), nbrs
+        ].max(upd)
+        seen_new = seen_new.at[jnp.arange(n), jnp.arange(n)].set(
+            jnp.maximum(seen_new[jnp.arange(n), jnp.arange(n)], kv_new)
+        )
+
+        # (5) memory: state + retained deltas (not yet seen by all).
+        floor = jnp.min(seen_new, axis=1)                   # [N, N]
+        retained = jnp.sum(
+            jnp.maximum(kv_new - floor, 0) * de[None, :], axis=-1
+        )                                                   # [N]
+        state_sz = codec.state_size(kv_new).astype(jnp.int32)
+        node_mem = state_sz + retained
+        cpu = tx + jnp.sum(mask) * (n + n * n)              # merge work proxy
+
+        metrics = (tx, meta_tx.astype(jnp.int32), jnp.sum(node_mem),
+                   cpu, jnp.max(node_mem))
+        return (kv_new, seen_new), metrics
+
+    kv0 = jnp.zeros((n, n), jnp.int32)
+    seen0 = jnp.zeros((n, n, n), jnp.int32)
+
+    def run(carry):
+        return jax.lax.scan(step, carry, jnp.arange(active_rounds + quiet_rounds))
+
+    if jit:
+        run = jax.jit(run)
+    (kv, seen), (tx, meta, mem, cpu, mx) = run((kv0, seen0))
+    zeros = jnp.zeros_like(kv)
+    final_x = codec.range_join(zeros, kv)
+    return ScuttlebuttResult(
+        tx=np.asarray(tx), meta_tx=np.asarray(meta), mem=np.asarray(mem),
+        cpu=np.asarray(cpu), max_mem_node=np.asarray(mx),
+        final_kv=np.asarray(kv), final_x=jax.device_get(final_x),
+    )
+
+
+def metadata_bytes_per_node(num_nodes: int, degree: int, id_bytes: int = 20) -> int:
+    """Fig 9 analytic curve: Scuttlebutt metadata per node = N²·P·S."""
+    return num_nodes * num_nodes * degree * id_bytes
+
+
+def delta_metadata_bytes_per_node(degree: int, id_bytes: int = 20) -> int:
+    """Fig 9 analytic curve: delta-based metadata per node = P·S."""
+    return degree * id_bytes

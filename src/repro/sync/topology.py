@@ -1,0 +1,108 @@
+"""Network topologies (paper §V-B, Figure 6).
+
+A topology is encoded as fixed-degree neighbor tables so the whole cluster
+steps under one ``lax.scan``:
+
+* ``nbrs[N, P]``  — neighbor ids, padded (padding entries point at node 0)
+* ``mask[N, P]``  — validity of each slot
+* ``rev[N, P]``   — for receiver r and slot p with sender s = nbrs[r, p],
+                    the slot q on s such that nbrs[s, q] == r (undirected
+                    graphs only). Used to route per-edge messages.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    name: str
+    num_nodes: int
+    max_degree: int
+    nbrs: jnp.ndarray   # int32 [N, P]
+    mask: jnp.ndarray   # bool  [N, P]
+    rev: jnp.ndarray    # int32 [N, P]
+
+    @property
+    def num_edges(self) -> int:
+        return int(np.sum(np.asarray(self.mask))) // 2
+
+    def neighbor_lists(self):
+        nbrs = np.asarray(self.nbrs)
+        mask = np.asarray(self.mask)
+        return [
+            [int(nbrs[i, p]) for p in range(self.max_degree) if mask[i, p]]
+            for i in range(self.num_nodes)
+        ]
+
+
+def _from_adj(name: str, adj: np.ndarray) -> Topology:
+    n = adj.shape[0]
+    assert (adj == adj.T).all() and not adj.diagonal().any(), "undirected, no self-loops"
+    lists = [np.nonzero(adj[i])[0].tolist() for i in range(n)]
+    p = max(len(l) for l in lists)
+    nbrs = np.zeros((n, p), np.int32)
+    mask = np.zeros((n, p), bool)
+    for i, l in enumerate(lists):
+        nbrs[i, : len(l)] = l
+        mask[i, : len(l)] = True
+    rev = np.zeros((n, p), np.int32)
+    for i, l in enumerate(lists):
+        for q, j in enumerate(l):
+            rev[i, q] = lists[j].index(i)
+    return Topology(name, n, p, jnp.asarray(nbrs), jnp.asarray(mask), jnp.asarray(rev))
+
+
+def tree(num_nodes: int) -> Topology:
+    """Binary tree: root has 2 neighbors, internal nodes 3, leaves 1 —
+    the paper's 15-node tree (Figure 6, right)."""
+    adj = np.zeros((num_nodes, num_nodes), bool)
+    for i in range(1, num_nodes):
+        parent = (i - 1) // 2
+        adj[i, parent] = adj[parent, i] = True
+    return _from_adj(f"tree{num_nodes}", adj)
+
+
+def partial_mesh(num_nodes: int, degree: int = 4) -> Topology:
+    """Circulant partial mesh: each node links with ``degree`` neighbors at
+    ring offsets ±1..±degree/2 — cyclic with redundant paths, the paper's
+    15-node partial mesh (Figure 6, left)."""
+    assert degree % 2 == 0 and degree < num_nodes
+    adj = np.zeros((num_nodes, num_nodes), bool)
+    for i in range(num_nodes):
+        for off in range(1, degree // 2 + 1):
+            j = (i + off) % num_nodes
+            adj[i, j] = adj[j, i] = True
+    return _from_adj(f"mesh{num_nodes}d{degree}", adj)
+
+
+def ring(num_nodes: int) -> Topology:
+    return _from_adj(f"ring{num_nodes}", _ring_adj(num_nodes))
+
+
+def _ring_adj(n):
+    adj = np.zeros((n, n), bool)
+    for i in range(n):
+        adj[i, (i + 1) % n] = adj[(i + 1) % n, i] = True
+    return adj
+
+
+def full(num_nodes: int) -> Topology:
+    adj = ~np.eye(num_nodes, dtype=bool)
+    return _from_adj(f"full{num_nodes}", adj)
+
+
+def by_name(name: str, num_nodes: int, degree: int = 4) -> Topology:
+    if name == "tree":
+        return tree(num_nodes)
+    if name == "mesh":
+        return partial_mesh(num_nodes, degree)
+    if name == "ring":
+        return ring(num_nodes)
+    if name == "full":
+        return full(num_nodes)
+    raise ValueError(f"unknown topology {name!r}")

@@ -1,0 +1,61 @@
+"""Pytree helpers for batched lattice states.
+
+Lattice states may be single arrays or struct-of-arrays tuples; all lattice
+operations broadcast over leading batch axes and reduce over the trailing
+universe axis. These helpers manipulate such states as pytrees.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bcast(state, prefix: tuple):
+    """Broadcast a (⊥-like) state to leading batch axes ``prefix``."""
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, tuple(prefix) + a.shape), state)
+
+
+def where(cond, a, b):
+    """Select between two states; ``cond`` has leading batch shape and is
+    right-padded with singleton axes to each leaf's rank."""
+
+    def sel(x, y):
+        c = cond.reshape(cond.shape + (1,) * (x.ndim - cond.ndim))
+        return jnp.where(c, x, y)
+
+    return jax.tree.map(sel, a, b)
+
+
+def take_axis0(state, idx):
+    """Gather along axis 0 of every leaf."""
+    return jax.tree.map(lambda a: a[idx], state)
+
+
+def gather2(state, idx0, idx1):
+    """Leafwise ``a[idx0, idx1]`` (advanced indexing on two leading axes)."""
+    return jax.tree.map(lambda a: a[idx0, idx1], state)
+
+
+def slot(state, p):
+    """Leafwise ``a[:, p]`` — select buffer slot p for every node."""
+    return jax.tree.map(lambda a: a[:, p], state)
+
+
+def set_slot(state, p, val):
+    return jax.tree.map(lambda a, v: a.at[:, p].set(v), state, val)
+
+
+def dyn_slot(state, p):
+    """Like :func:`slot` but with a traced index."""
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, p, axis=1, keepdims=False), state
+    )
+
+
+def dyn_set_slot(state, p, val):
+    return jax.tree.map(
+        lambda a, v: jax.lax.dynamic_update_index_in_dim(a, v, p, axis=1),
+        state,
+        val,
+    )

@@ -1,0 +1,48 @@
+"""Losses. Cross-entropy is computed in sequence chunks so the full
+[B, S, V] logits tensor is never materialized — with 256k vocabs (gemma2)
+and 1M-token batches that tensor alone would be ~33 GB/device."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as TR
+
+
+def chunked_cross_entropy(cfg, params, feats, labels, mask, chunk: int = 1024):
+    """feats: [B, S, d]; labels/mask: [B, S]. Returns (loss, denom)."""
+    b, s, _ = feats.shape
+    c = min(chunk, s)
+    # pad S to a multiple of the chunk (mask padding out)
+    pad = (-s) % c
+    if pad:
+        feats = jnp.pad(feats, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    n = feats.shape[1] // c
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def chunk_ce(fc, lc, mc):
+        # rematted: backward recomputes this chunk's logits instead of
+        # saving [B, c, V] fp32 activations (74 GB/device at 152k vocab).
+        logits = TR.lm_head(cfg, params, fc).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * mc), jnp.sum(mc)
+
+    def body(carry, i):
+        tot, den = carry
+        fc = jax.lax.dynamic_slice_in_dim(feats, i * c, c, axis=1)
+        lc = jax.lax.dynamic_slice_in_dim(labels, i * c, c, axis=1)
+        mc = jax.lax.dynamic_slice_in_dim(mask, i * c, c, axis=1).astype(jnp.float32)
+        ce_sum, m_sum = chunk_ce(fc, lc, mc)
+        return (tot + ce_sum, den + m_sum), None
+
+    (tot, den), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        jnp.arange(n),
+    )
+    return tot, den

@@ -1,0 +1,114 @@
+"""PartitionSpec builders for every jitted-step input/output.
+
+Single-pod mesh: (data=16, model=16). Multi-pod: (pod, data, model) — the
+pod axis joins the data axes for batch/FSDP sharding. ``long_500k`` (batch
+1) shards the KV-cache *sequence* over the data axes instead of the batch
+(context-parallel decode): softmax statistics across shards reduce via the
+collectives GSPMD inserts.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as TR
+from repro.models.config import ModelConfig
+from repro.models.params import (
+    SERVE_RULES,
+    TRAIN_RULES,
+    tree_specs,
+)
+
+
+def data_axes_of(mesh) -> Any:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def batch_specs(cfg: ModelConfig, mesh, batch_tree, *, shard_batch=True):
+    da = data_axes_of(mesh) if shard_batch else None
+
+    def spec(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        nd = len(leaf.shape)
+        return P(*([da] + [None] * (nd - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_tree)
+
+
+def param_specs(cfg: ModelConfig, mesh, mode: str):
+    rules = TRAIN_RULES if mode == "train" else SERVE_RULES
+    defs = TR.param_defs(cfg)
+    return tree_specs(defs, _resolve_rules(rules, mesh), mesh.axis_names)
+
+
+def _resolve_rules(rules, mesh):
+    out = {}
+    for k, v in rules.items():
+        if v is None:
+            out[k] = None
+        else:
+            present = tuple(a for a in v if a in mesh.axis_names)
+            out[k] = present if present else None
+    return out
+
+
+def opt_state_specs(param_sp):
+    """AdamWState(step, master, mu, nu) — moments mirror param sharding."""
+    from repro.optim.adamw import AdamWState
+
+    return AdamWState(step=P(), master=param_sp, mu=param_sp, nu=param_sp)
+
+
+def cache_specs(cfg: ModelConfig, mesh, *, seq_shard: str = "model"):
+    """Specs matching the init_cache() tree structure.
+
+    ``seq_shard`` places the KV-cache *sequence* dim (flash-decoding style —
+    per-shard partial softmax + tiny cross-shard reduction, no cache
+    gathers):
+      "model" — seq over TP, batch over data (decode_32k / prefill)
+      "all"   — seq over data+model (long_500k: batch 1 cannot shard)
+    Cache seq lengths (4096 ring / 32768 / 524288) divide 16 and 256.
+    Recurrent states have no seq dim: their width shards over TP.
+    """
+    da = data_axes_of(mesh)
+    tp = "model" if "model" in mesh.axis_names else None
+    if seq_shard == "all":
+        batch = None
+        seq = tuple(a for a in (da if isinstance(da, tuple) else (da,))
+                    if a) + ((tp,) if tp else ())
+        seq = seq if len(seq) > 1 else (seq[0] if seq else None)
+    else:
+        batch = da
+        seq = tp
+
+    def for_kind(kind, stacked):
+        pre = (None,) if stacked else ()
+        if kind in ("global", "local"):
+            return {
+                "k": P(*pre, batch, seq, None, None),
+                "v": P(*pre, batch, seq, None, None),
+                "kpos": P(*pre, batch, seq),
+            }
+        if kind == "rec":
+            return {"h": P(*pre, batch, tp), "conv": P(*pre, batch, None, tp)}
+        return {
+            "s": P(*pre, batch, tp, None, None),
+            "last_tm": P(*pre, batch, None),
+            "last_cm": P(*pre, batch, None),
+        }
+
+    return {
+        "blocks": [for_kind(k, True) for k in cfg.pattern],
+        "tail": [for_kind(k, False) for k in cfg.tail_pattern],
+    }
+
+
+def to_named(tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

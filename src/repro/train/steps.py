@@ -1,0 +1,125 @@
+"""Jitted train / prefill / decode steps.
+
+``make_train_step`` builds the full training step: microbatched grad
+accumulation (scan), chunked CE + MoE aux loss, global-norm clip, sharded
+AdamW with fp32 masters, donated state. ``make_prefill`` / ``make_decode``
+build the serving steps. All functions are pure and close over the config —
+the launcher jits them with explicit in/out shardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as TR
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamW, AdamWState
+from repro.train.losses import chunked_cross_entropy
+
+
+class TrainState(NamedTuple):
+    params: Any            # bf16 working copy
+    opt: AdamWState
+
+
+def init_train_state(cfg: ModelConfig, optim: AdamW, params) -> TrainState:
+    return TrainState(params=params, opt=optim.init(params))
+
+
+def make_loss_fn(cfg: ModelConfig, hints=TR.NO_HINTS):
+    def loss_fn(params, batch):
+        feats, aux = TR.forward(cfg, params, batch, mode="train", hints=hints)
+        tot, den = chunked_cross_entropy(
+            cfg, params, feats, batch["labels"], batch["loss_mask"]
+        )
+        ce = tot / jnp.maximum(den, 1.0)
+        return ce + aux, {"ce": ce, "aux": aux, "tokens": den}
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, optim: AdamW, *, microbatches: int = 1,
+                    hints=TR.NO_HINTS, grad_specs=None):
+    """``grad_specs``: optional PartitionSpec tree matching params. Without
+    it the microbatch grad-accumulation carry is replicated by sharding
+    inference, and XLA all-reduces *full fp32 gradients every microbatch*
+    (measured 30.8 TB/chip on mixtral train — EXPERIMENTS.md §Perf iter 1).
+    Constraining the carry to the FSDP×TP param sharding keeps accumulation
+    shard-local."""
+    loss_fn = make_loss_fn(cfg, hints)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def constrain_g(g):
+        if grad_specs is None:
+            return g
+        return jax.tree.map(jax.lax.with_sharding_constraint, g, grad_specs)
+
+    def train_step(state: TrainState, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+            grads = constrain_g(grads)
+        else:
+            mb = jax.tree.map(
+                lambda a: a.reshape((microbatches, a.shape[0] // microbatches)
+                                    + a.shape[1:]),
+                batch,
+            )
+            zero_g = constrain_g(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            ))
+
+            def micro(carry, b):
+                g_acc, l_acc = carry
+                (l, m), g = grad_fn(state.params, b)
+                g_acc = constrain_g(jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32) / microbatches,
+                    g_acc, g,
+                ))
+                return (g_acc, l_acc + l / microbatches), m
+
+            (grads, loss), metrics = jax.lax.scan(
+                micro, (zero_g, jnp.zeros((), jnp.float32)), mb
+            )
+            metrics = jax.tree.map(lambda a: a.mean(), metrics)
+
+        params, opt, opt_metrics = optim.update(grads, state.opt)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return TrainState(params=params, opt=opt), metrics
+
+    return train_step
+
+
+def make_prefill(cfg: ModelConfig, *, hints=TR.NO_HINTS):
+    """Full-sequence forward that also builds the KV cache; returns the
+    last-position logits (next-token) and the cache."""
+
+    def prefill(params, batch):
+        b = (batch.get("tokens", batch.get("embeds"))).shape[0]
+        s = _total_len(cfg, batch)
+        cache = TR.init_cache(cfg, b, s)
+        feats, cache, _ = TR.forward(cfg, params, batch, mode="prefill",
+                                     cache=cache, hints=hints)
+        logits = TR.lm_head(cfg, params, feats[:, -1:])
+        return logits, cache
+
+    return prefill
+
+
+def make_decode(cfg: ModelConfig, *, hints=TR.NO_HINTS):
+    def decode(params, cache, batch, pos):
+        return TR.forward(cfg, params, batch, mode="decode", cache=cache,
+                          pos=pos, hints=hints)
+
+    return decode
+
+
+def _total_len(cfg: ModelConfig, batch) -> int:
+    if cfg.frontend == "vision":
+        return batch["embeds"].shape[1] + batch["tokens"].shape[1]
+    if cfg.frontend == "audio":
+        return batch["embeds"].shape[1]
+    return batch["tokens"].shape[1]

@@ -1,0 +1,30 @@
+"""Shared test fixtures.
+
+IMPORTANT: tests must see the single real CPU device — XLA_FLAGS device
+forcing happens only inside subprocess tests (dry-run / sharding).
+"""
+
+import os
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+SRC = REPO / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def subprocess_env(device_count: int):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={device_count}"
+    env["REPRO_DEVICE_COUNT"] = str(device_count)
+    env["PYTHONPATH"] = str(SRC) + os.pathsep + env.get("PYTHONPATH", "")
+    return env

@@ -1,0 +1,119 @@
+"""Dry-run & HLO-cost tests.
+
+Sharded lowering runs in a SUBPROCESS (jax locks the host device count at
+first init; the main test process must keep seeing 1 CPU device).
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from conftest import REPO, subprocess_env
+
+DRYRUN = [sys.executable, "-m", "repro.launch.dryrun"]
+
+
+def run_dryrun(args, devices):
+    return subprocess.run(
+        DRYRUN + args, env=subprocess_env(devices), cwd=str(REPO),
+        capture_output=True, text=True, timeout=1200,
+    )
+
+
+@pytest.mark.slow
+def test_dryrun_small_mesh_train_cell():
+    r = run_dryrun(["--arch", "qwen3-0.6b", "--shape", "train_4k",
+                    "--mesh-shape", "2,4", "--no-save"], devices=8)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout and "0 failed" in r.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_small_mesh_decode_cell():
+    r = run_dryrun(["--arch", "mixtral-8x22b", "--shape", "decode_32k",
+                    "--mesh-shape", "2,4", "--no-save"], devices=8)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "bottleneck=" in r.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_multipod_axes():
+    """3-axis (pod, data, model) mesh lowers: proves the pod axis shards."""
+    r = run_dryrun(["--arch", "qwen3-0.6b", "--shape", "train_4k",
+                    "--mesh-shape", "2,2,2", "--no-save"], devices=8)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
+
+
+def test_dryrun_skips_long500k_for_full_attention():
+    from repro.configs import shape_applicable
+    ok, why = shape_applicable("deepseek-coder-33b", "long_500k")
+    assert not ok and "full attention" in why
+    ok, _ = shape_applicable("rwkv6-1.6b", "long_500k")
+    assert ok
+
+
+@pytest.mark.slow
+def test_hlo_cost_matches_cost_analysis_loop_free():
+    """hlo_cost == XLA cost_analysis on a module without loops, and applies
+    the trip-count correction on a scanned module (subprocess: multi-dev)."""
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, json
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch import hlo_cost
+mesh = jax.make_mesh((2,2), ("data","model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+def f(w1, w2, x):
+    return jnp.tanh(x @ w1) @ w2
+args = [jax.ShapeDtypeStruct((256,256), jnp.float32)]*2 + [jax.ShapeDtypeStruct((128,256), jnp.float32)]
+with mesh:
+    c = jax.jit(f, in_shardings=(NamedSharding(mesh,P(None,"model")),)*2 + (NamedSharding(mesh,P("data",None)),)).lower(*args).compile()
+ca = float(c.cost_analysis()["flops"])
+hc = hlo_cost.analyze(c.as_text(), 4).flops
+def g(ws, x):
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+    return jax.lax.scan(body, x, ws)[0]
+args2 = [jax.ShapeDtypeStruct((7,256,256), jnp.float32), jax.ShapeDtypeStruct((128,256), jnp.float32)]
+with mesh:
+    c2 = jax.jit(g, in_shardings=(NamedSharding(mesh,P(None,None,"model")), NamedSharding(mesh,P("data",None)))).lower(*args2).compile()
+hc2 = hlo_cost.analyze(c2.as_text(), 4).flops
+print(json.dumps({"ca": ca, "hc": hc, "hc2": hc2, "expected2": 7*2*128*256*256/4}))
+"""
+    r = subprocess.run([sys.executable, "-c", script], env=subprocess_env(4),
+                       cwd=str(REPO), capture_output=True, text=True,
+                       timeout=600)
+    assert r.returncode == 0, r.stderr
+    data = json.loads(r.stdout.strip().splitlines()[-1])
+    assert data["hc"] == pytest.approx(data["ca"], rel=0.01)
+    assert data["hc2"] == pytest.approx(data["expected2"], rel=0.01)
+
+
+def test_collective_ring_formulas():
+    from repro.launch.hlo_cost import _collective_chip_bytes
+    # all-reduce of X bytes over g=4: 2·X·3/4
+    assert _collective_chip_bytes("all-reduce", 100.0, 4) == pytest.approx(150.0)
+    assert _collective_chip_bytes("all-gather", 100.0, 4) == pytest.approx(75.0)
+    assert _collective_chip_bytes("reduce-scatter", 25.0, 4) == pytest.approx(75.0)
+    assert _collective_chip_bytes("collective-permute", 10.0, 4) == 10.0
+    assert _collective_chip_bytes("all-reduce", 100.0, 1) == 0.0
+
+
+def test_roofline_terms_and_bottleneck():
+    from repro.launch.roofline import Roofline
+    rl = Roofline(
+        arch="a", shape="s", mesh="m", chips=256,
+        hlo_flops_per_device=197e12,      # exactly 1s of compute
+        hlo_bytes_per_device=819e9 / 2,   # 0.5s of HBM
+        collective_bytes_per_chip=50e9 / 4,  # 0.25s of ICI
+        model_flops=197e12 * 256 * 0.5,
+        memory_per_device=8 * 2**30,
+    )
+    assert rl.bottleneck == "compute"
+    assert rl.step_time_s == pytest.approx(1.0)
+    assert rl.useful_flops_ratio == pytest.approx(0.5)
+    assert rl.mfu == pytest.approx(0.5)

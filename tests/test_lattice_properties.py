@@ -1,0 +1,219 @@
+"""Property-based tests of the paper's lattice-theoretic core (§III).
+
+Invariants (per CRDT type, via hypothesis):
+  join laws        — associative, commutative, idempotent
+  order            — x ⊑ x⊔y, canonical order x ⊑ y ⇔ x⊔y = y
+  mutator          — every mutator is an inflation x ⊑ m(x)
+  δ-mutator        — m(x) = x ⊔ mᵟ(x)   (Definition, §II)
+  Δ correctness    — Δ(a,b) ⊔ b = a ⊔ b
+  Δ minimality     — c ⊔ b = a ⊔ b ⇒ Δ(a,b) ⊑ c  (optimal deltas, §III-B)
+  decomposition    — ⇓x joins to x; irredundant (dropping any element
+                     strictly shrinks the join)  (Definitions 2-3)
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    GCounter, GMap, GSet, LWWMap, LexCounter, PNCounter,
+    decompose_dense, join_all,
+)
+from repro.core.lattice import MapLattice
+from repro.core import value_lattices as vl
+
+U = 8  # universe size for property tests
+
+# -- state strategies ---------------------------------------------------------
+
+counter_states = st.lists(
+    st.integers(0, 6), min_size=U, max_size=U
+).map(lambda v: jnp.asarray(v, jnp.int32))
+
+set_states = st.lists(
+    st.booleans(), min_size=U, max_size=U
+).map(lambda v: jnp.asarray(v, jnp.bool_))
+
+
+@st.composite
+def lex_states(draw):
+    ts = draw(st.lists(st.integers(0, 4), min_size=U, max_size=U))
+    va = draw(st.lists(st.integers(0, 4), min_size=U, max_size=U))
+    # bottom slots are (0, 0); force val 0 where ts == 0 for canonical states
+    va = [v if t > 0 else 0 for t, v in zip(ts, va)]
+    return (jnp.asarray(ts, jnp.int32), jnp.asarray(va, jnp.int32))
+
+
+LATTICES = {
+    "gcounter": (MapLattice(U, vl.max_int(), "gc").build(), counter_states),
+    "gset": (MapLattice(U, vl.or_bool(), "gs").build(), set_states),
+    "lww": (MapLattice(U, vl.lex_pair(), "lw").build(), lex_states()),
+}
+
+
+def eq(lat, a, b):
+    return bool(lat.leq(a, b)) and bool(lat.leq(b, a))
+
+
+@pytest.mark.parametrize("name", list(LATTICES))
+class TestLatticeLaws:
+    @settings(max_examples=40, deadline=None)
+    @given(data=st.data())
+    def test_join_laws(self, name, data):
+        lat, strat = LATTICES[name]
+        a, b, c = (data.draw(strat) for _ in range(3))
+        assert eq(lat, lat.join(a, b), lat.join(b, a))
+        assert eq(lat, lat.join(lat.join(a, b), c), lat.join(a, lat.join(b, c)))
+        assert eq(lat, lat.join(a, a), a)
+        assert eq(lat, lat.join(a, lat.bottom()), a)
+
+    @settings(max_examples=40, deadline=None)
+    @given(data=st.data())
+    def test_canonical_order(self, name, data):
+        lat, strat = LATTICES[name]
+        a, b = data.draw(strat), data.draw(strat)
+        j = lat.join(a, b)
+        assert bool(lat.leq(a, j)) and bool(lat.leq(b, j))
+        # x ⊑ y ⇔ x ⊔ y = y
+        assert bool(lat.leq(a, b)) == eq(lat, lat.join(a, b), b)
+
+    @settings(max_examples=40, deadline=None)
+    @given(data=st.data())
+    def test_delta_correct_and_minimal(self, name, data):
+        lat, strat = LATTICES[name]
+        a, b = data.draw(strat), data.draw(strat)
+        d = lat.delta(a, b)
+        # Δ(a,b) ⊔ b = a ⊔ b
+        assert eq(lat, lat.join(d, b), lat.join(a, b))
+        # minimality vs any c built from a subset of ⇓a that still works:
+        c = data.draw(strat)
+        if eq(lat, lat.join(c, b), lat.join(a, b)):
+            assert bool(lat.leq(d, c)), "Δ must be below any equivalent c"
+
+    @settings(max_examples=40, deadline=None)
+    @given(data=st.data())
+    def test_size_counts_irreducibles(self, name, data):
+        lat, strat = LATTICES[name]
+        a = data.draw(strat)
+        mask = lat.irreducible_mask(a)
+        if isinstance(mask, tuple):
+            mask = mask[0]
+        assert int(lat.size(a)) == int(jnp.sum(mask))
+
+
+# -- decomposition (Definition 2/3, Proposition 2) ---------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_decomposition_joins_to_x_and_irredundant(data):
+    lat_map = MapLattice(U, vl.max_int(), "gc")
+    lat = lat_map.build()
+    x = data.draw(counter_states)
+    stack, mask = decompose_dense(lat_map, x)
+    # ⊔ ⇓x = x
+    joined = join_all(lat, [stack[i] for i in range(U)], mask=np.asarray(mask))
+    assert eq(lat, joined, x)
+    # irredundancy: dropping any element strictly shrinks the join
+    idxs = [i for i in range(U) if bool(mask[i])]
+    for drop in idxs:
+        sub = join_all(lat, [stack[i] for i in idxs if i != drop])
+        assert not eq(lat, sub, x)
+
+
+# -- mutators / δ-mutators -----------------------------------------------------
+
+def test_gcounter_mutators():
+    gc = GCounter(num_replicas=4)
+    lat = gc.lattice
+    p = jnp.asarray([3, 0, 5, 1], jnp.int32)
+    m = gc.inc(p, 2)
+    assert bool(lat.leq(p, m))                       # inflation
+    d = gc.inc_delta(p, 2)
+    assert eq(lat, lat.join(p, d), m)                # m(x) = x ⊔ mᵟ(x)
+    assert int(lat.size(d)) == 1                     # single irreducible
+    assert int(gc.value(m)) == 10
+
+
+def test_gset_optimal_add_delta():
+    gs = GSet(universe=6)
+    lat = gs.lattice
+    s = jnp.asarray([1, 0, 1, 0, 0, 0], jnp.bool_)
+    # adding a present element -> ⊥ (the paper's optimal addᵟ, Fig 2b)
+    d = gs.add_delta(s, 0)
+    assert bool(lat.is_bottom(d))
+    d2 = gs.add_delta(s, 3)
+    assert int(lat.size(d2)) == 1
+    assert eq(lat, lat.join(s, d2), gs.add(s, 3))
+
+
+def test_gmap_bump_delta_optimal():
+    gm = GMap(num_keys=5)
+    lat = gm.lattice
+    m = jnp.asarray([2, 0, 1, 0, 4], jnp.int32)
+    mask = jnp.asarray([1, 1, 0, 0, 0], jnp.bool_)
+    d = gm.bump_delta(m, mask)
+    assert int(lat.size(d)) == 2
+    assert eq(lat, lat.join(m, d), gm.bump(m, mask))
+
+
+def test_pncounter():
+    pn = PNCounter(num_replicas=3)
+    lat = pn.lattice
+    s = (jnp.zeros(3, jnp.int32), jnp.zeros(3, jnp.int32))
+    s = pn.inc(s, 0)
+    s = pn.inc(s, 1)
+    s = pn.dec(s, 2)
+    assert int(pn.value(s)) == 1
+    d = pn.inc_delta(s, 0)
+    assert eq(lat, lat.join(s, d), pn.inc(s, 0))
+    assert int(lat.size(d)) == 1
+
+
+def test_lww_map_last_writer_wins():
+    lm = LWWMap(num_keys=4)
+    lat = lm.lattice
+    s = lat.bottom()
+    s = lm.put(s, 1, ts=5, val=10)
+    s2 = lm.put(lat.bottom(), 1, ts=7, val=20)
+    j = lat.join(s, s2)
+    assert int(j[0][1]) == 7 and int(j[1][1]) == 20
+    # delta of older write against newer state is bottom
+    d = lat.delta(s, j)
+    assert bool(lat.is_bottom(d))
+
+
+def test_lexcounter_single_writer():
+    lc = LexCounter(num_replicas=2)
+    lat = lc.lattice
+    s = lat.bottom()
+    s = lc.set_value(s, 0, 42)
+    s = lc.set_value(s, 0, 17)    # arbitrary change, version bump
+    assert int(s[1][0]) == 17 and int(s[0][0]) == 2
+    d = lc.set_value_delta(s, 1, 5)
+    assert eq(lat, lat.join(s, d), lc.set_value(s, 1, 5))
+
+
+def test_linear_sum_construct():
+    """Appendix B ⊕: every high element is above every low element; joins
+    across sides absorb the low side; Δ respects the order."""
+    import jax.numpy as jnp
+    from repro.core.lattice import linear_sum
+    low = MapLattice(4, vl.max_int(), "lo").build()
+    high = MapLattice(4, vl.max_int(), "hi").build()
+    L = linear_sum("sum", low, high, None)
+    bot = L.bottom()
+    x_low = (jnp.asarray(0), jnp.asarray([1, 0, 2, 0], jnp.int32),
+             jnp.zeros(4, jnp.int32))
+    x_high = (jnp.asarray(1), jnp.zeros(4, jnp.int32),
+              jnp.asarray([0, 3, 0, 0], jnp.int32))
+    assert bool(L.leq(bot, x_low)) and bool(L.leq(x_low, x_high))
+    assert not bool(L.leq(x_high, x_low))
+    j = L.join(x_low, x_high)
+    assert int(j[0]) == 1
+    assert bool(L.leq(j, x_high)) and bool(L.leq(x_high, j))
+    d = L.delta(x_high, x_low)
+    assert bool(L.leq(L.join(d, x_low), L.join(x_high, x_low)))
+    assert bool(L.leq(L.join(x_high, x_low), L.join(d, x_low)))
+    assert int(L.size(x_low)) == 2 and int(L.size(x_high)) == 1
+    assert bool(L.is_bottom(bot)) and not bool(L.is_bottom(x_high))

@@ -1,0 +1,221 @@
+"""Model-correctness tests beyond smoke level:
+
+* chunked/online-softmax attention == naive full-matrix attention
+* sliding-window chunked attention == naive windowed attention
+* decode-with-cache == prefill logits (step-by-step consistency)
+* RG-LRU associative scan == sequential reference recurrence
+* RWKV time-mix scan == per-step reference
+* MoE sort-based dispatch == dense masked reference (no drops)
+* chunked CE == full-softmax CE
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rglru as R
+from repro.models import transformer as TR
+from repro.models.config import MoEConfig
+from repro.models.params import init_tree
+from repro.train.losses import chunked_cross_entropy
+
+
+def naive_attention(q, k, v, scale, window=None, softcap=None):
+    b, tq, h, d = q.shape
+    hkv = k.shape[2]
+    r = h // hkv
+    qg = q.reshape(b, tq, hkv, r, d)
+    s = jnp.einsum("bqhrd,bkhd->bhrqk", qg, k).astype(jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(tq)
+    kpos = jnp.arange(k.shape[1])
+    mask = kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > (qpos[:, None] - window)
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhrqk,bkhd->bhrqd", p.astype(v.dtype), v)
+    return jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(b, tq, h, d)
+
+
+@pytest.mark.parametrize("window", [None, 16])
+@pytest.mark.parametrize("softcap", [None, 30.0])
+@pytest.mark.parametrize("unroll_q", [False, True])
+def test_chunked_attention_vs_naive(window, softcap, unroll_q, rng):
+    b, t, h, hkv, d = 2, 128, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(b, t, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, t, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, t, hkv, d)), jnp.float32)
+    pos = jnp.arange(t)
+    out = L.chunked_attention(
+        q, k, v, q_positions=pos, k_positions=pos, scale=d ** -0.5,
+        window=window, softcap=softcap, q_chunk=32, kv_chunk=32,
+        unroll_q=unroll_q)
+    expect = naive_attention(q, k, v, d ** -0.5, window, softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "gemma2-27b", "mixtral-8x22b",
+                                  "recurrentgemma-2b", "rwkv6-1.6b",
+                                  "musicgen-large"])
+def test_decode_matches_prefill(arch, rng):
+    """Prefill S tokens, then decode token-by-token from a fresh cache fed
+    the same tokens — last-token logits must agree.
+
+    MoE archs: capacity drops affect batched (train/prefill) routing but
+    never T=1 decode — raise the capacity factor so routing is drop-free
+    and the two paths are comparable."""
+    import dataclasses
+    cfg = get_smoke_config(arch)
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=4.0))
+    params = init_tree(TR.param_defs(cfg), seed=0)
+    b, s = 2, 16
+    if cfg.frontend == "audio":
+        embeds = jnp.asarray(rng.normal(size=(b, s, cfg.d_model)), jnp.bfloat16)
+        batch = {"embeds": embeds}
+    else:
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+        batch = {"tokens": toks}
+
+    feats, _ = TR.forward(cfg, params, batch, mode="train")
+    full_logits = TR.lm_head(cfg, params, feats)
+
+    cache = TR.init_cache(cfg, b, s)
+    decode = jax.jit(lambda p, c, bt, pos: TR.forward(
+        cfg, p, bt, mode="decode", cache=c, pos=pos))
+    for i in range(s):
+        if cfg.frontend == "audio":
+            bt = {"embeds": embeds[:, i:i + 1]}
+        else:
+            bt = {"tokens": toks[:, i:i + 1]}
+        logits, cache = decode(params, cache, bt, jnp.asarray(i, jnp.int32))
+
+    got = np.asarray(logits[:, 0].astype(jnp.float32))
+    want = np.asarray(full_logits[:, -1].astype(jnp.float32))
+    np.testing.assert_allclose(got, want, rtol=0.15, atol=0.15)  # bf16 path
+
+
+def test_rglru_scan_vs_sequential(rng):
+    b, t, r_ = 2, 32, 16
+    h = 4
+    p = {
+        "w_i": jnp.asarray(rng.normal(size=(h, r_ // h, r_ // h)) * 0.3, jnp.float32),
+        "w_a": jnp.asarray(rng.normal(size=(h, r_ // h, r_ // h)) * 0.3, jnp.float32),
+        "b_i": jnp.zeros((r_,), jnp.float32),
+        "b_a": jnp.zeros((r_,), jnp.float32),
+        "lam": jnp.asarray(rng.normal(size=(r_,)), jnp.float32),
+    }
+    x = jnp.asarray(rng.normal(size=(b, t, r_)), jnp.float32)
+    h_scan = R.rglru_scan(p, x)
+    a, gated = R._gates(p, x)
+    hs = []
+    hprev = jnp.zeros((b, r_), jnp.float32)
+    for i in range(t):
+        hprev = a[:, i] * hprev + gated[:, i]
+        hs.append(hprev)
+    h_seq = jnp.stack(hs, axis=1)
+    np.testing.assert_allclose(np.asarray(h_scan), np.asarray(h_seq),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_moe_matches_dense_reference(rng):
+    """With generous capacity (no drops), sort-based dispatch equals the
+    dense 'every expert on every token, gate-weighted' reference."""
+    g, t, d, e, k, f = 2, 16, 8, 4, 2, 12
+    cfg = MoEConfig(num_experts=e, top_k=k, d_ff_expert=f, capacity_factor=4.0)
+    x = jnp.asarray(rng.normal(size=(g, t, d)), jnp.float32)
+    wr = jnp.asarray(rng.normal(size=(d, e)), jnp.float32)
+    wg = jnp.asarray(rng.normal(size=(e, d, f)) * 0.2, jnp.float32)
+    wu = jnp.asarray(rng.normal(size=(e, d, f)) * 0.2, jnp.float32)
+    wd = jnp.asarray(rng.normal(size=(e, f, d)) * 0.2, jnp.float32)
+    out, mm = M.moe_ffn(cfg, x, wr, wg, wu, wd)
+    assert float(mm.dropped_frac) == 0.0
+
+    probs = jax.nn.softmax(jnp.einsum("gtd,de->gte", x, wr), axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)
+    gate = gate / gate.sum(-1, keepdims=True)
+    a = jnp.einsum("gtd,edf->gtef", x, wg)
+    bu = jnp.einsum("gtd,edf->gtef", x, wu)
+    ye = jnp.einsum("gtef,efd->gted", jax.nn.silu(a) * bu, wd)
+    dense = jnp.zeros_like(x)
+    for kk in range(k):
+        w_k = gate[..., kk][..., None]
+        sel = jnp.take_along_axis(
+            ye, eidx[..., kk][..., None, None].repeat(d, -1), axis=2)[:, :, 0]
+        dense = dense + w_k * sel
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dense),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_capacity_drops_counted(rng):
+    g, t, d, e, k, f = 1, 32, 8, 4, 2, 12
+    cfg = MoEConfig(num_experts=e, top_k=k, d_ff_expert=f, capacity_factor=0.25)
+    x = jnp.asarray(rng.normal(size=(g, t, d)), jnp.float32)
+    wr = jnp.asarray(rng.normal(size=(d, e)), jnp.float32)
+    wg = wu = jnp.asarray(rng.normal(size=(e, d, f)) * 0.2, jnp.float32)
+    wd = jnp.asarray(rng.normal(size=(e, f, d)) * 0.2, jnp.float32)
+    out, mm = M.moe_ffn(cfg, x, wr, wg, wu, wd)
+    assert float(mm.dropped_frac) > 0.0
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_chunked_ce_matches_full(rng):
+    cfg = get_smoke_config("deepseek-coder-33b")
+    params = init_tree(TR.param_defs(cfg), seed=0)
+    b, s = 2, 64
+    feats = jnp.asarray(rng.normal(size=(b, s, cfg.d_model)), jnp.bfloat16)
+    labels = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    mask = jnp.asarray(rng.integers(0, 2, (b, s)), jnp.bfloat16)
+    tot, den = chunked_cross_entropy(cfg, params, feats, labels, mask, chunk=16)
+    logits = TR.lm_head(cfg, params, feats).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    want = jnp.sum((lse - gold) * mask.astype(jnp.float32))
+    np.testing.assert_allclose(float(tot), float(want), rtol=1e-3)
+    assert float(den) == float(mask.astype(jnp.float32).sum())
+
+
+def test_ring_cache_decode_positions(rng):
+    """SWA ring cache: after wrapping, only the last `window` positions are
+    attendable and logits stay finite."""
+    cfg = get_smoke_config("mixtral-8x22b")   # window 16
+    params = init_tree(TR.param_defs(cfg), seed=0)
+    b = 2
+    cache = TR.init_cache(cfg, b, cfg.window)
+    decode = jax.jit(lambda p, c, bt, pos: TR.forward(
+        cfg, p, bt, mode="decode", cache=c, pos=pos))
+    for i in range(cfg.window + 5):   # wrap around
+        bt = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, 1)), jnp.int32)}
+        logits, cache = decode(params, cache, bt, jnp.asarray(i, jnp.int32))
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    kpos = np.asarray(jax.tree.leaves({"k": cache["blocks"][0]["kpos"]})[0])
+    assert kpos.max() == cfg.window + 4
+
+
+def test_wkv_chunked_matches_sequential(rng):
+    """Chunked-parallel WKV (rwkv hillclimb, §Perf iter 6) == sequential
+    recurrence, including adversarially strong decay."""
+    from repro.models import rwkv as W
+    b, t, h, k = 2, 128, 4, 16
+    rf = jnp.asarray(rng.normal(size=(b, t, h, k)), jnp.float32)
+    kf = jnp.asarray(rng.normal(size=(b, t, h, k)), jnp.float32)
+    vf = jnp.asarray(rng.normal(size=(b, t, h, k)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(h, k)), jnp.float32)
+    s0 = jnp.asarray(rng.normal(size=(b, h, k, k)), jnp.float32)
+    for lo, hi in ((0.2, 0.999), (1e-6, 0.05)):
+        w = jnp.asarray(rng.uniform(lo, hi, size=(b, t, h, k)), jnp.float32)
+        o_seq, s_seq = W._wkv_sequential(rf, kf, vf, w, u, s0)
+        for c in (16, 32):
+            o_ch, s_ch = W._wkv_chunked(rf, kf, vf, w, u, s0, c)
+            np.testing.assert_allclose(np.asarray(o_ch), np.asarray(o_seq),
+                                       rtol=2e-4, atol=2e-4)
+            np.testing.assert_allclose(np.asarray(s_ch), np.asarray(s_seq),
+                                       rtol=2e-4, atol=2e-4)

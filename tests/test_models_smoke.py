@@ -1,0 +1,126 @@
+"""Per-architecture smoke tests (deliverable f): reduced config of the same
+family, one forward/train step on CPU, asserting shapes + finiteness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config, SHAPES, input_specs
+from repro.models import transformer as TR
+from repro.models.params import init_tree
+from repro.optim import AdamW, constant
+from repro.train import steps as ST
+
+
+def make_batch(cfg, b, s, rng, train=True):
+    batch = {}
+    f = cfg.frontend_len if cfg.frontend == "vision" else 0
+    if cfg.frontend == "audio":
+        batch["embeds"] = jnp.asarray(rng.normal(size=(b, s, cfg.d_model)), jnp.bfloat16)
+    elif cfg.frontend == "vision":
+        batch["embeds"] = jnp.asarray(rng.normal(size=(b, f, cfg.d_model)), jnp.bfloat16)
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, s - f)), jnp.int32)
+    else:
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    if train:
+        batch["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+        batch["loss_mask"] = jnp.ones((b, s), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch, rng):
+    cfg = get_smoke_config(arch)
+    params = init_tree(TR.param_defs(cfg), seed=0)
+    b, s = 2, 64
+    batch = make_batch(cfg, b, s, rng, train=False)
+    feats, aux = jax.jit(
+        lambda p, bt: TR.forward(cfg, p, bt, mode="train"))(params, batch)
+    assert feats.shape == (b, s, cfg.d_model)
+    logits = TR.lm_head(cfg, params, feats[:, :8])
+    assert logits.shape == (b, 8, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step_no_nans(arch, rng):
+    cfg = get_smoke_config(arch)
+    params = init_tree(TR.param_defs(cfg), seed=0)
+    optim = AdamW(lr=constant(1e-3))
+    state = ST.init_train_state(cfg, optim, params)
+    step = jax.jit(ST.make_train_step(cfg, optim))
+    batch = make_batch(cfg, 2, 64, rng)
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed
+    l0 = jax.tree.leaves(state.params)[0]
+    assert bool(jnp.isfinite(l0.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_steps_advance(arch, rng):
+    cfg = get_smoke_config(arch)
+    params = init_tree(TR.param_defs(cfg), seed=0)
+    b, cache_len = 2, 32
+    cache = TR.init_cache(cfg, b, cache_len)
+    decode = jax.jit(
+        lambda p, c, bt, pos: TR.forward(cfg, p, bt, mode="decode",
+                                         cache=c, pos=pos))
+    for pos in range(3):
+        if cfg.frontend == "audio":
+            bt = {"embeds": jnp.asarray(
+                rng.normal(size=(b, 1, cfg.d_model)), jnp.bfloat16)}
+        else:
+            bt = {"tokens": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (b, 1)), jnp.int32)}
+        logits, cache = decode(params, cache, bt, jnp.asarray(pos, jnp.int32))
+        assert logits.shape == (b, 1, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    """The exact published dims from the assignment table."""
+    cfg = get_config(arch)
+    expected = {
+        "deepseek-coder-33b": (62, 7168, 56, 8, 19200, 32256),
+        "gemma2-27b": (46, 4608, 32, 16, 36864, 256000),
+        "qwen3-0.6b": (28, 1024, 16, 8, 3072, 151936),
+        "qwen2.5-14b": (48, 5120, 40, 8, 13824, 152064),
+        "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "rwkv6-1.6b": (24, 2048, 32, 32, 7168, 65536),
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected
+    # MoE extras
+    if arch == "mixtral-8x22b":
+        assert cfg.moe.num_experts == 8 and cfg.moe.top_k == 2
+    if arch == "qwen3-moe-30b-a3b":
+        assert cfg.moe.num_experts == 128 and cfg.moe.top_k == 8
+
+
+def test_input_specs_cover_all_cells():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            specs = input_specs(cfg, shape)
+            leaves = jax.tree.leaves(specs["batch"])
+            assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+            if shape.mode != "decode":
+                tot = (specs["batch"].get("tokens").shape[1]
+                       if "tokens" in specs["batch"] else 0)
+                if cfg.frontend == "vision":
+                    tot += specs["batch"]["embeds"].shape[1]
+                elif cfg.frontend == "audio":
+                    tot = specs["batch"]["embeds"].shape[1]
+                assert tot == shape.seq_len

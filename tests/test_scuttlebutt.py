@@ -1,0 +1,81 @@
+"""Scuttlebutt variant tests (§V-C): convergence, GCounter non-compression,
+safe-delete memory reclamation, quadratic metadata."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sync import scuttlebutt, topology
+
+N, T, Q = 8, 15, 10
+
+
+def gset_codec(n, rounds):
+    def range_join(lo, hi):
+        s_idx = jnp.arange(rounds)
+        mask = (s_idx >= lo[..., :, None]) & (s_idx < hi[..., :, None])
+        return mask.reshape(lo.shape[:-1] + (n * rounds,))
+
+    return scuttlebutt.DeltaCodec(
+        range_join=range_join,
+        delta_elems=jnp.ones((n,), jnp.int32),
+        state_size=lambda kv: jnp.sum(kv, axis=-1),
+    )
+
+
+def gcounter_codec(n):
+    return scuttlebutt.DeltaCodec(
+        range_join=lambda lo, hi: jnp.where(hi > lo, hi, 0),
+        delta_elems=jnp.ones((n,), jnp.int32),
+        state_size=lambda kv: jnp.sum(kv > 0, axis=-1),
+    )
+
+
+def test_converges_gset():
+    topo = topology.partial_mesh(N, 4)
+    res = scuttlebutt.simulate(gset_codec(N, T), topo,
+                               active_rounds=T, quiet_rounds=Q)
+    assert (res.final_kv == res.final_kv[0]).all()
+    assert res.final_kv[0].sum() == N * T
+    assert res.final_x[0].sum() == N * T
+
+
+def test_converges_gcounter():
+    topo = topology.tree(N)
+    res = scuttlebutt.simulate(gcounter_codec(N), topo,
+                               active_rounds=T, quiet_rounds=Q)
+    assert (res.final_kv == res.final_kv[0]).all()
+    assert res.final_x[0].sum() == N * T
+
+
+def test_gcounter_no_join_compression():
+    """§V-C a: Scuttlebutt ships every (i, s) delta individually. Raising the
+    op rate per sync interval inflates its GCounter transmission linearly,
+    while delta-based joins compress the same updates into one entry."""
+    topo = topology.partial_mesh(N, 4)
+    res1 = scuttlebutt.simulate(gcounter_codec(N), topo,
+                                active_rounds=T, quiet_rounds=Q)
+    # 3 ops per sync: emulate with 3T rounds of ops then syncs — the codec
+    # counts per-seq deltas, so tx scales ~3x
+    res3 = scuttlebutt.simulate(gcounter_codec(N), topo,
+                                active_rounds=3 * T, quiet_rounds=Q)
+    assert res3.total_tx > 2.5 * res1.total_tx
+
+
+def test_safe_delete_bounds_memory():
+    """With seen-map gossip, retained deltas are garbage-collected; memory
+    stays bounded instead of growing with total updates."""
+    topo = topology.partial_mesh(N, 4)
+    res = scuttlebutt.simulate(gset_codec(N, 40), topo,
+                               active_rounds=40, quiet_rounds=12)
+    mem = res.mem.astype(float)
+    state_only = N * np.arange(1, 53).clip(max=40) * N  # upper bound of state
+    # after quiescence, retained deltas drain to zero: memory == state size
+    assert mem[-1] == N * (N * 40)
+
+
+def test_metadata_quadratic():
+    for n in (8, 16, 32):
+        sb = scuttlebutt.metadata_bytes_per_node(n, degree=4)
+        db = scuttlebutt.delta_metadata_bytes_per_node(degree=4)
+        assert sb == n * n * 4 * 20
+        assert db == 80

@@ -1,0 +1,190 @@
+"""Sync-algorithm tests: convergence + the paper's headline orderings (§V).
+
+Claims checked (mesh = cyclic topology, tree = acyclic):
+  1. every algorithm converges to the same state (strong eventual consistency)
+  2. mesh: BP+RR ≤ RR < BP ≈ classic ≤ state-based transmission (GSet)
+  3. tree: BP alone reaches the BP+RR optimum (no cycles ⇒ RR moot)
+  4. classic/BP buffer memory overhead > BP+RR (Fig 10)
+  5. leave-one-out send: prefix/suffix == naive (beyond-paper optimization)
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GCounter, GMap, GSet
+from repro.sync import ALGORITHMS, converged, simulate, topology
+
+
+def gset_ops(n, rounds):
+    def op_fn(x, t):
+        ids = jnp.arange(n) * rounds + jnp.minimum(t, rounds - 1)
+        d = jnp.zeros((n, n * rounds), jnp.bool_)
+        return d.at[jnp.arange(n), ids].set(True)
+    return op_fn, GSet(universe=n * rounds).lattice
+
+
+def gcounter_ops(n):
+    def op_fn(x, t):
+        d = jnp.zeros((n, n), jnp.int32)
+        idx = jnp.arange(n)
+        return d.at[idx, idx].set(x[idx, idx] + 1)
+    return op_fn, GCounter(n).lattice
+
+
+N, T, Q = 9, 12, 12
+
+
+@pytest.mark.parametrize("algo", ALGORITHMS)
+@pytest.mark.parametrize("topo_name", ["mesh", "tree"])
+def test_convergence_all_algorithms(algo, topo_name):
+    topo = topology.by_name(topo_name, N)
+    op_fn, lat = gset_ops(N, T)
+    res = simulate(algo, lat, topo, op_fn, active_rounds=T, quiet_rounds=Q)
+    assert converged(lat, res.final_x), f"{algo} did not converge"
+    # all elements present at every node
+    assert int(res.final_x[0].sum()) == N * T
+
+
+@pytest.mark.parametrize("topo_name", ["mesh", "tree"])
+def test_gcounter_convergence_and_value(topo_name):
+    topo = topology.by_name(topo_name, N)
+    op_fn, lat = gcounter_ops(N)
+    for algo in ALGORITHMS:
+        res = simulate(algo, lat, topo, op_fn, active_rounds=T, quiet_rounds=Q)
+        assert converged(lat, res.final_x)
+        assert int(res.final_x[0].sum()) == N * T
+
+
+def _tx(algo, topo, op_builder):
+    op_fn, lat = op_builder()
+    return simulate(algo, lat, topo, op_fn, active_rounds=T,
+                    quiet_rounds=Q).total_tx
+
+
+def test_paper_ordering_mesh():
+    """Fig 1/7: on cyclic topologies classic ≈ state-based; RR >> classic."""
+    topo = topology.partial_mesh(N, 4)
+    build = lambda: gset_ops(N, T)
+    tx = {a: _tx(a, topo, build) for a in ALGORITHMS}
+    assert tx["bprr"] <= tx["rr"] < tx["classic"]
+    assert tx["bprr"] <= tx["bp"] <= tx["state"]
+    # the paper's anomaly: classic delta is NO better than ~half state-based
+    # (no real improvement), while BP+RR is several times better
+    assert tx["classic"] > 0.4 * tx["state"]
+    assert tx["bprr"] * 3 < tx["classic"]
+
+
+def test_paper_ordering_tree():
+    """§V-C: in acyclic topologies BP alone attains the best result."""
+    topo = topology.tree(N)
+    build = lambda: gset_ops(N, T)
+    tx = {a: _tx(a, topo, build) for a in ALGORITHMS}
+    assert tx["bp"] == tx["bprr"], "BP should suffice on trees"
+    assert tx["bp"] < tx["classic"]
+    assert tx["classic"] < tx["state"]
+
+
+def test_memory_overhead_ordering():
+    """Fig 10: classic buffers ≥ BP+RR buffers; state-based is optimal."""
+    topo = topology.partial_mesh(N, 4)
+    op_fn, lat = gset_ops(N, T)
+    mem = {}
+    for algo in ALGORITHMS:
+        res = simulate(algo, lat, topo, op_fn, active_rounds=T, quiet_rounds=Q)
+        mem[algo] = res.avg_mem
+    assert mem["state"] <= mem["bprr"] + 1e-9
+    assert mem["bprr"] <= mem["classic"]
+    assert mem["bprr"] <= mem["bp"]
+
+
+def test_cpu_overhead_ordering():
+    """Fig 12: classic processes far more elements than BP+RR."""
+    topo = topology.partial_mesh(N, 4)
+    op_fn, lat = gset_ops(N, T)
+    cpu = {}
+    for algo in ("classic", "bprr"):
+        res = simulate(algo, lat, topo, op_fn, active_rounds=T, quiet_rounds=Q)
+        cpu[algo] = res.total_cpu
+    assert cpu["bprr"] * 2 < cpu["classic"]
+
+
+def test_loo_prefix_equals_naive():
+    topo = topology.partial_mesh(N, 4)
+    op_fn, lat = gset_ops(N, T)
+    a = simulate("bprr", lat, topo, op_fn, active_rounds=T, quiet_rounds=Q,
+                 loo="prefix")
+    b = simulate("bprr", lat, topo, op_fn, active_rounds=T, quiet_rounds=Q,
+                 loo="naive")
+    assert a.total_tx == b.total_tx
+    assert np.array_equal(a.final_x, b.final_x)
+
+
+def test_gmap_like_gcounter_at_100pct():
+    """Table I note: GCounter ≡ GMap K=100% (same entries bumped each tick)."""
+    n = 6
+    gm = GMap(num_keys=n)
+    lat = gm.lattice
+
+    def op_fn(x, t):
+        mask = jnp.eye(n, dtype=jnp.bool_)
+        return jnp.where(mask, x + 1, 0).astype(x.dtype)
+
+    topo = topology.partial_mesh(n, 4)
+    res = simulate("bprr", lat, topo, op_fn, active_rounds=8, quiet_rounds=8)
+    op2, lat2 = gcounter_ops(n)
+    res2 = simulate("bprr", lat2, topo, op2, active_rounds=8, quiet_rounds=8)
+    assert res.total_tx == res2.total_tx
+    assert converged(lat, res.final_x)
+
+
+def test_duplicated_messages_tolerated():
+    """State-based CRDT guarantee: duplication cannot break convergence —
+    modeled by an extra sync round with no ops (idempotent re-joins)."""
+    topo = topology.partial_mesh(N, 4)
+    op_fn, lat = gset_ops(N, T)
+    r1 = simulate("bprr", lat, topo, op_fn, active_rounds=T, quiet_rounds=Q)
+    r2 = simulate("bprr", lat, topo, op_fn, active_rounds=T, quiet_rounds=2 * Q)
+    assert np.array_equal(r1.final_x, r2.final_x)
+
+
+from hypothesis import given, settings, strategies as st
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(5, 12),
+       algo=st.sampled_from(ALGORITHMS))
+def test_random_topology_convergence_property(seed, n, algo):
+    """Strong eventual consistency on random connected topologies with
+    random op schedules — the paper's core guarantee, property-tested."""
+    import numpy as _np
+    rng = _np.random.default_rng(seed)
+    # random connected graph: spanning tree + extra edges
+    adj = _np.zeros((n, n), bool)
+    order = rng.permutation(n)
+    for i in range(1, n):
+        j = order[rng.integers(0, i)]
+        adj[order[i], j] = adj[j, order[i]] = True
+    for _ in range(n // 2):
+        a, b = rng.integers(0, n, 2)
+        if a != b:
+            adj[a, b] = adj[b, a] = True
+    topo = topology._from_adj(f"rand{seed % 1000}", adj)
+
+    rounds = 6
+    # random sparse op schedule: each node adds its unique element on a
+    # random subset of rounds
+    active = rng.integers(0, 2, (rounds, n)).astype(bool)
+    active_j = jnp.asarray(active)
+    lat = GSet(universe=n * rounds).lattice
+
+    def op_fn(x, t):
+        ids = jnp.arange(n) * rounds + jnp.minimum(t, rounds - 1)
+        mask = active_j[jnp.minimum(t, rounds - 1)]
+        d = jnp.zeros((n, n * rounds), jnp.bool_)
+        return d.at[jnp.arange(n), ids].set(mask)
+
+    res = simulate(algo, lat, topo, op_fn, active_rounds=rounds,
+                   quiet_rounds=2 * n)
+    assert converged(lat, res.final_x), f"{algo} failed on seed {seed}"
+    assert int(res.final_x[0].sum()) == int(active.sum())
