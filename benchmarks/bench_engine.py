@@ -1,0 +1,167 @@
+"""Engine A/B benchmark: reference jnp loop vs fused Pallas sync-round
+engine (DESIGN.md §11), across algorithm × universe size × lattice kind.
+
+Two result classes, kept deliberately separate:
+
+* **Analytic HBM-equivalent element passes** — the roofline quantity the
+  fused engine optimizes. Both engines' receive phases are memory-bound
+  elementwise folds, so per-round cost ≈ (passes over the [N, U] state) ×
+  (N·U elements). The model below counts array traversals (reads + writes
+  of universe-sized operands) assuming perfect fusion *inside* each jnp op
+  but none across ops — the XLA-vs-Pallas boundary this engine moves. This
+  is what the acceptance check validates: fused < reference for P ≥ 3.
+
+* **Wall-clock on this host** — informative only. Off-TPU the Pallas
+  kernels run in *interpret mode* (pure-Python grid loop), so CPU timings
+  under-sell the fused engine; TPU perf claims come from the pass model +
+  roofline methodology (EXPERIMENTS.md §Perf), matching the repo's stance
+  for the other kernels.
+
+Every cell also cross-checks engine equivalence (final states + total tx).
+Emits ``benchmarks/results/BENCH_engine.json``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BitGSet
+from repro.sync import ENGINES, converged, simulate
+
+from benchmarks import common as C
+
+
+# -- analytic HBM pass model --------------------------------------------------
+
+def reference_receive_passes(p: int, buffered: bool = True) -> int:
+    """[N, U]-array traversals per round, reference engine receive loop.
+
+    Per neighbor slot: gather + ⊥-mask (read d_all slice, write d = 2);
+    Δ-extraction / inflation mask (read d, read x, write stored = 3);
+    state join (read x, read d, write x = 3); buffer merge (read buf, read
+    stored, write buf = 3). State-based sync drops the stored/buffer terms.
+    """
+    per_slot = 2 + 3 + 3 + (3 if buffered else 0)
+    return per_slot * p
+
+
+def fused_receive_passes(p: int, buffered: bool = True) -> int:
+    """Same count for the fused engine: one gather pass over all P slots
+    (read P + write P); ONE round_recv kernel pass (read P slots + x, write
+    x' + P stored — the state tile never leaves VMEM between slots); buffer
+    assembly from the stored stack (read P, write P)."""
+    gather = 2 * p
+    kernel = (p + 1) + 1 + (p if buffered else 0)
+    assembly = 2 * p if buffered else 0
+    return gather + kernel + assembly
+
+
+# -- workloads ----------------------------------------------------------------
+
+def bitgset_workload(nodes: int, events: int):
+    bg = BitGSet(universe=nodes * events)
+
+    def op_fn(x, t):
+        ids = jnp.arange(nodes) * events + jnp.minimum(t, events - 1)
+        m = jnp.zeros((nodes, bg.num_words), jnp.uint32)
+        m = m.at[jnp.arange(nodes), ids // 32].set(
+            jnp.uint32(1) << (ids % 32).astype(jnp.uint32))
+        return bg.add_mask_delta(x, m)
+
+    return bg.lattice, op_fn
+
+
+def _cells(full: bool):
+    nodes = C.NODES
+    events = [40, 120] if full else [12, 30]
+    for ev in events:
+        yield f"gset_u{nodes * ev}", C.gset_workload(nodes, ev), ev
+    yield (f"bitgset_u{nodes * (events[-1] * 32)}",
+           bitgset_workload(nodes, events[-1] * 32), events[-1])
+
+
+# -- benchmark ----------------------------------------------------------------
+
+ALGOS = ("classic", "rr", "bprr")
+
+
+def run(full: bool = False, verbose: bool = True):
+    topo = C.topo_of("mesh", C.NODES)
+    p = topo.max_degree
+    grid = []
+    mismatches = []
+    for wname, (lat, op_fn), rounds in _cells(full):
+        for algo in ALGOS:
+            results = {}
+            for eng in ENGINES:
+                t0 = time.time()
+                res = simulate(algo, lat, topo, op_fn, active_rounds=rounds,
+                               quiet_rounds=C.QUIET, engine=eng)
+                wall = time.time() - t0
+                results[eng] = res
+                grid.append({
+                    "workload": wname, "algo": algo, "engine": eng,
+                    "rounds": rounds + C.QUIET, "tx": int(res.total_tx),
+                    "cpu": int(res.total_cpu),
+                    "wall_s": round(wall, 3),
+                })
+            a, b = results["reference"], results["fused"]
+            same = (np.array_equal(a.final_x, b.final_x)
+                    and np.array_equal(a.tx, b.tx)
+                    and converged(lat, b.final_x))
+            if not same:
+                mismatches.append(f"{wname}/{algo}")
+            if verbose:
+                print(f"  {wname:18s} {algo:8s} "
+                      f"ref={grid[-2]['wall_s']:7.2f}s "
+                      f"fused={grid[-1]['wall_s']:7.2f}s "
+                      f"identical={same}")
+
+    passes = {
+        str(deg): {
+            "reference": reference_receive_passes(deg),
+            "fused": fused_receive_passes(deg),
+        }
+        for deg in (3, 4, 8)
+    }
+    if verbose:
+        print("  analytic receive passes/round (buffered):")
+        for deg, row in passes.items():
+            print(f"    P={deg}: reference={row['reference']:3d}  "
+                  f"fused={row['fused']:3d}")
+        print("  (wall-clock is CPU interpret mode — the pass model is the "
+              "TPU-relevant quantity)")
+
+    out = {
+        "topology": topo.name, "max_degree": p,
+        "grid": grid,
+        "analytic_receive_passes_per_round": passes,
+        "equivalence_mismatches": mismatches,
+        "note": ("wall_s measured on the current host; off-TPU the fused "
+                 "engine runs Pallas interpret mode and is not indicative. "
+                 "The analytic pass model is the optimized quantity."),
+    }
+    C.save_result("BENCH_engine", out)
+    return out
+
+
+def validate(out):
+    passes = out["analytic_receive_passes_per_round"]
+    checks = [
+        ("fused == reference results (all cells)",
+         not out["equivalence_mismatches"]),
+    ]
+    for deg, row in passes.items():
+        checks.append((
+            f"fused fewer HBM passes than reference @ P={deg}",
+            row["fused"] < row["reference"],
+        ))
+    return checks
+
+
+if __name__ == "__main__":
+    for name, ok in validate(run()):
+        print(f"[{'PASS' if ok else 'FAIL'}] {name}")

@@ -8,6 +8,8 @@ Sections:
   fig9   metadata per node vs cluster size           (paper Fig 9)
   fig10  memory ratio vs BP+RR                       (paper Fig 10)
   fig11  Retwis under Zipf (bandwidth/memory/CPU)    (paper Fig 11-12)
+  engine   fused vs reference sync-round engine A/B (perf trajectory,
+           BENCH_engine.json; analytic HBM-pass model + equivalence)
   kernels  CRDT Pallas kernel correctness sweep (interpret mode — TPU perf
            claims come from the roofline analysis, not CPU timings)
   roofline  dry-run roofline table (if results exist)
@@ -98,6 +100,12 @@ def main() -> None:
         from benchmarks import fig11_retwis as f11
         out = f11.run(full=args.full)
         all_ok &= _checks(f11.validate(out))
+
+    if "engine" not in skip:
+        _section("Engine A/B — fused Pallas vs reference jnp sync round")
+        from benchmarks import bench_engine
+        out = bench_engine.run(full=args.full)
+        all_ok &= _checks(bench_engine.validate(out))
 
     if "kernels" not in skip:
         _section("CRDT Pallas kernels (interpret-mode correctness sweep)")

@@ -12,6 +12,7 @@ from repro.core.lattice import (
     product,
 )
 from repro.core.types import (
+    BitGSet,
     GCounter,
     GMap,
     GSet,
@@ -28,6 +29,7 @@ __all__ = [
     "join_all",
     "leq_from_join",
     "product",
+    "BitGSet",
     "GCounter",
     "GMap",
     "GSet",

@@ -59,6 +59,12 @@ class Lattice:
     # Pointwise views (universe-axis resolution), used by RR and the kernels:
     irreducible_mask: Callable[[State], Array]    # bool[..., U]
     novel_mask: Callable[[State, State], Array]   # bool[..., U]: ⇓a slots ⋢ b
+    # Dense-kernel dispatch (DESIGN.md §11): the Pallas kernel kind that
+    # implements this lattice's join/Δ on a single dense array, or None if
+    # only the pure-jnp reference engine applies (tuple states, lex orders).
+    #   "max"   — pointwise max order (ℕ-max entries; bool-or as 0/1 max)
+    #   "bitor" — bit-packed sets, one irreducible per bit
+    kernel_kind: str | None = None
 
 
 def leq_from_join(join, equal):
@@ -126,6 +132,10 @@ class MapLattice:
         def is_bottom(a):
             return jnp.all(v.is_bottom(a), axis=-1)
 
+        # The value lattice declares which dense kernel matches its order;
+        # struct-of-arrays points (lex pairs) take the jnp fallback.
+        kind = v.kernel_kind if v.arity == 1 else None
+
         return Lattice(
             name=self.name,
             bottom=bottom,
@@ -136,6 +146,7 @@ class MapLattice:
             is_bottom=is_bottom,
             irreducible_mask=irreducible_mask,
             novel_mask=novel_mask,
+            kernel_kind=kind,
         )
 
 

@@ -115,6 +115,78 @@ class GSet:
 
 
 # ---------------------------------------------------------------------------
+# BitGSet: bit-packed grow-only set (beyond-paper wire/memory format,
+# DESIGN.md §9). The universe is packed 32 elements per uint32 word, so the
+# state is 8× denser than the boolean GSet and joins/Δ run on whole words.
+# Irreducibles are single *bits*; `size` counts them via popcount, while the
+# pointwise mask views resolve at word granularity (each word is the join of
+# its bit irreducibles — use `kernels.ops.unpack_bits` for bit resolution).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BitGSet:
+    """Grow-only set over a static universe, bit-packed into uint32 words."""
+
+    universe: int
+
+    @property
+    def num_words(self) -> int:
+        return -(-self.universe // 32)
+
+    @property
+    def lattice(self) -> Lattice:
+        w = self.num_words
+
+        def bottom():
+            return jnp.zeros((w,), jnp.uint32)
+
+        def join(a, b):
+            return jnp.bitwise_or(a, b)
+
+        def delta(a, b):
+            # Δ(a,b): a's bits absent from b — exact and optimal (each bit
+            # is one irreducible).
+            return jnp.bitwise_and(a, jnp.bitwise_not(b))
+
+        def size(a):
+            return jnp.sum(jax.lax.population_count(a).astype(jnp.int32),
+                           axis=-1)
+
+        def leq(a, b):
+            return jnp.all(delta(a, b) == 0, axis=-1)
+
+        def is_bottom(a):
+            return jnp.all(a == 0, axis=-1)
+
+        def irreducible_mask(a):
+            return a != 0          # word-level view
+
+        def novel_mask(a, b):
+            return delta(a, b) != 0
+
+        return Lattice(
+            name="bitgset",
+            bottom=bottom,
+            join=join,
+            leq=leq,
+            delta=delta,
+            size=size,
+            is_bottom=is_bottom,
+            irreducible_mask=irreducible_mask,
+            novel_mask=novel_mask,
+            kernel_kind="bitor",
+        )
+
+    def add_mask(self, s, mask_words):
+        """m: union in a packed word mask."""
+        return jnp.bitwise_or(s, mask_words)
+
+    def add_mask_delta(self, s, mask_words):
+        """mᵟ: only the bits not already present (optimal addᵟ)."""
+        return jnp.bitwise_and(mask_words, jnp.bitwise_not(s))
+
+
+# ---------------------------------------------------------------------------
 # GMap (K% benchmark, Table I): keys ↪ max-versioned values.
 #
 # The paper's GMap micro-benchmark "changes the value of K/N% of keys" per

@@ -39,6 +39,11 @@ class ValueLattice:
     is_bottom: Callable[[Any], Array]
     # number of arrays making up a point (1 for scalar lattices)
     arity: int = 1
+    # Dense Pallas kernel implementing this pointwise order ("max", "bitor")
+    # or None — propagated to Lattice.kernel_kind for engine dispatch
+    # (DESIGN.md §11). Must only be set when the order really is the
+    # kernel's (e.g. "max" ⇒ join is pointwise max / or on {0, 1}).
+    kernel_kind: str | None = None
 
 
 def max_int(dtype=jnp.int32) -> ValueLattice:
@@ -49,6 +54,7 @@ def max_int(dtype=jnp.int32) -> ValueLattice:
         join=jnp.maximum,
         leq=lambda a, b: a <= b,
         is_bottom=lambda a: a == 0,
+        kernel_kind="max",
     )
 
 
@@ -60,6 +66,7 @@ def or_bool() -> ValueLattice:
         join=jnp.logical_or,
         leq=lambda a, b: jnp.logical_or(jnp.logical_not(a), b),
         is_bottom=jnp.logical_not,
+        kernel_kind="max",        # or on {0, 1} ≡ pointwise max
     )
 
 

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import grid_for
+from repro.kernels.common import grid_for, interpret_default
 
 FOLD_BLOCK = (256, 256)
 
@@ -45,8 +45,10 @@ def _fold_kernel(b_ref, o_ref, *, k: int, kind: str):
 
 
 @functools.partial(jax.jit, static_argnames=("kind", "block", "interpret"))
-def buffer_fold_2d(buf, *, kind: str = "max", block=FOLD_BLOCK, interpret: bool = True):
+def buffer_fold_2d(buf, *, kind: str = "max", block=FOLD_BLOCK,
+                   interpret: bool | None = None):
     """buf: [K, M, N] tile-aligned -> sends [K-1, M, N]."""
+    interpret = interpret_default() if interpret is None else interpret
     k, m, n = buf.shape
     bm, bn = block
     grid = grid_for((m, n), block)

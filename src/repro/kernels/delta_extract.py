@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import DEFAULT_BLOCK, grid_for
+from repro.kernels.common import DEFAULT_BLOCK, grid_for, interpret_default
 
 
 def _delta_kernel(d_ref, x_ref, s_ref, xj_ref, cnt_ref, *, kind: str):
@@ -34,11 +34,11 @@ def _delta_kernel(d_ref, x_ref, s_ref, xj_ref, cnt_ref, *, kind: str):
         novel = d > x                       # irreducible of d strictly above x
         s = jnp.where(novel, d, jnp.zeros_like(d))
         xj = jnp.maximum(x, d)
-        cnt = jnp.sum(novel.astype(jnp.int32))
+        cnt = jnp.sum(novel, dtype=jnp.int32)
     elif kind == "bitor":
         s = jnp.bitwise_and(d, jnp.bitwise_not(x))
         xj = jnp.bitwise_or(x, d)
-        cnt = jnp.sum(jax.lax.population_count(s).astype(jnp.int32))
+        cnt = jnp.sum(jax.lax.population_count(s), dtype=jnp.int32)
     else:
         raise ValueError(kind)
     s_ref[...] = s
@@ -48,8 +48,9 @@ def _delta_kernel(d_ref, x_ref, s_ref, xj_ref, cnt_ref, *, kind: str):
 
 @functools.partial(jax.jit, static_argnames=("kind", "block", "interpret"))
 def delta_extract_2d(d, x, *, kind: str = "max", block=DEFAULT_BLOCK,
-                     interpret: bool = True):
+                     interpret: bool | None = None):
     """d, x: [M, N] tile-aligned. Returns (s, x⊔d, count)."""
+    interpret = interpret_default() if interpret is None else interpret
     assert d.shape == x.shape and d.dtype == x.dtype
     bm, bn = block
     grid = grid_for(d.shape, block)

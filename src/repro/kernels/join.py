@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import DEFAULT_BLOCK, grid_for
+from repro.kernels.common import DEFAULT_BLOCK, grid_for, interpret_default
 
 
 def _join_kernel(a_ref, b_ref, o_ref, *, kind: str):
@@ -34,8 +34,10 @@ def _join_kernel(a_ref, b_ref, o_ref, *, kind: str):
 
 
 @functools.partial(jax.jit, static_argnames=("kind", "block", "interpret"))
-def join_2d(a, b, *, kind: str = "max", block=DEFAULT_BLOCK, interpret: bool = True):
+def join_2d(a, b, *, kind: str = "max", block=DEFAULT_BLOCK,
+            interpret: bool | None = None):
     """a, b: [M, N] (M % block_m == 0, N % block_n == 0) -> a ⊔ b."""
+    interpret = interpret_default() if interpret is None else interpret
     assert a.shape == b.shape and a.dtype == b.dtype
     bm, bn = block
     grid = grid_for(a.shape, block)

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import DEFAULT_BLOCK, grid_for
+from repro.kernels.common import DEFAULT_BLOCK, grid_for, interpret_default
 
 
 def _lex_kernel(ta_ref, va_ref, tb_ref, vb_ref,
@@ -36,13 +36,15 @@ def _lex_kernel(ta_ref, va_ref, tb_ref, vb_ref,
     novel = jnp.logical_not(leq_b_a) & jnp.logical_not(bot_b)
     dt_ref[...] = jnp.where(novel, tb, jnp.zeros_like(tb))
     dv_ref[...] = jnp.where(novel, vb, jnp.zeros_like(vb))
-    cnt_ref[0, 0] = jnp.sum(novel.astype(jnp.int32))
+    cnt_ref[0, 0] = jnp.sum(novel, dtype=jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def lex_join_delta_2d(ta, va, tb, vb, *, block=DEFAULT_BLOCK, interpret: bool = True):
+def lex_join_delta_2d(ta, va, tb, vb, *, block=DEFAULT_BLOCK,
+                      interpret: bool | None = None):
     """All inputs [M, N] tile-aligned. Returns (t', v', dt, dv, count) where
     (t', v') = a ⊔ b and (dt, dv) = Δ(b, a)."""
+    interpret = interpret_default() if interpret is None else interpret
     bm, bn = block
     grid = grid_for(ta.shape, block)
     spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))

@@ -20,9 +20,11 @@ from repro.kernels.common import (
     pad_to_2d,
     unpad_from_2d,
 )
+from repro.kernels.common import LANE
 from repro.kernels.delta_extract import delta_extract_2d
 from repro.kernels.join import join_2d
 from repro.kernels.lex_join import lex_join_delta_2d
+from repro.kernels.round_recv import ROUND_BLOCK, round_recv_2d
 
 
 def join(a, b, *, kind: str = "max", block=DEFAULT_BLOCK, interpret=None):
@@ -76,6 +78,48 @@ def buffer_fold(buf, *, kind: str = "max", block=FOLD_BLOCK, interpret=None):
         flat.reshape(k, rows_pad, cols), kind=kind, block=block, interpret=interpret
     )
     return out.reshape(k - 1, -1)[:, :n].reshape((k - 1,) + buf.shape[1:])
+
+
+def round_recv(d_stack, x, *, kind: str = "max", block=None, interpret=None,
+               emit_stored: bool = True):
+    """Fused one-pass sync-round receive (DESIGN.md §11).
+
+    ``d_stack``: [P, B, U] gathered per-slot δ-groups (⊥ where invalid),
+    ``x``: [B, U] states. Returns ``(x', stored, cnt, dsz)`` where ``x'`` is
+    the state after joining all P slots in order, ``stored`` [P, B, U] holds
+    the slot-order RR extractions Δ(d_q, x_running) (None when
+    ``emit_stored=False``), and ``cnt``/``dsz`` [B, P] count each slot's
+    novel / received irreducibles per node.
+
+    Boolean states are viewed as uint8 {0, 1} for the kernel (max ≡ or, and
+    TPU tiles have no bool layout) and cast back — bit-identical.
+    """
+    interpret = interpret_default() if interpret is None else interpret
+    p, b, u = d_stack.shape
+    assert x.shape == (b, u)
+    orig_dtype = x.dtype
+    if orig_dtype == jnp.bool_:
+        d_stack = d_stack.astype(jnp.uint8)
+        x = x.astype(jnp.uint8)
+    if block is None:
+        # Short universes take one lane-aligned tile instead of the full
+        # default width so interpret-mode tests don't pad 10×.
+        block = (ROUND_BLOCK[0], min(ROUND_BLOCK[1], -(-u // LANE) * LANE))
+    bm, bn = block
+    m_pad = -(-b // bm) * bm
+    n_pad = -(-u // bn) * bn
+    d2 = jnp.pad(d_stack, ((0, 0), (0, m_pad - b), (0, n_pad - u)))
+    x2 = jnp.pad(x, ((0, m_pad - b), (0, n_pad - u)))
+    xo, s, cnt, dsz = round_recv_2d(
+        d2, x2, kind=kind, block=block, interpret=interpret,
+        emit_stored=emit_stored)
+    xo = xo[:b, :u].astype(orig_dtype)
+    if s is not None:
+        s = s[:, :b, :u].astype(orig_dtype)
+    # [gi, gj, bm, P] -> sum universe tiles -> [m_pad, P] -> trim pad nodes
+    cnt = cnt.sum(axis=1).reshape(m_pad, p)[:b]
+    dsz = dsz.sum(axis=1).reshape(m_pad, p)[:b]
+    return xo, s, cnt, dsz
 
 
 # -- bit-packed GSet helpers (beyond-paper wire/memory format) ---------------

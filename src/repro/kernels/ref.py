@@ -44,6 +44,32 @@ def lex_join_delta(ta, va, tb, vb):
     return t, v, dt, dv, jnp.sum(novel.astype(jnp.int32))
 
 
+def round_recv(d_stack, x, kind: str = "max"):
+    """Slot-order receive oracle: d_stack [P, B, U], x [B, U] ->
+    (x', stored [P, B, U], cnt [B, P], dsz [B, P])."""
+    p = d_stack.shape[0]
+    stored, cnt, dsz = [], [], []
+    for q in range(p):
+        d = d_stack[q]
+        if kind == "max":
+            novel = d > x
+            s = jnp.where(novel, d, jnp.zeros_like(d))
+            cnt.append(jnp.sum(novel, axis=-1).astype(jnp.int32))
+            dsz.append(jnp.sum(d != 0, axis=-1).astype(jnp.int32))
+            x = jnp.maximum(x, d)
+        elif kind == "bitor":
+            s = jnp.bitwise_and(d, jnp.bitwise_not(x))
+            pc = jax.lax.population_count
+            cnt.append(jnp.sum(pc(s), axis=-1).astype(jnp.int32))
+            dsz.append(jnp.sum(pc(d), axis=-1).astype(jnp.int32))
+            x = jnp.bitwise_or(x, d)
+        else:
+            raise ValueError(kind)
+        stored.append(s)
+    return (x, jnp.stack(stored, axis=0),
+            jnp.stack(cnt, axis=1), jnp.stack(dsz, axis=1))
+
+
 def buffer_fold(buf, kind: str = "max"):
     """buf [K, ...] -> sends [K-1, ...]: sends[j] = ⊔_{o≠j} buf[o]."""
     k = buf.shape[0]

@@ -1,0 +1,121 @@
+"""Fused sync-round receive: one HBM pass for Algorithm 2's lines 14-17.
+
+The reference engine's receive phase walks the P neighbor slots in Python,
+issuing 3+ separate jnp passes (join, Δ-extract, size/leq) over the [N, U]
+state per slot — one synchronous round streams the universe from HBM ~O(P)
+times. This kernel executes the *whole* sequential receive in a single tiled
+pass (DESIGN.md §11): the grid covers (node, universe) tiles, the state tile
+stays resident in VMEM, and the P gathered δ-groups are folded in slot order
+
+    for q in 0..P-1:                     # Alg 2 slot-order semantics
+        novel_q   = ⇓d_q ⋢ x             # vs the RUNNING state
+        stored_q  = Δ(d_q, x)            # RR extraction
+        cnt_q     = |⇓stored_q|          # per-node novel count
+        dsz_q     = |⇓d_q|               # per-node received size
+        x         = x ⊔ d_q
+
+so every engine decision that the reference loop makes from global
+reductions (inflation check ¬(d ⊑ x) ⇔ cnt > 0, ⊥-check Δ = ⊥ ⇔ cnt = 0)
+is recoverable from the emitted per-(node, slot) counts — no second pass.
+
+Kinds: ``max`` (ℕ-max / bool-or value lattices) and ``bitor`` (bit-packed
+sets; novelty = d & ~x, counts via popcount).
+
+Layout: d is [P, M, N] (slot-major so one (m, n) tile of all P slots is
+co-resident in VMEM: P ≤ 8 slots × 8×512 int32 = ≤ 128 KiB per stack), x is
+[M, N]; M = padded node axis, N = padded (flattened) universe axis. Counts
+are emitted per grid block and reduced by the wrapper, mirroring
+``delta_extract_2d``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import grid_for, interpret_default
+
+# Node-axis sublanes × universe-axis lanes. The node axis of real
+# deployments is small next to the universe axis, so the default tile is
+# short and wide.
+ROUND_BLOCK = (8, 512)
+
+
+def _popcount_rows(a):
+    # dtype pinned: under x64 (simulate's wide-metrics context) jnp.sum
+    # would promote to int64 and mismatch the int32 count refs.
+    return jnp.sum(jax.lax.population_count(a).astype(jnp.int32), axis=-1,
+                   dtype=jnp.int32)
+
+
+def _round_recv_kernel(d_ref, x_ref, *o_refs, p: int, kind: str,
+                       emit_stored: bool):
+    if emit_stored:
+        xo_ref, s_ref, cnt_ref, dsz_ref = o_refs
+    else:
+        xo_ref, cnt_ref, dsz_ref = o_refs
+    x = x_ref[...]                                    # [bm, bn], VMEM-resident
+    for q in range(p):
+        d = d_ref[q]
+        if kind == "max":
+            novel = d > x                  # irreducible of d strictly above x
+            s = jnp.where(novel, d, jnp.zeros_like(d))
+            cnt = jnp.sum(novel, axis=-1, dtype=jnp.int32)
+            dsz = jnp.sum(d != 0, axis=-1, dtype=jnp.int32)
+            x = jnp.maximum(x, d)
+        elif kind == "bitor":
+            s = jnp.bitwise_and(d, jnp.bitwise_not(x))
+            cnt = _popcount_rows(s)
+            dsz = _popcount_rows(d)
+            x = jnp.bitwise_or(x, d)
+        else:
+            raise ValueError(kind)
+        if emit_stored:
+            s_ref[q] = s
+        cnt_ref[0, 0, :, q] = cnt
+        dsz_ref[0, 0, :, q] = dsz
+    xo_ref[...] = x
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kind", "block", "interpret", "emit_stored"))
+def round_recv_2d(d, x, *, kind: str = "max", block=ROUND_BLOCK,
+                  interpret: bool | None = None, emit_stored: bool = True):
+    """d: [P, M, N] slot-major gathered δ-groups, x: [M, N], tile-aligned.
+
+    Returns ``(x', stored, cnt, dsz)`` with ``stored`` [P, M, N] the
+    slot-order RR extractions (omitted when ``emit_stored=False``) and
+    ``cnt``/``dsz`` [gi, gj, bm, P] per-block per-node counts (sum axis 1 to
+    get the [M, P] totals).
+    """
+    interpret = interpret_default() if interpret is None else interpret
+    p, m, n = d.shape
+    assert x.shape == (m, n) and d.dtype == x.dtype
+    bm, bn = block
+    grid = grid_for((m, n), block)
+    d_spec = pl.BlockSpec((p, bm, bn), lambda i, j: (0, i, j))
+    x_spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    cnt_spec = pl.BlockSpec((1, 1, bm, p), lambda i, j: (i, j, 0, 0))
+    cnt_shape = jax.ShapeDtypeStruct(grid + (bm, p), jnp.int32)
+    out_specs = [x_spec] + ([d_spec] if emit_stored else []) \
+        + [cnt_spec, cnt_spec]
+    out_shape = [jax.ShapeDtypeStruct(x.shape, x.dtype)] \
+        + ([jax.ShapeDtypeStruct(d.shape, d.dtype)] if emit_stored else []) \
+        + [cnt_shape, cnt_shape]
+    outs = pl.pallas_call(
+        functools.partial(_round_recv_kernel, p=p, kind=kind,
+                          emit_stored=emit_stored),
+        grid=grid,
+        in_specs=[d_spec, x_spec],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(d, x)
+    if emit_stored:
+        xo, s, cnt, dsz = outs
+    else:
+        (xo, cnt, dsz), s = outs, None
+    return xo, s, cnt, dsz

@@ -257,6 +257,8 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
 
         ma = compiled.memory_analysis()
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):   # jax<=0.4.x: one dict per device
+            ca = ca[0] if ca else {}
         hlo = compiled.as_text()
         chips = mesh.devices.size
         coll = hlo_analysis.analyze_collectives(hlo, chips)

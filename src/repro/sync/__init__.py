@@ -1,13 +1,16 @@
 """Synchronization algorithms and network simulation (paper §IV-V)."""
 
 from repro.sync.algorithms import ALGORITHMS, SyncAlgorithm
+from repro.sync.engine import ENGINES
 from repro.sync.simulator import SimResult, converged, simulate
 from repro.sync.topology import Topology, by_name, full, partial_mesh, ring, tree
-from repro.sync import scuttlebutt
+from repro.sync import engine, scuttlebutt
 
 __all__ = [
     "ALGORITHMS",
+    "ENGINES",
     "SyncAlgorithm",
+    "engine",
     "SimResult",
     "converged",
     "simulate",

@@ -20,6 +20,12 @@ The per-neighbor send for BP flavors is a leave-one-out join across slots.
 ``loo="prefix"`` computes all P sends in O(P·U) via prefix/suffix joins
 (beyond-paper optimization, EXPERIMENTS.md §Perf); ``loo="naive"`` is the
 direct O(P²·U) fold for comparison.
+
+Engines (DESIGN.md §11): ``engine="reference"`` runs the pure-jnp per-slot
+receive loop below; ``engine="fused"`` executes the whole receive phase in
+one Pallas kernel pass and the leave-one-out sends in one ``buffer_fold``
+pass, with automatic fallback to the reference path for lattices without a
+dense kernel kind. Both engines are bit-identical in states and metrics.
 """
 
 from __future__ import annotations
@@ -31,16 +37,25 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.lattice import Lattice
+from repro.sync import engine as engine_mod
 from repro.sync import treeops as T
 from repro.sync.topology import Topology
 
 ALGORITHMS = ("state", "classic", "bp", "rr", "bprr")
 
 
+def metric_dtype():
+    """Accumulator dtype for round metrics (DESIGN.md §10): int64 when x64
+    is enabled (``simulate`` enables it around the scan so fleet-scale
+    universe × degree × rounds products can't wrap), else the int32 the
+    platform gives us."""
+    return jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+
+
 class RoundMetrics(NamedTuple):
     tx: jnp.ndarray        # elements sent this round (scalar)
     mem: jnp.ndarray       # elements held (state + buffer entries) at round end
-    cpu: jnp.ndarray       # element-ops processed this round (proxy, DESIGN §3)
+    cpu: jnp.ndarray       # element-ops processed this round (proxy, DESIGN.md §10)
     max_mem_node: jnp.ndarray  # worst single-node memory
 
 
@@ -56,6 +71,12 @@ class SyncAlgorithm:
     lattice: Lattice
     topo: Topology
     loo: str = "prefix"    # leave-one-out strategy for BP sends
+    engine: str = "reference"  # "reference" | "fused" (DESIGN.md §11)
+
+    @property
+    def resolved_engine(self) -> str:
+        """Requested engine after the dense-kernel fallback."""
+        return engine_mod.resolve(self.engine, self.lattice)
 
     @property
     def has_buffer(self) -> bool:
@@ -90,6 +111,9 @@ class SyncAlgorithm:
         """d[i, p] = ⊔ {B[i, o] | o ≠ p} for p in 0..P-1 (slot P always in)."""
         lat = self.lattice
         p = self.topo.max_degree
+        if self.resolved_engine == "fused":
+            # one buffer_fold kernel pass over [P+1, N·U] (DESIGN.md §11)
+            return engine_mod.fused_loo_sends(buf, kind=lat.kernel_kind)
         slots = [T.slot(buf, k) for k in range(p + 1)]
         if self.loo == "naive":
             outs = []
@@ -124,7 +148,8 @@ class SyncAlgorithm:
         n, p = topo.num_nodes, topo.max_degree
         x, buf, buf_elems = carry
 
-        cpu = jnp.zeros((), jnp.int32)
+        acc = metric_dtype()
+        cpu = jnp.zeros((), acc)
 
         # (1) local update: δ = mᵟ(xᵢ); store(δ, i)      [Alg 2, lines 6-8]
         dsz = lat.size(op_delta).astype(jnp.int32)             # [N]
@@ -136,7 +161,7 @@ class SyncAlgorithm:
             else:
                 buf = lat.join(buf, op_delta)
             buf_elems = buf_elems + dsz
-        cpu = cpu + jnp.sum(dsz.astype(jnp.int32))
+        cpu = cpu + jnp.sum(dsz.astype(acc))
 
         # (2) sends                                        [Alg 2, lines 9-12]
         if not self.has_buffer:
@@ -151,7 +176,7 @@ class SyncAlgorithm:
             )
         send_sizes = lat.size(d_all).astype(jnp.int32)          # [N, P]
         send_sizes = send_sizes * topo.mask
-        tx = jnp.sum(send_sizes)
+        tx = jnp.sum(send_sizes.astype(acc))
         cpu = cpu + tx  # serialization cost ∝ elements sent
 
         # (3) clear buffer                                 [Alg 2, line 13]
@@ -160,6 +185,29 @@ class SyncAlgorithm:
             buf_elems = jnp.zeros_like(buf_elems)
 
         # (4) receive all messages, sequentially per slot  [Alg 2, lines 14-17]
+        if self.resolved_engine == "fused":
+            x, buf, buf_elems, cpu = engine_mod.fused_receive(
+                self, x, buf, buf_elems, cpu, d_all, acc)
+        else:
+            x, buf, buf_elems, cpu = self._receive_reference(
+                x, buf, buf_elems, cpu, d_all, acc)
+
+        # (5) metrics
+        state_elems = lat.size(x).astype(jnp.int32)             # [N]
+        node_mem = state_elems.astype(acc) + buf_elems.astype(acc)
+        metrics = RoundMetrics(
+            tx=tx,
+            mem=jnp.sum(node_mem),
+            cpu=cpu,
+            max_mem_node=jnp.max(node_mem),
+        )
+        return AlgoCarry(x=x, buf=buf, buf_elems=buf_elems), metrics
+
+    def _receive_reference(self, x, buf, buf_elems, cpu, d_all, acc):
+        """Reference receive: sequential per-slot jnp loop (3+ HBM passes
+        over the state per slot — the fused engine's baseline)."""
+        lat, topo = self.lattice, self.topo
+        n, p = topo.num_nodes, topo.max_degree
         for q in range(p):
             sender = topo.nbrs[:, q]
             sslot = topo.rev[:, q]
@@ -168,7 +216,7 @@ class SyncAlgorithm:
             d = T.where(valid, d, T.bcast(lat.bottom(), (n,)))
 
             if self.name == "state":
-                cpu = cpu + jnp.sum(lat.size(d).astype(jnp.int32))
+                cpu = cpu + jnp.sum(lat.size(d).astype(acc))
                 x = lat.join(x, d)
                 continue
 
@@ -180,8 +228,8 @@ class SyncAlgorithm:
                 keep = jnp.logical_not(lat.leq(d, x)) & valid   # inflation check
 
             ssz = lat.size(stored).astype(jnp.int32) * keep
-            cpu = cpu + jnp.sum(lat.size(d).astype(jnp.int32)) \
-                      + jnp.sum(ssz.astype(jnp.int32))
+            cpu = cpu + jnp.sum(lat.size(d).astype(acc)) \
+                      + jnp.sum(ssz.astype(acc))
             x = lat.join(x, d)
             if self.per_origin:
                 cur = T.slot(buf, q)
@@ -190,14 +238,4 @@ class SyncAlgorithm:
             else:
                 buf = T.where(keep, lat.join(buf, stored), buf)
             buf_elems = buf_elems + ssz
-
-        # (5) metrics
-        state_elems = lat.size(x).astype(jnp.int32)             # [N]
-        node_mem = state_elems + buf_elems.astype(jnp.int32)
-        metrics = RoundMetrics(
-            tx=tx,
-            mem=jnp.sum(node_mem),
-            cpu=cpu,
-            max_mem_node=jnp.max(node_mem),
-        )
-        return AlgoCarry(x=x, buf=buf, buf_elems=buf_elems), metrics
+        return x, buf, buf_elems, cpu

@@ -1,0 +1,134 @@
+"""Sync-round engine dispatch: reference jnp loop vs fused Pallas kernels.
+
+DESIGN.md §11. Two engines execute one synchronous round:
+
+* ``reference`` — the pure-jnp sequential slot loop in
+  ``SyncAlgorithm.round_step`` (3+ HBM passes over the [N, U] state per
+  neighbor slot, P slots per round).
+* ``fused``     — the receive phase runs as ONE tiled pass via
+  ``kernels.round_recv`` (state tile VMEM-resident across all P slots) and
+  the BP leave-one-out sends fold through ``kernels.buffer_fold``.
+
+Dispatch is by ``Lattice.kernel_kind``: lattices whose join/Δ have a dense
+single-array kernel ("max", "bitor") can run fused; everything else
+(lex pairs, products, linear sums) silently falls back to the reference
+engine, so ``engine="fused"`` is always safe to request.
+
+Both engines are bit-identical in final states, buffers, and metrics: max/or
+folds are exact and the fused kernel preserves Algorithm 2's slot-order
+semantics (Δ against the *running* state). The engine-equivalence test suite
+asserts this across every algorithm × lattice × topology combination.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+ENGINES = ("reference", "fused")
+
+# Kernel kinds the fused engine implements end-to-end.
+FUSED_KINDS = ("max", "bitor")
+
+
+def supports_fused(lattice) -> bool:
+    """A lattice runs fused iff its state is one dense array with a kernel
+    kind — exactly when ``kernel_kind`` is set (MapLattice only sets it for
+    arity-1 value lattices)."""
+    return getattr(lattice, "kernel_kind", None) in FUSED_KINDS
+
+
+def resolve(engine: str, lattice) -> str:
+    """Validate ``engine`` and apply the automatic jnp fallback."""
+    if engine not in ENGINES:
+        raise ValueError(
+            f"unknown engine {engine!r}; expected one of {ENGINES}")
+    if engine == "fused" and not supports_fused(lattice):
+        return "reference"
+    return engine
+
+
+def gather_inbox(d_all, topo):
+    """Route per-edge messages: inbox[n, q] = d_all[nbrs[n,q], rev[n,q]],
+    ⊥ (= 0 for every dense kernel kind) where slot q is padding.
+
+    One gather pass over the [N, P, U] send block — the fused engine's only
+    data movement before the single kernel pass.
+    """
+    d = d_all[topo.nbrs, topo.rev]                       # [N, P, U]
+    return jnp.where(topo.mask[..., None], d, jnp.zeros((), d.dtype))
+
+
+def _fold_slots(stack, kind: str):
+    """⊔ over the leading slot axis (P is small and static)."""
+    op = jnp.bitwise_or if kind == "bitor" else jnp.maximum
+    acc = stack[0]
+    for q in range(1, stack.shape[0]):
+        acc = op(acc, stack[q])
+    return acc
+
+
+def fused_receive(algo, x, buf, buf_elems, cpu, d_all, acc_dtype):
+    """Execute Alg 2 lines 14-17 for all P slots in one kernel pass.
+
+    ``algo`` duck-types SyncAlgorithm (name/flags/lattice/topo). Returns the
+    updated ``(x, buf, buf_elems, cpu)`` with semantics bit-identical to the
+    reference per-slot loop:
+
+    * the kernel emits per-(node, slot) novel counts ``cnt`` against the
+      RUNNING state, so the reference loop's global reductions reduce to
+      scalar tests:  ¬(d ⊑ x) ⇔ cnt > 0  and  Δ(d, x) = ⊥ ⇔ cnt = 0;
+    * RR buffers store Δ extractions — already ⊥ wherever not novel, so the
+      reference's ``keep`` masking is the identity and slots write through;
+    * classic/BP buffers store whole δ-groups gated by the inflation check,
+      applied here as a cnt-derived mask on the gathered inbox.
+    """
+    lat, topo = algo.lattice, algo.topo
+    kind = lat.kernel_kind
+    p = topo.max_degree
+
+    inbox = gather_inbox(d_all, topo)                    # [N, P, U]
+    d_stack = jnp.transpose(inbox, (1, 0, 2))            # [P, N, U]
+    x, stored, cnt, dsz = kops.round_recv(
+        d_stack, x, kind=kind, emit_stored=algo.has_buffer)
+
+    cpu = cpu + jnp.sum(dsz.astype(acc_dtype))
+    if not algo.has_buffer:                              # state-based
+        return x, buf, buf_elems, cpu
+
+    if algo.extracts:                                    # rr / bprr
+        ssz = cnt                                        # |⇓Δ| per (node, slot)
+    else:                                                # classic / bp
+        keep = cnt > 0                                   # ¬(d ⊑ x_running)
+        ssz = dsz * keep
+
+    if algo.per_origin:                                  # bp / bprr
+        slot_vals = jnp.transpose(stored, (1, 0, 2)) if algo.extracts \
+            else jnp.where(keep[..., None], inbox, jnp.zeros((), inbox.dtype))
+        buf = buf.at[:, :p].set(slot_vals)               # slot P = local ops
+    else:                                                # classic / rr
+        add = _fold_slots(stored, kind) if algo.extracts \
+            else _fold_slots(
+                jnp.transpose(
+                    jnp.where(keep[..., None], inbox,
+                              jnp.zeros((), inbox.dtype)),
+                    (1, 0, 2)),
+                kind)
+        buf = lat.join(buf, add)
+
+    cpu = cpu + jnp.sum(ssz.astype(acc_dtype))
+    buf_elems = buf_elems + jnp.sum(ssz, axis=1, dtype=jnp.int32)
+    return x, buf, buf_elems, cpu
+
+
+def fused_loo_sends(buf, kind: str):
+    """All P leave-one-out sends from the origin-indexed buffer [N, P+1, U]
+    in one ``buffer_fold`` kernel pass (node axis folded into the tile
+    space). Returns [N, P, U]."""
+    orig_dtype = buf.dtype
+    if orig_dtype == jnp.bool_:
+        buf = buf.astype(jnp.uint8)                      # max ≡ or on {0, 1}
+    stack = jnp.transpose(buf, (1, 0, 2))                # [P+1, N, U]
+    sends = kops.buffer_fold(stack, kind=kind)           # [P, N, U]
+    return jnp.transpose(sends, (1, 0, 2)).astype(orig_dtype)

@@ -9,6 +9,11 @@ axis is just a batch axis of the lattice ops, so a 15-node mesh and a
 ``op_fn(x, t) -> delta`` must return the batched δ-mutator output for round
 ``t`` given current states ``x`` ([N, ...U]); rounds ``t >= active_rounds``
 receive no ops (quiescence drain so convergence can be asserted).
+
+Metrics are accumulated in int64 (DESIGN.md §10): the scan is traced under
+``jax.experimental.enable_x64`` so fleet-scale universe × degree × rounds
+sums cannot wrap the int32 range. Lattice state dtypes are unaffected (all
+states carry explicit dtypes). Set ``wide_metrics=False`` to opt out.
 """
 
 from __future__ import annotations
@@ -56,16 +61,29 @@ def simulate(
     x0: Any = None,
     loo: str = "prefix",
     jit: bool = True,
+    engine: str = "reference",
+    wide_metrics: bool = True,
 ) -> SimResult:
     """Run ``active_rounds`` op+sync rounds plus ``quiet_rounds`` sync-only
-    drain rounds of ``algo`` over ``topo``."""
-    alg = SyncAlgorithm(name=algo, lattice=lattice, topo=topo, loo=loo)
+    drain rounds of ``algo`` over ``topo``.
+
+    ``engine`` selects the sync-round execution path (DESIGN.md §11):
+    ``"reference"`` is the pure-jnp per-slot loop, ``"fused"`` the one-pass
+    Pallas engine (falls back to reference for lattices without a dense
+    kernel kind). Both produce bit-identical results.
+    """
+    alg = SyncAlgorithm(name=algo, lattice=lattice, topo=topo, loo=loo,
+                        engine=engine)
     carry0 = alg.init(x0)
     n = topo.num_nodes
     total = active_rounds + quiet_rounds
 
     def step(carry, t):
         delta = op_fn(carry.x, t)
+        # Confine wide_metrics' x64 tracing to the metric accumulators: an
+        # op_fn with unpinned dtypes would otherwise emit int64/float64
+        # deltas, promote the state, and break the scan carry.
+        delta = jax.tree.map(lambda d, xl: d.astype(xl.dtype), delta, carry.x)
         delta = T.where(
             jnp.broadcast_to(t < active_rounds, (n,)),
             delta,
@@ -73,16 +91,30 @@ def simulate(
         )
         return alg.round_step(carry, delta)
 
-    def run(carry0):
-        return jax.lax.scan(step, carry0, jnp.arange(total))
+    def run(c0):
+        return jax.lax.scan(step, c0, jnp.arange(total))
 
     if jit:
         run = jax.jit(run)
-    carry, metrics = run(carry0)
+    if wide_metrics:
+        with jax.experimental.enable_x64():
+            carry, metrics = run(carry0)
+    else:
+        carry, metrics = run(carry0)
+
+    tx = np.asarray(metrics.tx)
+    mem = np.asarray(metrics.mem)
+    cpu = np.asarray(metrics.cpu)
+    # Wrap-around in the metric accumulators shows up as negative counts —
+    # impossible for element tallies, so fail loudly instead of reporting
+    # garbage (can only trigger with wide_metrics=False at extreme scale).
+    if (tx < 0).any() or (mem < 0).any() or (cpu < 0).any():
+        raise OverflowError(
+            "round-metric accumulator overflow: rerun with wide_metrics=True")
     return SimResult(
-        tx=np.asarray(metrics.tx),
-        mem=np.asarray(metrics.mem),
-        cpu=np.asarray(metrics.cpu),
+        tx=tx,
+        mem=mem,
+        cpu=cpu,
         max_mem_node=np.asarray(metrics.max_mem_node),
         final_x=jax.device_get(carry.x),
     )

@@ -15,6 +15,10 @@ REPO = Path(__file__).resolve().parents[1]
 SRC = REPO / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
+# test-local helper modules (_hypothesis_compat) importable regardless of
+# how pytest was invoked
+if str(REPO / "tests") not in sys.path:
+    sys.path.insert(0, str(REPO / "tests"))
 
 
 @pytest.fixture

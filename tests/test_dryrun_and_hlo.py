@@ -66,13 +66,17 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, json
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.launch import hlo_cost
-mesh = jax.make_mesh((2,2), ("data","model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2,2), ("data","model"))
 def f(w1, w2, x):
     return jnp.tanh(x @ w1) @ w2
 args = [jax.ShapeDtypeStruct((256,256), jnp.float32)]*2 + [jax.ShapeDtypeStruct((128,256), jnp.float32)]
 with mesh:
     c = jax.jit(f, in_shardings=(NamedSharding(mesh,P(None,"model")),)*2 + (NamedSharding(mesh,P("data",None)),)).lower(*args).compile()
-ca = float(c.cost_analysis()["flops"])
+ca_raw = c.cost_analysis()
+if isinstance(ca_raw, (list, tuple)):  # jax<=0.4.x: one dict per device
+    ca_raw = ca_raw[0]
+ca = float(ca_raw["flops"])
 hc = hlo_cost.analyze(c.as_text(), 4).flops
 def g(ws, x):
     def body(x, w):

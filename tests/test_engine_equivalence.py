@@ -1,0 +1,193 @@
+"""Fused-engine equivalence: the Pallas sync-round engine must be
+bit-identical to the reference jnp loop (DESIGN.md §11).
+
+For every algorithm in ALGORITHMS × every dense-kernel lattice kind
+(GSet bool-or, GCounter/GMap ℕ-max, BitGSet packed bitor) × topology
+(mesh, tree, random connected), both engines must produce identical final
+states, per-round tx / mem / cpu / max-node-memory, and per-node buffer
+counts — and still converge. Lattices without a dense kernel (lex pairs)
+must silently fall back to the reference engine and behave identically.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BitGSet, GCounter, GSet, LWWMap
+from repro.sync import ALGORITHMS, SyncAlgorithm, converged, engine, simulate, topology
+
+N, T, Q = 9, 8, 10
+
+
+def gset_ops(n=N, rounds=T):
+    def op_fn(x, t):
+        ids = jnp.arange(n) * rounds + jnp.minimum(t, rounds - 1)
+        d = jnp.zeros((n, n * rounds), jnp.bool_)
+        return d.at[jnp.arange(n), ids].set(True)
+
+    return op_fn, GSet(universe=n * rounds).lattice
+
+
+def gcounter_ops(n=N):
+    def op_fn(x, t):
+        d = jnp.zeros((n, n), jnp.int32)
+        idx = jnp.arange(n)
+        return d.at[idx, idx].set(x[idx, idx] + 1)
+
+    return op_fn, GCounter(n).lattice
+
+
+def bitgset_ops(n=N, rounds=T):
+    """Unique-element adds on the packed set — one new bit per node/round."""
+    bg = BitGSet(universe=n * rounds)
+
+    def op_fn(x, t):
+        ids = jnp.arange(n) * rounds + jnp.minimum(t, rounds - 1)
+        m = jnp.zeros((n, bg.num_words), jnp.uint32)
+        m = m.at[jnp.arange(n), ids // 32].set(
+            jnp.uint32(1) << (ids % 32).astype(jnp.uint32))
+        return bg.add_mask_delta(x, m)
+
+    return op_fn, bg.lattice
+
+
+def lww_ops(n=N):
+    """Lex-pair states: no dense kernel — exercises the silent fallback."""
+    lm = LWWMap(num_keys=n)
+
+    def op_fn(x, t):
+        ts, vals = x
+        idx = jnp.arange(n)
+        dt = jnp.zeros_like(ts).at[idx, idx].set(t.astype(ts.dtype) + 1)
+        dv = jnp.zeros_like(vals).at[idx, idx].set(idx.astype(vals.dtype) * 3)
+        return (dt, dv)
+
+    return op_fn, lm.lattice
+
+
+WORKLOADS = {
+    "gset": gset_ops,
+    "gcounter": gcounter_ops,
+    "bitgset": bitgset_ops,
+    "lww": lww_ops,
+}
+
+
+def _run_both(algo, op_builder, topo):
+    op_fn, lat = op_builder()
+    a = simulate(algo, lat, topo, op_fn, active_rounds=T, quiet_rounds=Q,
+                 engine="reference")
+    op_fn, lat = op_builder()
+    b = simulate(algo, lat, topo, op_fn, active_rounds=T, quiet_rounds=Q,
+                 engine="fused")
+    return a, b, lat
+
+
+def _assert_identical(a, b, ctx):
+    fa = a.final_x if isinstance(a.final_x, (list, tuple)) else (a.final_x,)
+    fb = b.final_x if isinstance(b.final_x, (list, tuple)) else (b.final_x,)
+    for la, lb in zip(fa, fb):
+        np.testing.assert_array_equal(la, lb, err_msg=f"{ctx}: final state")
+    np.testing.assert_array_equal(a.tx, b.tx, err_msg=f"{ctx}: tx")
+    np.testing.assert_array_equal(a.mem, b.mem, err_msg=f"{ctx}: mem")
+    np.testing.assert_array_equal(a.cpu, b.cpu, err_msg=f"{ctx}: cpu")
+    np.testing.assert_array_equal(a.max_mem_node, b.max_mem_node,
+                                  err_msg=f"{ctx}: max_mem_node")
+
+
+@pytest.mark.parametrize("algo", ALGORITHMS)
+@pytest.mark.parametrize("workload", ["gset", "gcounter", "bitgset"])
+@pytest.mark.parametrize("topo_name", ["mesh", "tree"])
+def test_fused_engine_bit_identical(algo, workload, topo_name):
+    topo = topology.by_name(topo_name, N)
+    a, b, lat = _run_both(algo, WORKLOADS[workload], topo)
+    _assert_identical(a, b, f"{workload}/{algo}/{topo_name}")
+    assert converged(lat, b.final_x)
+
+
+@pytest.mark.parametrize("algo", ALGORITHMS)
+def test_lex_lattice_falls_back_and_matches(algo):
+    topo = topology.partial_mesh(N, 4)
+    a, b, lat = _run_both(algo, WORKLOADS["lww"], topo)
+    _assert_identical(a, b, f"lww/{algo}")
+    assert converged(lat, b.final_x)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("algo", ALGORITHMS)
+def test_fused_engine_random_topologies(seed, algo):
+    """Random connected graphs with ragged degrees (padding slots exercise
+    the kernel's ⊥-masked inbox)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(5, 12))
+    adj = np.zeros((n, n), bool)
+    order = rng.permutation(n)
+    for i in range(1, n):
+        j = order[rng.integers(0, i)]
+        adj[order[i], j] = adj[j, order[i]] = True
+    for _ in range(n // 2):
+        a_, b_ = rng.integers(0, n, 2)
+        if a_ != b_:
+            adj[a_, b_] = adj[b_, a_] = True
+    topo = topology._from_adj(f"rand{seed}", adj)
+
+    def build():
+        return gset_ops(n, T)
+
+    a, b, lat = _run_both(algo, build, topo)
+    _assert_identical(a, b, f"rand{seed}/{algo}")
+    assert converged(lat, b.final_x)
+
+
+def test_engine_buffer_counts_identical():
+    """Step-level check: carries (buffers and per-node buffered-element
+    counters) match after every round, not just end-of-run metrics."""
+    topo = topology.partial_mesh(N, 4)
+    op_fn, lat = gset_ops()
+    algs = {
+        e: SyncAlgorithm(name="bprr", lattice=lat, topo=topo, engine=e)
+        for e in engine.ENGINES
+    }
+    carries = {e: a.init() for e, a in algs.items()}
+    for t in range(6):
+        delta = op_fn(carries["reference"].x, jnp.asarray(t))
+        for e in engine.ENGINES:
+            carries[e], _ = algs[e].round_step(carries[e], delta)
+        np.testing.assert_array_equal(
+            np.asarray(carries["reference"].buf),
+            np.asarray(carries["fused"].buf), err_msg=f"buf @ round {t}")
+        np.testing.assert_array_equal(
+            np.asarray(carries["reference"].buf_elems),
+            np.asarray(carries["fused"].buf_elems),
+            err_msg=f"buf_elems @ round {t}")
+        np.testing.assert_array_equal(
+            np.asarray(carries["reference"].x),
+            np.asarray(carries["fused"].x), err_msg=f"x @ round {t}")
+
+
+def test_engine_resolution():
+    assert engine.resolve("fused", GSet(universe=8).lattice) == "fused"
+    assert engine.resolve("fused", BitGSet(universe=64).lattice) == "fused"
+    assert engine.resolve("fused", LWWMap(num_keys=4).lattice) == "reference"
+    assert engine.resolve("reference", GSet(universe=8).lattice) == "reference"
+    with pytest.raises(ValueError):
+        engine.resolve("warp", GSet(universe=8).lattice)
+
+
+def test_kernel_kind_assignments():
+    assert GSet(universe=8).lattice.kernel_kind == "max"
+    assert GCounter(4).lattice.kernel_kind == "max"
+    assert BitGSet(universe=64).lattice.kernel_kind == "bitor"
+    assert LWWMap(num_keys=4).lattice.kernel_kind is None
+
+
+def test_fused_loo_matches_naive():
+    """Kernelized leave-one-out sends == the O(P²) naive fold."""
+    topo = topology.partial_mesh(N, 4)
+    op_fn, lat = gset_ops()
+    a = simulate("bprr", lat, topo, op_fn, active_rounds=T, quiet_rounds=Q,
+                 engine="fused")
+    b = simulate("bprr", lat, topo, op_fn, active_rounds=T, quiet_rounds=Q,
+                 engine="reference", loo="naive")
+    np.testing.assert_array_equal(a.final_x, b.final_x)
+    np.testing.assert_array_equal(a.tx, b.tx)

@@ -14,7 +14,7 @@ Invariants (per CRDT type, via hypothesis):
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     GCounter, GMap, GSet, LWWMap, LexCounter, PNCounter,

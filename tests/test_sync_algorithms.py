@@ -148,7 +148,7 @@ def test_duplicated_messages_tolerated():
     assert np.array_equal(r1.final_x, r2.final_x)
 
 
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 
 @settings(max_examples=8, deadline=None)
