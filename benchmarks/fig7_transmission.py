@@ -34,7 +34,8 @@ def run(nodes=C.NODES, events=C.EVENTS, quiet=C.QUIET, verbose=True):
                                       quiet_rounds=quiet)
             # summary vectors are mandatory protocol bytes; seen-map gossip
             # (safe deletes) is metadata, reported in fig9
-            vec_elems = int(2 * topo.num_edges * nodes * events)
+            vec_elems = scuttlebutt.summary_vector_elems(
+                topo.num_edges, nodes, events)
             rows["scuttlebutt"] = {
                 "tx": int(sb.total_tx) + vec_elems,
                 "tx_data_only": int(sb.total_tx),

@@ -1,0 +1,133 @@
+"""Fault benchmark: redundancy & time-to-convergence under loss / partition
+/ churn (EXPERIMENTS.md §Fault; beyond-paper scenario opened by DESIGN.md
+§12).
+
+The paper evaluates on lossless, static-membership rounds; deltas exist
+precisely because real networks are not like that. This benchmark runs the
+Table-I GSet workload on the 15-node partial mesh under
+
+* Bernoulli message loss at {0, 1, 10}%,
+* a mid-run partition splitting the mesh into two halves,
+* node churn (two nodes down for overlapping windows),
+
+and reports, per algorithm: total transmitted elements, the overhead
+relative to the same algorithm's lossless run (retransmission redundancy),
+and time-to-convergence (sync-only drain rounds needed after the last op).
+Every fault schedule leaves a fault-free tail of the drain, so the graph
+is eventually connected and every algorithm must converge — that and the
+paper's qualitative claim (BP+RR ≪ classic under loss: classic re-floods
+whole retained δ-groups, RR extracts them to ⊥ at already-informed
+receivers) are the validation checks. Note classic/bp can transmit
+slightly *less* under loss — lost groups are never re-flooded downstream,
+and that saving can outweigh retransmission — while the RR flavors show
+the genuine retransmission overhead.
+
+Emits ``benchmarks/results/BENCH_fault.json``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sync import FaultSchedule, simulate
+
+from benchmarks import common as C
+
+LOSS_RATES = (0.0, 0.01, 0.10)
+SEED = 7
+
+
+def scenarios(topo, events: int, quiet: int):
+    """Named fault schedules. Loss runs through the first quarter of the
+    quiescence drain (so time-to-convergence reflects healing, not just
+    propagation); partition and churn stay inside the active window. Every
+    schedule leaves a fault-free tail — the graph is eventually connected.
+    """
+    n = topo.num_nodes
+    lossy_rounds = events + quiet // 4
+    out = {}
+    for rate in LOSS_RATES:
+        name = f"loss{int(rate * 100)}"
+        out[name] = (FaultSchedule.none(topo, events) if rate == 0 else
+                     FaultSchedule.bernoulli(topo, lossy_rounds, rate,
+                                             seed=SEED))
+    groups = (np.arange(n) >= n // 2).astype(np.int32)
+    out["partition"] = FaultSchedule.partition(
+        topo, events, start=events // 4, stop=(3 * events) // 4,
+        groups=groups)
+    out["churn"] = FaultSchedule.churn(
+        topo, events,
+        [(1, events // 4, (3 * events) // 4),
+         (n - 2, events // 2, events - 1)])
+    return out
+
+
+def run(nodes=C.NODES, events=40, quiet=None, smoke=False, verbose=True):
+    if smoke:
+        nodes, events = 9, 12
+    if quiet is None:
+        # loss can strand δ-groups in retained buffers until a clean round;
+        # give the drain enough slack for the worst schedule.
+        quiet = max(2 * events, 24)
+    topo = C.topo_of("mesh", nodes)
+    lat, op_fn = C.gset_workload(nodes, events)
+    out = {"topology": topo.name, "nodes": nodes, "events": events,
+           "quiet": quiet, "smoke": smoke, "cells": {}}
+
+    raw = {}
+    for sname, sched in scenarios(topo, events, quiet).items():
+        rows = {}
+        for algo in C.ALGOS:
+            res = simulate(algo, lat, topo, op_fn, active_rounds=events,
+                           quiet_rounds=quiet, faults=sched)
+            conv = res.convergence_round()
+            rows[algo] = {
+                "tx": res.total_tx,
+                "mem_avg": res.avg_mem,
+                "conv_round": conv,
+                # sync-only rounds needed after the last op (−1: never)
+                "ttc_rounds": conv - events + 1 if conv >= 0 else -1,
+                "converged": conv >= 0,
+            }
+        raw[sname] = rows
+
+    for sname, rows in raw.items():         # normalize against loss0 only
+        for algo in C.ALGOS:
+            rows[algo]["tx_overhead_vs_lossless"] = round(
+                rows[algo]["tx"] / max(raw["loss0"][algo]["tx"], 1), 3)
+        out["cells"][sname] = {"raw": rows, "ratio_vs_bprr": C.ratio_table(rows)}
+        if verbose:
+            print(f"--- {sname} (mesh{nodes}, {events}+{quiet} rounds) ---")
+            for algo in C.ALGOS:
+                r = rows[algo]
+                print(f"  {algo:8s} tx={r['tx']:>9,d}  "
+                      f"overhead={r['tx_overhead_vs_lossless']:6.2f}x  "
+                      f"ttc={r['ttc_rounds']:>3d}")
+    # smoke runs get their own file so CI never clobbers the recorded
+    # full-size result referenced by EXPERIMENTS.md §Fault
+    C.save_result("BENCH_fault_smoke" if smoke else "BENCH_fault", out)
+    return out
+
+
+def validate(out):
+    cells = out["cells"]
+    checks = []
+    all_conv = all(r["converged"]
+                   for cell in cells.values() for r in cell["raw"].values())
+    checks.append(
+        ("all algorithms converge within the quiescence window", all_conv))
+    r10 = cells["loss10"]["raw"]
+    checks.append(("bprr < classic tx @ 10% loss (mesh)",
+                   r10["bprr"]["tx"] < r10["classic"]["tx"]))
+    checks.append(("bprr < state tx @ 10% loss (mesh)",
+                   r10["bprr"]["tx"] < r10["state"]["tx"]))
+    checks.append(
+        ("loss adds retransmission overhead (rr/bprr, 10% vs 0%)",
+         r10["rr"]["tx_overhead_vs_lossless"] > 1.0
+         and r10["bprr"]["tx_overhead_vs_lossless"] > 1.0))
+    return checks
+
+
+if __name__ == "__main__":
+    for name, ok in validate(run()):
+        print(f"[{'PASS' if ok else 'FAIL'}] {name}")

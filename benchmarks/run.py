@@ -1,6 +1,7 @@
 """Benchmark orchestrator — one section per paper table/figure.
 
-Usage:  PYTHONPATH=src python -m benchmarks.run [--full]
+Usage:  PYTHONPATH=src python -m benchmarks.run [--full] [--smoke]
+                                                [--section NAME] [--skip ...]
 
 Sections:
   fig7   GSet/GCounter transmission, tree + mesh     (paper Fig 7, Fig 1)
@@ -8,11 +9,18 @@ Sections:
   fig9   metadata per node vs cluster size           (paper Fig 9)
   fig10  memory ratio vs BP+RR                       (paper Fig 10)
   fig11  Retwis under Zipf (bandwidth/memory/CPU)    (paper Fig 11-12)
+  fault    loss/partition/churn redundancy & time-to-convergence
+           (BENCH_fault.json, EXPERIMENTS.md §Fault; --smoke shrinks it
+           to CI sizes)
   engine   fused vs reference sync-round engine A/B (perf trajectory,
            BENCH_engine.json; analytic HBM-pass model + equivalence)
   kernels  CRDT Pallas kernel correctness sweep (interpret mode — TPU perf
            claims come from the roofline analysis, not CPU timings)
   roofline  dry-run roofline table (if results exist)
+
+``--section NAME`` runs exactly one section (e.g. CI's
+``--section fault --smoke``); ``--skip`` removes sections from the
+default full sweep.
 
 Each section prints its table and appends PASS/FAIL validation checks
 against the paper's qualitative claims.
@@ -60,13 +68,24 @@ def bench_kernels():
     return results
 
 
+SECTIONS = ("fig7", "fig8", "fig9", "fig10", "fig11", "fault", "engine",
+            "kernels", "roofline")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale Retwis (50 nodes / 1500 objects)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized fault section (small mesh, few rounds)")
+    ap.add_argument("--section", default="", choices=("",) + SECTIONS,
+                    help="run exactly one section")
     ap.add_argument("--skip", default="", help="comma list of sections")
     args = ap.parse_args()
-    skip = set(args.skip.split(",")) if args.skip else set()
+    if args.section:
+        skip = set(SECTIONS) - {args.section}
+    else:
+        skip = set(args.skip.split(",")) if args.skip else set()
 
     t0 = time.time()
     all_ok = True
@@ -100,6 +119,12 @@ def main() -> None:
         from benchmarks import fig11_retwis as f11
         out = f11.run(full=args.full)
         all_ok &= _checks(f11.validate(out))
+
+    if "fault" not in skip:
+        _section("Fault injection — loss/partition/churn (mesh)")
+        from benchmarks import fig_fault
+        out = fig_fault.run(smoke=args.smoke)
+        all_ok &= _checks(fig_fault.validate(out))
 
     if "engine" not in skip:
         _section("Engine A/B — fused Pallas vs reference jnp sync round")

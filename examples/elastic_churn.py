@@ -4,9 +4,13 @@
 
 A 12-node gossip fleet (partial mesh) runs BP+RR synchronization of its
 control plane (membership GSet, heartbeat GMap, progress GCounter,
-checkpoint registry). Mid-run: one node dies, the failure detector flags
-it, the elastic planner reassigns DP ranks; later the node restarts from
-nothing and catches up purely from gossip. The paper's RR extraction keeps
+checkpoint registry). Faults are driven by a ``sync.faults.FaultSchedule``
+— the same loss/partition/churn primitive the jitted simulator scans over
+(DESIGN.md §12) — wired into ``LocalTransport.drop_fn``: node 7 is down
+for a 10-round epoch while every link also drops 3% of messages. Mid-run
+the failure detector flags the dead node and the elastic planner reassigns
+DP ranks; later the node restarts from nothing and catches up purely from
+gossip + one state-driven bootstrap. The paper's RR extraction keeps
 redundant retransmission bounded — printed at the end.
 """
 
@@ -21,13 +25,22 @@ from repro.runtime import (
     sync_round,
 )
 from repro.runtime.gossip import bootstrap
-from repro.sync import topology
+from repro.sync import FaultSchedule, topology
 
 
 def main():
-    n, max_nodes = 12, 32
+    n, max_nodes, rounds = 12, 32, 24
     topo = topology.partial_mesh(n, 4)
+    dead, dead_at, back_at = 7, 6, 16
+
+    # One declarative fault plan for the whole run: a node-down epoch plus
+    # background message loss on every link.
+    sched = FaultSchedule.churn(topo, rounds, [(dead, dead_at, back_at)]) \
+        .compose(FaultSchedule.bernoulli(topo, rounds, 0.03, seed=11))
+    clock = {"t": 0}
     transport = LocalTransport()
+    transport.drop_fn = sched.drop_fn(lambda: clock["t"])
+
     lists = topo.neighbor_lists()
     nodes = {i: GossipNode(i, lists[i], transport) for i in range(n)}
     gc = GCounter(num_replicas=max_nodes)
@@ -40,12 +53,11 @@ def main():
         nd.register("ckpt", registry.gmap.lattice)
 
     fd = FailureDetector(staleness_rounds=3)
-    dead, dead_at, back_at = 7, 6, 16
     reg = {i: CheckpointRegistry(128) for i in range(n)}
+    detected_at = None
 
-    for rnd in range(24):
-        alive = {i: nd for i, nd in nodes.items()
-                 if i != dead or rnd < dead_at}
+    for rnd in range(rounds):
+        clock["t"] = rnd
         if rnd == back_at:
             print(f"  round {rnd}: node {dead} RESTARTS (empty state)")
             n2 = GossipNode(dead, lists[dead], transport)
@@ -58,7 +70,9 @@ def main():
             # of all prior deltas — paper §VI related work, PMLDC'16)
             boot_cost = bootstrap(n2, nodes[lists[dead][0]])
             print(f"  bootstrap exchanged {boot_cost} elements")
-            alive = nodes
+        # the schedule says who is up: down nodes run no ops and no sync
+        # (their messages would be dropped by the transport anyway)
+        alive = {i: nd for i, nd in nodes.items() if sched.up_at(rnd, i)}
         for i, nd in alive.items():
             beat(nd, max_nodes)
             st = nd.state("progress")
@@ -67,11 +81,16 @@ def main():
                 nd.update("ckpt", reg[i].announce(rnd))
         sync_round(alive)
         suspects = fd.suspects(nodes[0], rnd)
-        if rnd == dead_at + 3:
+        if dead in suspects and detected_at is None:
+            # heartbeat staleness fires once the last pre-crash beat has
+            # gossiped over and aged out — a few rounds after dead_at
+            detected_at = rnd
             plan = plan_from_view(nodes[0], suspects)
             print(f"  round {rnd}: suspects={suspects} -> elastic plan "
                   f"dp_size={plan.dp_size} (was {n})")
+    assert detected_at is not None and dead_at < detected_at < back_at
 
+    clock["t"] = rounds  # past the schedule: fault-free drain
     for _ in range(6):
         sync_round(nodes)
 

@@ -81,15 +81,18 @@ def buffer_fold(buf, *, kind: str = "max", block=FOLD_BLOCK, interpret=None):
 
 
 def round_recv(d_stack, x, *, kind: str = "max", block=None, interpret=None,
-               emit_stored: bool = True):
+               emit_stored: bool = True, active=None):
     """Fused one-pass sync-round receive (DESIGN.md §11).
 
-    ``d_stack``: [P, B, U] gathered per-slot δ-groups (⊥ where invalid),
-    ``x``: [B, U] states. Returns ``(x', stored, cnt, dsz)`` where ``x'`` is
-    the state after joining all P slots in order, ``stored`` [P, B, U] holds
-    the slot-order RR extractions Δ(d_q, x_running) (None when
-    ``emit_stored=False``), and ``cnt``/``dsz`` [B, P] count each slot's
-    novel / received irreducibles per node.
+    ``d_stack``: [P, B, U] gathered per-slot δ-groups, ``x``: [B, U]
+    states. ``active``: optional bool/int [B, P] per-(node, slot) mask —
+    0/False suppresses the slot inside the kernel (topology padding or an
+    injected fault, DESIGN.md §12); with ``active=None`` the caller must
+    pre-mask invalid slots to ⊥. Returns ``(x', stored, cnt, dsz)`` where
+    ``x'`` is the state after joining all P slots in order, ``stored``
+    [P, B, U] holds the slot-order RR extractions Δ(d_q, x_running) (None
+    when ``emit_stored=False``), and ``cnt``/``dsz`` [B, P] count each
+    slot's novel / received irreducibles per node.
 
     Boolean states are viewed as uint8 {0, 1} for the kernel (max ≡ or, and
     TPU tiles have no bool layout) and cast back — bit-identical.
@@ -110,8 +113,13 @@ def round_recv(d_stack, x, *, kind: str = "max", block=None, interpret=None,
     n_pad = -(-u // bn) * bn
     d2 = jnp.pad(d_stack, ((0, 0), (0, m_pad - b), (0, n_pad - u)))
     x2 = jnp.pad(x, ((0, m_pad - b), (0, n_pad - u)))
+    if active is None:
+        a2 = None
+    else:
+        assert active.shape == (b, p)
+        a2 = jnp.pad(active.astype(jnp.int32), ((0, m_pad - b), (0, 0)))
     xo, s, cnt, dsz = round_recv_2d(
-        d2, x2, kind=kind, block=block, interpret=interpret,
+        d2, x2, a2, kind=kind, block=block, interpret=interpret,
         emit_stored=emit_stored)
     xo = xo[:b, :u].astype(orig_dtype)
     if s is not None:

@@ -51,15 +51,21 @@ def _popcount_rows(a):
                    dtype=jnp.int32)
 
 
-def _round_recv_kernel(d_ref, x_ref, *o_refs, p: int, kind: str,
+def _round_recv_kernel(d_ref, x_ref, a_ref, *o_refs, p: int, kind: str,
                        emit_stored: bool):
     if emit_stored:
         xo_ref, s_ref, cnt_ref, dsz_ref = o_refs
     else:
         xo_ref, cnt_ref, dsz_ref = o_refs
     x = x_ref[...]                                    # [bm, bn], VMEM-resident
+    act = a_ref[...]                                  # [bm, p] active slots
     for q in range(p):
-        d = d_ref[q]
+        # Active-slot mask (topology padding ∧ fault delivery, DESIGN.md
+        # §12): a suppressed slot is ⊥ — contributes nothing to x, counts,
+        # or stored extractions. Masking here (in VMEM) replaces a whole
+        # jnp.where pass over the [N, P, U] inbox in HBM.
+        d = jnp.where(act[:, q][:, None] != 0, d_ref[q],
+                      jnp.zeros((), d_ref.dtype))
         if kind == "max":
             novel = d > x                  # irreducible of d strictly above x
             s = jnp.where(novel, d, jnp.zeros_like(d))
@@ -82,9 +88,13 @@ def _round_recv_kernel(d_ref, x_ref, *o_refs, p: int, kind: str,
 
 @functools.partial(
     jax.jit, static_argnames=("kind", "block", "interpret", "emit_stored"))
-def round_recv_2d(d, x, *, kind: str = "max", block=ROUND_BLOCK,
+def round_recv_2d(d, x, active=None, *, kind: str = "max", block=ROUND_BLOCK,
                   interpret: bool | None = None, emit_stored: bool = True):
     """d: [P, M, N] slot-major gathered δ-groups, x: [M, N], tile-aligned.
+
+    ``active``: optional int32 [M, P] per-(node, slot) mask — 0 suppresses
+    the slot entirely (topology padding or an injected fault, DESIGN.md
+    §12); None means all slots active.
 
     Returns ``(x', stored, cnt, dsz)`` with ``stored`` [P, M, N] the
     slot-order RR extractions (omitted when ``emit_stored=False``) and
@@ -94,10 +104,15 @@ def round_recv_2d(d, x, *, kind: str = "max", block=ROUND_BLOCK,
     interpret = interpret_default() if interpret is None else interpret
     p, m, n = d.shape
     assert x.shape == (m, n) and d.dtype == x.dtype
+    if active is None:
+        active = jnp.ones((m, p), jnp.int32)
+    assert active.shape == (m, p)
+    active = active.astype(jnp.int32)
     bm, bn = block
     grid = grid_for((m, n), block)
     d_spec = pl.BlockSpec((p, bm, bn), lambda i, j: (0, i, j))
     x_spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    a_spec = pl.BlockSpec((bm, p), lambda i, j: (i, 0))
     cnt_spec = pl.BlockSpec((1, 1, bm, p), lambda i, j: (i, j, 0, 0))
     cnt_shape = jax.ShapeDtypeStruct(grid + (bm, p), jnp.int32)
     out_specs = [x_spec] + ([d_spec] if emit_stored else []) \
@@ -109,11 +124,11 @@ def round_recv_2d(d, x, *, kind: str = "max", block=ROUND_BLOCK,
         functools.partial(_round_recv_kernel, p=p, kind=kind,
                           emit_stored=emit_stored),
         grid=grid,
-        in_specs=[d_spec, x_spec],
+        in_specs=[d_spec, x_spec, a_spec],
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
-    )(d, x)
+    )(d, x, active)
     if emit_stored:
         xo, s, cnt, dsz = outs
     else:

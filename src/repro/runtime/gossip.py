@@ -69,7 +69,12 @@ class Store:
 
 class LocalTransport:
     """In-process mailbox (tests/simulations). Messages may be dropped or
-    duplicated by the chaos hooks — CRDT sync must tolerate both."""
+    duplicated by the chaos hooks (``drop_fn`` composes with
+    ``sync.faults.FaultSchedule.drop_fn``) — CRDT sync must tolerate both.
+
+    ``send`` returns whether the message was delivered — an acked
+    transport, which lets the sender gate buffer eviction (the same
+    retention rule the jitted simulator applies, DESIGN.md §12)."""
 
     def __init__(self):
         self.mail: Dict[int, List[Tuple[int, str, Any]]] = {}
@@ -77,14 +82,17 @@ class LocalTransport:
         self.dup_fn: Optional[Callable[[int, int], bool]] = None
         self.sent_elements = 0
 
-    def send(self, src: int, dst: int, store: str, payload, size: int):
-        if self.drop_fn is not None and self.drop_fn(src, dst):
-            return
-        self.mail.setdefault(dst, []).append((src, store, payload))
+    def send(self, src: int, dst: int, store: str, payload, size: int) -> bool:
+        # wire cost is paid whether or not the message survives the link —
+        # same tx semantics as the jitted simulator (DESIGN.md §12)
         self.sent_elements += size
+        if self.drop_fn is not None and self.drop_fn(src, dst):
+            return False
+        self.mail.setdefault(dst, []).append((src, store, payload))
         if self.dup_fn is not None and self.dup_fn(src, dst):
             self.mail.setdefault(dst, []).append((src, store, payload))
             self.sent_elements += size
+        return True
 
     def drain(self, node: int):
         msgs = self.mail.get(node, [])
@@ -115,8 +123,16 @@ class GossipNode:
         return self.stores[store].state
 
     def push(self):
-        """Send buffered deltas to all neighbors (Alg 2 lines 9-13)."""
+        """Send buffered deltas to all neighbors (Alg 2 lines 9-13).
+
+        Ack-gated eviction (DESIGN.md §12): the buffer is cleared only
+        when every neighbor acked delivery; otherwise it is retained and
+        re-sent next round. Without retention a δ-group dropped on its
+        only path (e.g. any tree edge) would be lost forever; with it,
+        retransmission costs little because receivers that already saw
+        the data RR-extract it to ⊥ on arrival."""
         for st in self.stores.values():
+            all_acked = True
             for j in self.neighbors:
                 d = st.send_to(j)
                 if d is None:
@@ -124,8 +140,9 @@ class GossipNode:
                 size = int(st.lattice.size(d))
                 if size == 0:
                     continue
-                self.transport.send(self.id, j, st.name, d, size)
-            st.clear()
+                all_acked &= self.transport.send(self.id, j, st.name, d, size)
+            if all_acked:
+                st.clear()
 
     def pull(self):
         """Process received δ-groups (Alg 2 lines 14-17)."""

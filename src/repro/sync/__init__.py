@@ -2,15 +2,19 @@
 
 from repro.sync.algorithms import ALGORITHMS, SyncAlgorithm
 from repro.sync.engine import ENGINES
+from repro.sync.faults import FaultSchedule, RoundFaults
 from repro.sync.simulator import SimResult, converged, simulate
 from repro.sync.topology import Topology, by_name, full, partial_mesh, ring, tree
-from repro.sync import engine, scuttlebutt
+from repro.sync import engine, faults, scuttlebutt
 
 __all__ = [
     "ALGORITHMS",
     "ENGINES",
+    "FaultSchedule",
+    "RoundFaults",
     "SyncAlgorithm",
     "engine",
+    "faults",
     "SimResult",
     "converged",
     "simulate",

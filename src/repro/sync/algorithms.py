@@ -26,6 +26,13 @@ receive loop below; ``engine="fused"`` executes the whole receive phase in
 one Pallas kernel pass and the leave-one-out sends in one ``buffer_fold``
 pass, with automatic fallback to the reference path for lattices without a
 dense kernel kind. Both engines are bit-identical in states and metrics.
+
+Faults (DESIGN.md §12): ``round_step`` optionally takes one round's
+``RoundFaults`` masks (message loss / partitions / node churn compiled by
+``sync/faults.py``). Down nodes send and receive nothing; undelivered
+sends leave the sender's δ-buffer *retained* for retransmission instead of
+cleared. With no faults (or all-ok masks) behavior is bit-identical to the
+fault-free algorithm.
 """
 
 from __future__ import annotations
@@ -143,7 +150,10 @@ class SyncAlgorithm:
 
     # -- one synchronous round -------------------------------------------------
 
-    def round_step(self, carry: AlgoCarry, op_delta) -> tuple[AlgoCarry, RoundMetrics]:
+    def round_step(self, carry: AlgoCarry, op_delta,
+                   faults=None) -> tuple[AlgoCarry, RoundMetrics]:
+        """One synchronous round; ``faults`` is an optional per-round
+        ``faults.RoundFaults`` mask triple (None ⇒ fault-free)."""
         lat, topo = self.lattice, self.topo
         n, p = topo.num_nodes, topo.max_degree
         x, buf, buf_elems = carry
@@ -175,22 +185,36 @@ class SyncAlgorithm:
                 lambda a: jnp.broadcast_to(a[:, None], (n, p) + a.shape[1:]), buf
             )
         send_sizes = lat.size(d_all).astype(jnp.int32)          # [N, P]
-        send_sizes = send_sizes * topo.mask
+        # tx counts what an up sender puts on the wire, delivered or not
+        # (DESIGN.md §12) — down nodes send nothing.
+        send_live = topo.mask if faults is None \
+            else topo.mask & faults.up[:, None]
+        send_sizes = send_sizes * send_live
         tx = jnp.sum(send_sizes.astype(acc))
         cpu = cpu + tx  # serialization cost ∝ elements sent
 
         # (3) clear buffer                                 [Alg 2, line 13]
+        # Under faults, a node whose sends were not all delivered RETAINS
+        # its buffer (ack-gated eviction) and re-sends next round; RR makes
+        # the retransmission cheap at receivers that already saw it.
         if self.has_buffer:
-            buf = jax.tree.map(jnp.zeros_like, buf)
-            buf_elems = jnp.zeros_like(buf_elems)
+            zeros = jax.tree.map(jnp.zeros_like, buf)
+            if faults is None:
+                buf = zeros
+                buf_elems = jnp.zeros_like(buf_elems)
+            else:
+                delivered = jnp.all(faults.send_ok | ~topo.mask, axis=1) \
+                    & faults.up
+                buf = T.where(delivered, zeros, buf)
+                buf_elems = jnp.where(delivered, 0, buf_elems)
 
         # (4) receive all messages, sequentially per slot  [Alg 2, lines 14-17]
         if self.resolved_engine == "fused":
             x, buf, buf_elems, cpu = engine_mod.fused_receive(
-                self, x, buf, buf_elems, cpu, d_all, acc)
+                self, x, buf, buf_elems, cpu, d_all, acc, faults=faults)
         else:
             x, buf, buf_elems, cpu = self._receive_reference(
-                x, buf, buf_elems, cpu, d_all, acc)
+                x, buf, buf_elems, cpu, d_all, acc, faults=faults)
 
         # (5) metrics
         state_elems = lat.size(x).astype(jnp.int32)             # [N]
@@ -203,7 +227,8 @@ class SyncAlgorithm:
         )
         return AlgoCarry(x=x, buf=buf, buf_elems=buf_elems), metrics
 
-    def _receive_reference(self, x, buf, buf_elems, cpu, d_all, acc):
+    def _receive_reference(self, x, buf, buf_elems, cpu, d_all, acc,
+                           faults=None):
         """Reference receive: sequential per-slot jnp loop (3+ HBM passes
         over the state per slot — the fused engine's baseline)."""
         lat, topo = self.lattice, self.topo
@@ -212,6 +237,8 @@ class SyncAlgorithm:
             sender = topo.nbrs[:, q]
             sslot = topo.rev[:, q]
             valid = topo.mask[:, q]
+            if faults is not None:
+                valid = valid & faults.recv_ok[:, q]
             d = T.gather2(d_all, sender, sslot)                 # [N, ...U]
             d = T.where(valid, d, T.bcast(lat.bottom(), (n,)))
 

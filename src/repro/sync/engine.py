@@ -50,14 +50,14 @@ def resolve(engine: str, lattice) -> str:
 
 
 def gather_inbox(d_all, topo):
-    """Route per-edge messages: inbox[n, q] = d_all[nbrs[n,q], rev[n,q]],
-    ⊥ (= 0 for every dense kernel kind) where slot q is padding.
+    """Route per-edge messages: inbox[n, q] = d_all[nbrs[n,q], rev[n,q]].
 
     One gather pass over the [N, P, U] send block — the fused engine's only
-    data movement before the single kernel pass.
+    data movement before the single kernel pass. Padding slots carry
+    garbage (node 0's sends); the kernel's active-slot mask suppresses
+    them in VMEM, saving the extra masking pass over HBM.
     """
-    d = d_all[topo.nbrs, topo.rev]                       # [N, P, U]
-    return jnp.where(topo.mask[..., None], d, jnp.zeros((), d.dtype))
+    return d_all[topo.nbrs, topo.rev]                    # [N, P, U]
 
 
 def _fold_slots(stack, kind: str):
@@ -69,7 +69,8 @@ def _fold_slots(stack, kind: str):
     return acc
 
 
-def fused_receive(algo, x, buf, buf_elems, cpu, d_all, acc_dtype):
+def fused_receive(algo, x, buf, buf_elems, cpu, d_all, acc_dtype,
+                  faults=None):
     """Execute Alg 2 lines 14-17 for all P slots in one kernel pass.
 
     ``algo`` duck-types SyncAlgorithm (name/flags/lattice/topo). Returns the
@@ -82,16 +83,21 @@ def fused_receive(algo, x, buf, buf_elems, cpu, d_all, acc_dtype):
     * RR buffers store Δ extractions — already ⊥ wherever not novel, so the
       reference's ``keep`` masking is the identity and slots write through;
     * classic/BP buffers store whole δ-groups gated by the inflation check,
-      applied here as a cnt-derived mask on the gathered inbox.
+      applied here as a cnt-derived mask on the gathered inbox;
+    * fault masks (message loss / churn, DESIGN.md §12) fold with the
+      topology padding mask into the kernel's active-slot input — a
+      dropped slot contributes nothing to x, counts, or buffers, exactly
+      like the reference loop's widened ``valid`` mask.
     """
     lat, topo = algo.lattice, algo.topo
     kind = lat.kernel_kind
     p = topo.max_degree
 
+    active = topo.mask if faults is None else topo.mask & faults.recv_ok
     inbox = gather_inbox(d_all, topo)                    # [N, P, U]
     d_stack = jnp.transpose(inbox, (1, 0, 2))            # [P, N, U]
     x, stored, cnt, dsz = kops.round_recv(
-        d_stack, x, kind=kind, emit_stored=algo.has_buffer)
+        d_stack, x, kind=kind, emit_stored=algo.has_buffer, active=active)
 
     cpu = cpu + jnp.sum(dsz.astype(acc_dtype))
     if not algo.has_buffer:                              # state-based
@@ -106,7 +112,9 @@ def fused_receive(algo, x, buf, buf_elems, cpu, d_all, acc_dtype):
     if algo.per_origin:                                  # bp / bprr
         slot_vals = jnp.transpose(stored, (1, 0, 2)) if algo.extracts \
             else jnp.where(keep[..., None], inbox, jnp.zeros((), inbox.dtype))
-        buf = buf.at[:, :p].set(slot_vals)               # slot P = local ops
+        # join (not set): fault retention can leave prior entries in the
+        # neighbor slots; after a fault-free clear this is the identity.
+        buf = buf.at[:, :p].set(lat.join(buf[:, :p], slot_vals))
     else:                                                # classic / rr
         add = _fold_slots(stored, kind) if algo.extracts \
             else _fold_slots(

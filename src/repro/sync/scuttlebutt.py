@@ -140,6 +140,20 @@ def simulate(
     )
 
 
+def summary_vector_elems(num_edges: int, num_nodes: int, rounds: int) -> int:
+    """Mandatory data-plane overhead of Scuttlebutt reconciliation (Fig 7):
+    each undirected edge reconciles once per round and *both* directions
+    ship an N-entry summary vector, so ``2 · E · N`` entries per round.
+    (The seen-map gossip for safe deletes is metadata, reported in Fig 9.)
+
+    ``rounds`` is the number of rounds *charged*: fig7 deliberately passes
+    only the active rounds — quiescent reconciliations ship vectors too,
+    but charging them would penalize Scuttlebutt for our drain-length
+    choice, so the accounting stays conservative toward the baseline.
+    """
+    return 2 * num_edges * num_nodes * rounds
+
+
 def metadata_bytes_per_node(num_nodes: int, degree: int, id_bytes: int = 20) -> int:
     """Fig 9 analytic curve: Scuttlebutt metadata per node = N²·P·S."""
     return num_nodes * num_nodes * degree * id_bytes

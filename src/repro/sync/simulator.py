@@ -10,6 +10,11 @@ axis is just a batch axis of the lattice ops, so a 15-node mesh and a
 ``t`` given current states ``x`` ([N, ...U]); rounds ``t >= active_rounds``
 receive no ops (quiescence drain so convergence can be asserted).
 
+Faults (DESIGN.md §12): an optional ``FaultSchedule`` threads per-round
+message-loss / partition / churn masks through the scan as plain inputs —
+the simulated program stays a single jitted scan, and both engines honor
+the masks identically.
+
 Metrics are accumulated in int64 (DESIGN.md §10): the scan is traced under
 ``jax.experimental.enable_x64`` so fleet-scale universe × degree × rounds
 sums cannot wrap the int32 range. Lattice state dtypes are unaffected (all
@@ -28,6 +33,7 @@ import numpy as np
 from repro.core.lattice import Lattice
 from repro.sync import treeops as T
 from repro.sync.algorithms import AlgoCarry, RoundMetrics, SyncAlgorithm
+from repro.sync.faults import FaultSchedule
 from repro.sync.topology import Topology
 
 
@@ -37,6 +43,8 @@ class SimResult(NamedTuple):
     cpu: np.ndarray          # [T] element-ops per round
     max_mem_node: np.ndarray  # [T]
     final_x: Any             # [N, ...U] final states
+    uniform: Optional[np.ndarray]  # [T] bool: all nodes identical at round
+                                   # end (None when tracking was off)
 
     @property
     def total_tx(self) -> int:
@@ -49,6 +57,20 @@ class SimResult(NamedTuple):
     @property
     def avg_mem(self) -> float:
         return float(self.mem.mean())
+
+    def convergence_round(self) -> int:
+        """First round t such that every round ≥ t ended with all nodes
+        holding identical states (−1 if never). With quiescence drain this
+        is the time-to-convergence measured by the fault benchmark."""
+        if self.uniform is None:
+            raise ValueError(
+                "per-round convergence was not tracked; pass "
+                "simulate(track_convergence=True)")
+        uni = np.asarray(self.uniform, bool)
+        if not uni[-1]:
+            return -1
+        stay = np.flip(np.logical_and.accumulate(np.flip(uni)))
+        return int(np.argmax(stay))
 
 
 def simulate(
@@ -63,6 +85,8 @@ def simulate(
     jit: bool = True,
     engine: str = "reference",
     wide_metrics: bool = True,
+    faults: Optional[FaultSchedule] = None,
+    track_convergence: Optional[bool] = None,
 ) -> SimResult:
     """Run ``active_rounds`` op+sync rounds plus ``quiet_rounds`` sync-only
     drain rounds of ``algo`` over ``topo``.
@@ -71,36 +95,73 @@ def simulate(
     ``"reference"`` is the pure-jnp per-slot loop, ``"fused"`` the one-pass
     Pallas engine (falls back to reference for lattices without a dense
     kernel kind). Both produce bit-identical results.
+
+    ``faults`` optionally injects message loss / partitions / node churn
+    (DESIGN.md §12): the schedule's per-round masks ride the scan as plain
+    inputs, so the program stays one jitted scan with no Python branching
+    per round; rounds past the schedule run fault-free. Down nodes execute
+    no ops. Both engines honor the masks identically, and an all-ok
+    schedule is bit-identical to ``faults=None``.
+
+    ``track_convergence`` records per-round cluster agreement
+    (``SimResult.uniform`` / ``convergence_round()``) at the cost of two
+    extra leq passes per round; default None enables it exactly when a
+    fault schedule is given (time-to-convergence is a fault metric).
     """
     alg = SyncAlgorithm(name=algo, lattice=lattice, topo=topo, loo=loo,
                         engine=engine)
     carry0 = alg.init(x0)
     n = topo.num_nodes
     total = active_rounds + quiet_rounds
+    if faults is not None and not faults.same_topology(topo):
+        raise ValueError(
+            f"FaultSchedule was built for topology {faults.topo.name!r}, "
+            f"not {topo.name!r} — its edge masks would land on the wrong "
+            "slots")
+    views = None if faults is None else faults.views(total)
+    if track_convergence is None:
+        track_convergence = faults is not None
 
-    def step(carry, t):
+    def step(carry, xs):
+        if views is None:
+            t, rf = xs, None
+        else:
+            t, rf = xs[0], views.at_round(xs[1:])
         delta = op_fn(carry.x, t)
         # Confine wide_metrics' x64 tracing to the metric accumulators: an
         # op_fn with unpinned dtypes would otherwise emit int64/float64
         # deltas, promote the state, and break the scan carry.
         delta = jax.tree.map(lambda d, xl: d.astype(xl.dtype), delta, carry.x)
-        delta = T.where(
-            jnp.broadcast_to(t < active_rounds, (n,)),
-            delta,
-            T.bcast(lattice.bottom(), (n,)),
-        )
-        return alg.round_step(carry, delta)
+        gate = jnp.broadcast_to(t < active_rounds, (n,))
+        if rf is not None:
+            gate = gate & rf.up           # a down node executes no ops
+        delta = T.where(gate, delta, T.bcast(lattice.bottom(), (n,)))
+        carry, metrics = alg.round_step(carry, delta, faults=rf)
+        if track_convergence:
+            # Per-round cluster agreement (time-to-convergence telemetry):
+            # all nodes ⊑-equal to node 0 at round end.
+            xb = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[:1], a.shape), carry.x)
+            uni = jnp.all(lattice.leq(carry.x, xb) & lattice.leq(xb, carry.x))
+        else:
+            uni = jnp.zeros((), jnp.bool_)
+        return carry, (metrics, uni)
+
+    if views is None:
+        xs = jnp.arange(total)
+    else:
+        xs = (jnp.arange(total), views.recv_ok, views.send_ok, views.up)
 
     def run(c0):
-        return jax.lax.scan(step, c0, jnp.arange(total))
+        return jax.lax.scan(step, c0, xs)
 
     if jit:
         run = jax.jit(run)
     if wide_metrics:
         with jax.experimental.enable_x64():
-            carry, metrics = run(carry0)
+            carry, (metrics, uniform) = run(carry0)
     else:
-        carry, metrics = run(carry0)
+        carry, (metrics, uniform) = run(carry0)
 
     tx = np.asarray(metrics.tx)
     mem = np.asarray(metrics.mem)
@@ -117,6 +178,7 @@ def simulate(
         cpu=cpu,
         max_mem_node=np.asarray(metrics.max_mem_node),
         final_x=jax.device_get(carry.x),
+        uniform=np.asarray(uniform) if track_convergence else None,
     )
 
 

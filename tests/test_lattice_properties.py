@@ -17,13 +17,14 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import (
-    GCounter, GMap, GSet, LWWMap, LexCounter, PNCounter,
+    BitGSet, GCounter, GMap, GSet, LWWMap, LexCounter, PNCounter,
     decompose_dense, join_all,
 )
 from repro.core.lattice import MapLattice
 from repro.core import value_lattices as vl
 
-U = 8  # universe size for property tests
+U = 8           # universe size for property tests
+BIT_WORDS = 2   # BitGSet words per state (universe = 64 bits)
 
 # -- state strategies ---------------------------------------------------------
 
@@ -34,6 +35,11 @@ counter_states = st.lists(
 set_states = st.lists(
     st.booleans(), min_size=U, max_size=U
 ).map(lambda v: jnp.asarray(v, jnp.bool_))
+
+# packed sets (PR 1's wire/memory format): irreducibles are single BITS
+bitgset_states = st.lists(
+    st.integers(0, 2**32 - 1), min_size=BIT_WORDS, max_size=BIT_WORDS
+).map(lambda v: jnp.asarray(np.asarray(v, np.uint32)))
 
 
 @st.composite
@@ -49,6 +55,7 @@ LATTICES = {
     "gcounter": (MapLattice(U, vl.max_int(), "gc").build(), counter_states),
     "gset": (MapLattice(U, vl.or_bool(), "gs").build(), set_states),
     "lww": (MapLattice(U, vl.lex_pair(), "lw").build(), lex_states()),
+    "bitgset": (BitGSet(universe=BIT_WORDS * 32).lattice, bitgset_states),
 }
 
 
@@ -96,10 +103,39 @@ class TestLatticeLaws:
     def test_size_counts_irreducibles(self, name, data):
         lat, strat = LATTICES[name]
         a = data.draw(strat)
-        mask = lat.irreducible_mask(a)
-        if isinstance(mask, tuple):
-            mask = mask[0]
-        assert int(lat.size(a)) == int(jnp.sum(mask))
+        if name == "bitgset":
+            # irreducibles are single bits — size must be the popcount
+            # (the word-level irreducible_mask view is coarser)
+            expected = int(np.unpackbits(
+                np.asarray(a).view(np.uint8)).sum())
+        else:
+            mask = lat.irreducible_mask(a)
+            if isinstance(mask, tuple):
+                mask = mask[0]
+            expected = int(jnp.sum(mask))
+        assert int(lat.size(a)) == expected
+
+
+# -- BitGSet ↔ GSet differential (PR 1's packed wire format) ------------------
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_bitgset_join_delta_match_bool_gset(data):
+    """The packed lattice is the boolean GSet seen through pack_bits: join,
+    Δ, leq, and popcount sizes all commute with packing."""
+    from repro.kernels.ops import pack_bits, unpack_bits
+    universe = BIT_WORDS * 32
+    packed = BitGSet(universe=universe).lattice
+    dense = MapLattice(universe, vl.or_bool(), "gs").build()
+    a, b = data.draw(bitgset_states), data.draw(bitgset_states)
+    da, db = unpack_bits(a, universe), unpack_bits(b, universe)
+    np.testing.assert_array_equal(
+        packed.join(a, b), pack_bits(dense.join(da, db)))
+    np.testing.assert_array_equal(
+        packed.delta(a, b), pack_bits(dense.delta(da, db)))
+    assert bool(packed.leq(a, b)) == bool(dense.leq(da, db))
+    assert int(packed.size(a)) == int(dense.size(da))
+    assert bool(packed.is_bottom(a)) == bool(dense.is_bottom(da))
 
 
 # -- decomposition (Definition 2/3, Proposition 2) ---------------------------

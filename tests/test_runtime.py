@@ -13,11 +13,12 @@ from repro.runtime import (
     beat, converged, join_cluster, plan_from_view, register_membership,
     sync_round,
 )
-from repro.sync import topology
+from repro.sync import FaultSchedule, topology
 
 
-def make_cluster(n=8, degree=4, max_nodes=16):
-    topo = topology.partial_mesh(n, degree)
+def make_cluster(n=8, degree=4, max_nodes=16, topo=None):
+    topo = topology.partial_mesh(n, degree) if topo is None else topo
+    n = topo.num_nodes
     transport = LocalTransport()
     lists = topo.neighbor_lists()
     nodes = {
@@ -85,6 +86,62 @@ def test_chaos_drops_and_duplicates_still_converge():
         sync_round(nodes)
     assert converged(nodes, "ctr")
     assert int(gc.value(nodes[3].state("ctr"))) == 80
+
+
+@pytest.mark.parametrize("topo_name", ["ring", "tree"])
+def test_lossy_transport_converges_on_sparse_topologies(topo_name):
+    """Convergence regression for ``runtime/gossip.py`` under a lossy
+    ``LocalTransport.send`` (FaultSchedule-driven drops) on topologies with
+    little or no path redundancy. Ack-gated buffer retention is what makes
+    this pass: on a tree every edge is the only path, so any unretained
+    dropped δ-group would be lost forever."""
+    n, rounds = 8, 10
+    topo = topology.by_name(topo_name, n)
+    nodes, transport = make_cluster(topo=topo)
+    sched = FaultSchedule.bernoulli(topo, rounds, 0.3, seed=1)
+    clock = {"t": 0}
+    transport.drop_fn = sched.drop_fn(lambda: clock["t"])
+    gs = GSet(universe=n * rounds)
+    for nd in nodes.values():
+        nd.register("set", gs.lattice)
+    for r in range(rounds):
+        clock["t"] = r
+        for i, nd in nodes.items():
+            # globally unique element per node/round: loss of its one and
+            # only δ is unrecoverable without retention
+            delta = jnp.zeros((n * rounds,), jnp.bool_).at[i * rounds + r] \
+                .set(True)
+            nd.update("set", delta)
+        sync_round(nodes)
+    clock["t"] = rounds            # schedule exhausted -> lossless drain
+    for _ in range(2 * n):
+        sync_round(nodes)
+    assert converged(nodes, "set")
+    assert int(np.asarray(nodes[0].state("set")).sum()) == n * rounds
+    assert converged(nodes, MEMBERS)
+
+
+def test_retained_buffers_drain_after_heal():
+    """After the lossy window ends, retained buffers empty out (all sends
+    acked) instead of re-flooding forever."""
+    n, rounds = 6, 6
+    topo = topology.ring(n)
+    nodes, transport = make_cluster(topo=topo)
+    sched = FaultSchedule.bernoulli(topo, rounds, 0.5, seed=3)
+    clock = {"t": 0}
+    transport.drop_fn = sched.drop_fn(lambda: clock["t"])
+    for r in range(rounds):
+        clock["t"] = r
+        for nd in nodes.values():
+            beat(nd, 16)
+        sync_round(nodes)
+    clock["t"] = rounds
+    for _ in range(2 * n):
+        sync_round(nodes)
+    assert converged(nodes, HEARTBEATS)
+    for nd in nodes.values():
+        for st in nd.stores.values():
+            assert not st.buffer, f"unflushed buffer on node {nd.id}"
 
 
 def test_failure_detection_and_elastic_plan():

@@ -73,6 +73,20 @@ def test_safe_delete_bounds_memory():
     assert mem[-1] == N * (N * 40)
 
 
+def test_summary_vector_elems():
+    """The data-plane vector overhead lives next to the other metadata
+    accounting (it used to be computed inline in fig7): 2 directions ×
+    E edges × N-entry vectors × rounds."""
+    assert scuttlebutt.summary_vector_elems(1, 2, 1) == 4
+    topo = topology.partial_mesh(N, 4)   # 8 nodes, degree 4 -> 16 edges
+    assert topo.num_edges == 16
+    assert scuttlebutt.summary_vector_elems(topo.num_edges, N, T) \
+        == 2 * 16 * 8 * 15
+    ring = topology.ring(5)              # 5 edges
+    assert scuttlebutt.summary_vector_elems(ring.num_edges, 5, 3) \
+        == 2 * 5 * 5 * 3
+
+
 def test_metadata_quadratic():
     for n in (8, 16, 32):
         sb = scuttlebutt.metadata_bytes_per_node(n, degree=4)
