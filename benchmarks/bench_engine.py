@@ -89,6 +89,7 @@ ALGOS = ("classic", "rr", "bprr")
 
 
 def run(full: bool = False, verbose: bool = True):
+    t_start = time.time()
     topo = C.topo_of("mesh", C.NODES)
     p = topo.max_degree
     grid = []
@@ -144,7 +145,8 @@ def run(full: bool = False, verbose: bool = True):
                  "engine runs Pallas interpret mode and is not indicative. "
                  "The analytic pass model is the optimized quantity."),
     }
-    C.save_result("BENCH_engine", out)
+    C.save_result("BENCH_engine", out,
+                  harness=C.harness_meta(t_start, len(grid)))
     return out
 
 

@@ -1,0 +1,127 @@
+"""Sweep-engine A/B: one-program batched grid vs per-cell Python loop
+(DESIGN.md §13; BENCH_sweep.json).
+
+The pre-sweep harness ran every (seed, algorithm) cell of the Fig 7 grid
+as its own ``simulate()`` call — each call builds fresh closures, so
+``jax.jit`` re-traces and re-compiles the scan for every cell, and each
+round dispatches on tiny [N, U] arrays. The sweep engine stacks the seed
+axis into one [B, N, U] program per algorithm: B× fewer compiles and B×
+larger elementwise ops per dispatch.
+
+Both paths are timed end-to-end (compile + run — compile time IS the
+harness cost being eliminated), and every batched cell is checked
+bit-identical to its looped equivalent before timing is reported.
+
+Wall-clock here is CPU wall-clock of the *harness*, not a TPU kernel
+claim; the fused-engine kernels keep their perf story in BENCH_engine's
+analytic pass model (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.sync import SweepSpec, simulate, simulate_sweep
+
+from benchmarks import common as C
+
+SEEDS = tuple(range(16))
+
+
+def _single_cell_op(nodes, events, seed):
+    """The unbatched op_fn for one seed — same permutation scheme as
+    ``common.gset_sweep_workload`` cell ``seed``."""
+    import jax.numpy as jnp
+
+    perm = np.arange(events) if seed == 0 \
+        else np.random.default_rng(seed).permutation(events)
+    perm = jnp.asarray(perm, jnp.int32)
+
+    def op_fn(x, t):
+        ids = jnp.arange(nodes) * events + perm[jnp.minimum(t, events - 1)]
+        d = jnp.zeros((nodes, nodes * events), jnp.bool_)
+        return d.at[jnp.arange(nodes), ids].set(True)
+
+    return op_fn
+
+
+def run(nodes=C.NODES, events=C.EVENTS, quiet=C.QUIET, seeds=SEEDS,
+        smoke=False, verbose=True):
+    t0 = time.time()
+    if smoke:
+        nodes, events, quiet, seeds = 9, 12, 12, (0, 1, 2, 3)
+    topo = C.topo_of("mesh", nodes)
+    lat, sweep_op = C.gset_sweep_workload(nodes, events, seeds)
+    batch = len(seeds)
+
+    per_algo = {}
+    identical = True
+    loop_s = batch_s = 0.0
+    for algo in C.ALGOS:
+        # -- batched: the whole seed axis as one program ---------------------
+        tb = time.time()
+        spec = SweepSpec(batch=batch, op_fn=sweep_op)
+        res = simulate_sweep(algo, lat, topo, spec, active_rounds=events,
+                             quiet_rounds=quiet)
+        tb = time.time() - tb
+
+        # -- looped: one simulate() per cell (the pre-sweep harness) ---------
+        tl = time.time()
+        singles = [
+            simulate(algo, lat, topo, _single_cell_op(nodes, events, s),
+                     active_rounds=events, quiet_rounds=quiet)
+            for s in seeds
+        ]
+        tl = time.time() - tl
+
+        for b, single in enumerate(singles):
+            cell = res.cell(b)
+            same = (np.array_equal(cell.tx, single.tx)
+                    and np.array_equal(cell.mem, single.mem)
+                    and np.array_equal(cell.cpu, single.cpu)
+                    and np.array_equal(np.asarray(cell.final_x),
+                                       np.asarray(single.final_x)))
+            identical &= same
+        per_algo[algo] = {"batched_s": round(tb, 3), "looped_s": round(tl, 3),
+                          "speedup": round(tl / max(tb, 1e-9), 2)}
+        loop_s += tl
+        batch_s += tb
+        if verbose:
+            print(f"  {algo:8s} looped={tl:7.2f}s  batched={tb:6.2f}s  "
+                  f"speedup={tl / max(tb, 1e-9):5.1f}x")
+
+    out = {
+        "grid": {"topology": topo.name, "nodes": nodes, "events": events,
+                 "quiet": quiet, "seeds": list(seeds),
+                 "algorithms": list(C.ALGOS)},
+        "smoke": smoke,
+        "looped_s": round(loop_s, 3),
+        "batched_s": round(batch_s, 3),
+        "speedup": round(loop_s / max(batch_s, 1e-9), 2),
+        "cells_identical": bool(identical),
+        "per_algo": per_algo,
+    }
+    if verbose:
+        print(f"  TOTAL    looped={loop_s:7.2f}s  batched={batch_s:6.2f}s  "
+              f"speedup={out['speedup']:5.1f}x  "
+              f"bit-identical={identical}")
+    C.save_result("BENCH_sweep_smoke" if smoke else "BENCH_sweep", out,
+                  harness=C.harness_meta(t0, 2 * batch * len(C.ALGOS)))
+    return out
+
+
+def validate(out):
+    floor = 1.5 if out["smoke"] else 5.0
+    return [
+        ("every sweep cell bit-identical to its looped run",
+         out["cells_identical"]),
+        (f"batched ≥ {floor}× faster than per-cell loop on this grid",
+         out["speedup"] >= floor),
+    ]
+
+
+if __name__ == "__main__":
+    for name, ok in validate(run()):
+        print(f"[{'PASS' if ok else 'FAIL'}] {name}")

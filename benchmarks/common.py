@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import GCounter, GMap, GSet
-from repro.sync import scuttlebutt, simulate, topology
+from repro.sync import SweepSpec, scuttlebutt, simulate, simulate_sweep, topology
 
 RESULTS = Path(__file__).resolve().parent / "results"
 
@@ -129,9 +129,100 @@ def run_delta_algos(lat, op_fn, topo, events=EVENTS, quiet=QUIET):
     return out
 
 
-def save_result(name: str, payload):
+# -- sweep-engine workloads (DESIGN.md §13) ----------------------------------
+
+def gset_sweep_workload(nodes=NODES, events=EVENTS, seeds=(0,)):
+    """Seeded GSet sweep: cell b adds node-unique elements in the order of
+    a seed-derived permutation of the per-node id block. Seed 0 is the
+    identity permutation — bit-identical to ``gset_workload`` — so cell 0
+    reproduces the paper-canonical Fig 7 numbers; other seeds permute
+    *which* unique element lands each round (transmission counts are
+    permutation-invariant, so all cells agree — the batch axis is the
+    harness-speed lever, not a result changer)."""
+    lat = GSet(universe=nodes * events).lattice
+    perms = np.stack([
+        np.arange(events) if s == 0
+        else np.random.default_rng(s).permutation(events)
+        for s in seeds])
+    perms = jnp.asarray(perms, jnp.int32)                  # [S, T]
+
+    def op_fn(x, t):
+        b = x.shape[0]
+        # Explicit contract (no silent slicing): the seed table must match
+        # the batch exactly, or hold a single seed broadcast to every cell
+        # (fig_fault's fault-scenario sweeps share one op stream). Either
+        # way the table is indexed by the GLOBAL batch, so device-local
+        # blocks (simulate_sweep(shard=True)) are not supported here.
+        assert b == len(seeds) or len(seeds) == 1, (
+            f"op stream built for {len(seeds)} seeds cannot serve a "
+            f"batch of {b} cells — pass exactly one seed (broadcast) or "
+            "one per cell")
+        tab = perms if len(seeds) == b \
+            else jnp.broadcast_to(perms, (b,) + perms.shape[1:])
+        tc = jnp.minimum(t, events - 1)
+        ids = jnp.arange(nodes)[None, :] * events \
+            + tab[:, tc][:, None]                          # [B, N]
+        d = jnp.zeros((b, nodes, nodes * events), jnp.bool_)
+        return d.at[jnp.arange(b)[:, None], jnp.arange(nodes)[None, :],
+                    ids].set(True)
+
+    return lat, op_fn
+
+
+def gcounter_sweep_workload(nodes=NODES):
+    """GCounter sweep op: one increment per node/tick in every cell. The
+    workload is deterministic — all cells are identical and cell 0 matches
+    ``gcounter_workload`` bit-for-bit — so run it with ``batch=1``: a
+    wider batch would only re-simulate the same cell."""
+    lat = GCounter(nodes).lattice
+
+    def op_fn(x, t):
+        b = x.shape[0]
+        idx = jnp.arange(nodes)
+        d = jnp.zeros((b, nodes, nodes), jnp.int32)
+        return d.at[:, idx, idx].set(x[:, idx, idx] + 1)
+
+    return lat, op_fn
+
+
+def run_delta_algos_sweep(lat, op_fn, batch, topo, events=EVENTS,
+                          quiet=QUIET, faults=None, engine="reference"):
+    """Per-algorithm rows through the one-program sweep path: each
+    algorithm runs its whole B-cell grid as one jitted scan; reported
+    metrics come from cell 0 (the canonical seed), with the sweep's
+    wall-clock covering all B cells."""
+    out = {}
+    for algo in ALGOS:
+        t0 = time.time()
+        spec = SweepSpec(batch=batch, op_fn=op_fn, faults=faults)
+        res = simulate_sweep(algo, lat, topo, spec, active_rounds=events,
+                             quiet_rounds=quiet, engine=engine)
+        c0 = res.cell(0)
+        out[algo] = {
+            "tx": c0.total_tx,
+            "mem_avg": c0.avg_mem,
+            "mem_max_node": int(c0.max_mem_node.max()),
+            "cpu": c0.total_cpu,
+            "wall_s": round(time.time() - t0, 2),
+            "sweep_cells": batch,
+        }
+    return out
+
+
+def save_result(name: str, payload, harness=None):
+    """Write one results JSON; ``harness`` optionally records the
+    section's own speed (wall-clock seconds and simulated cell count), so
+    the BENCH trajectory captures harness throughput alongside the
+    paper metrics."""
+    if harness is not None:
+        payload = {**payload, "harness": harness}
     RESULTS.mkdir(parents=True, exist_ok=True)
     (RESULTS / f"{name}.json").write_text(json.dumps(payload, indent=2))
+
+
+def harness_meta(t0: float, cells: int) -> dict:
+    """Per-section speed record for ``save_result(harness=...)``."""
+    return {"wall_s": round(time.time() - t0, 2), "cells": int(cells)}
 
 
 def ratio_table(rows, base_key="bprr", metric="tx"):

@@ -8,12 +8,15 @@ increments, so retained-delta stores grow with the op rate)."""
 
 from __future__ import annotations
 
+import time
+
 from repro.sync import scuttlebutt
 
 from benchmarks import common as C
 
 
 def run(nodes=C.NODES, events=C.EVENTS, quiet=C.QUIET, verbose=True):
+    t0 = time.time()
     topo = C.topo_of("mesh", nodes)
     out = {}
     cases = {
@@ -41,7 +44,8 @@ def run(nodes=C.NODES, events=C.EVENTS, quiet=C.QUIET, verbose=True):
                              ("state", "classic", "bp", "rr", "bprr",
                               "scuttlebutt"))
             print(f"{name:9s}: {line}")
-    C.save_result("fig10_memory", out)
+    C.save_result("fig10_memory", out,
+                  harness=C.harness_meta(t0, 4 * (len(C.ALGOS) + 1)))
     return out
 
 

@@ -20,6 +20,7 @@ BP+RR, split into first/second experiment half (Fig 11), and the CPU
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import jax.numpy as jnp
@@ -105,6 +106,7 @@ def run_one(algo, topo, zipf, rounds, objects, slots, ops_per_node, seed=0):
 
 def run(nodes=16, objects=96, slots=32, rounds=40, ops_per_node=6,
         verbose=True, full=False):
+    t0 = time.time()
     if full:
         nodes, objects, slots, rounds, ops_per_node = 50, 1500, 64, 100, 10
     topo = topology.partial_mesh(nodes, 4)
@@ -132,7 +134,8 @@ def run(nodes=16, objects=96, slots=32, rounds=40, ops_per_node=6,
                   f"bprr h2 {row['bprr']['tx_mb_node_h2']:9.2f} MB/node, "
                   f"tx_ratio={row['tx_ratio_h2']:6.2f}  "
                   f"cpu_overhead={row['cpu_overhead']:5.2f}x")
-    C.save_result("fig11_retwis", out)
+    C.save_result("fig11_retwis", out,
+                  harness=C.harness_meta(t0, 2 * len(ZIPFS)))
     return out
 
 

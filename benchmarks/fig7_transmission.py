@@ -4,6 +4,12 @@ Reports total transmitted elements per algorithm and the ratio w.r.t.
 delta-based BP+RR (the paper's normalization). Scuttlebutt is reported both
 data-only and data+summary-vector metadata (DESIGN.md §10 discusses why).
 
+Runs through the one-program sweep engine (DESIGN.md §13): per algorithm,
+the whole seed batch executes as ONE jitted scan instead of a re-jitted
+Python loop per cell. Cell 0 is the canonical (identity-permutation)
+workload, so the reported numbers are bit-identical to the pre-sweep
+harness; ``benchmarks/bench_sweep.py`` records the wall-clock win.
+
 Paper claims validated here:
   * classic delta ≈ state-based on the mesh (no improvement);
   * tree: BP alone attains the best result;
@@ -14,24 +20,37 @@ Paper claims validated here:
 
 from __future__ import annotations
 
+import time
+
 from repro.sync import scuttlebutt
 
 from benchmarks import common as C
 
+SEEDS = (0, 1, 2, 3)
 
-def run(nodes=C.NODES, events=C.EVENTS, quiet=C.QUIET, verbose=True):
+
+def run(nodes=C.NODES, events=C.EVENTS, quiet=C.QUIET, seeds=SEEDS,
+        verbose=True):
+    t0 = time.time()
     out = {}
+    cells = 0
     for topo_name in ("tree", "mesh"):
         topo = C.topo_of(topo_name, nodes)
-        for bench, (lat, op_fn), sb_codec in (
-            ("gset", C.gset_workload(nodes, events),
+        # gcounter's op stream is deterministic — every cell would be the
+        # same simulation, so it sweeps with batch=1; only the seeded gset
+        # workload gets a real seed axis.
+        for bench, (lat, op_fn), batch, sb_codec in (
+            ("gset", C.gset_sweep_workload(nodes, events, seeds), len(seeds),
              C.scuttlebutt_gset_codec(nodes, events)),
-            ("gcounter", C.gcounter_workload(nodes),
+            ("gcounter", C.gcounter_sweep_workload(nodes), 1,
              C.scuttlebutt_gcounter_codec(nodes)),
         ):
-            rows = C.run_delta_algos(lat, op_fn, topo, events, quiet)
+            rows = C.run_delta_algos_sweep(lat, op_fn, batch, topo,
+                                           events, quiet)
+            cells += len(C.ALGOS) * batch
             sb = scuttlebutt.simulate(sb_codec, topo, active_rounds=events,
                                       quiet_rounds=quiet)
+            cells += 1
             # summary vectors are mandatory protocol bytes; seen-map gossip
             # (safe deletes) is metadata, reported in fig9
             vec_elems = scuttlebutt.summary_vector_elems(
@@ -50,7 +69,8 @@ def run(nodes=C.NODES, events=C.EVENTS, quiet=C.QUIET, verbose=True):
                 for k in ("state", "classic", "bp", "rr", "bprr", "scuttlebutt"):
                     print(f"  {k:12s} tx={rows[k]['tx']:>9,d}  "
                           f"ratio={ratios[k]:6.2f}")
-    C.save_result("fig7_transmission", out)
+    C.save_result("fig7_transmission", out,
+                  harness=C.harness_meta(t0, cells))
     return out
 
 

@@ -6,6 +6,8 @@ between syncs ⇒ even optimal deltas approach state-based size)."""
 
 from __future__ import annotations
 
+import time
+
 from repro.sync import scuttlebutt
 
 from benchmarks import common as C
@@ -14,6 +16,7 @@ K_LEVELS = (10, 30, 60, 100)
 
 
 def run(nodes=C.NODES, events=C.EVENTS, quiet=C.QUIET, verbose=True):
+    t0 = time.time()
     out = {}
     for topo_name in ("tree", "mesh"):
         topo = C.topo_of(topo_name, nodes)
@@ -37,7 +40,9 @@ def run(nodes=C.NODES, events=C.EVENTS, quiet=C.QUIET, verbose=True):
                     f"{a}={ratios[a]:5.2f}" for a in
                     ("state", "classic", "bp", "rr", "bprr", "scuttlebutt"))
                 print(f"GMap {k:3d}% {topo_name:4s}: {line}")
-    C.save_result("fig8_gmap", out)
+    C.save_result("fig8_gmap", out,
+                  harness=C.harness_meta(
+                      t0, 2 * len(K_LEVELS) * (len(C.ALGOS) + 1)))
     return out
 
 

@@ -8,6 +8,8 @@ curve."""
 
 from __future__ import annotations
 
+import time
+
 from repro.sync import scuttlebutt, topology
 
 from benchmarks import common as C
@@ -18,6 +20,7 @@ DEGREE = 4
 
 
 def run(verbose=True):
+    t0 = time.time()
     out = {"analytic": {}, "measured_entries": {}}
     for n in SIZES:
         sb = scuttlebutt.metadata_bytes_per_node(n, DEGREE, ID_BYTES)
@@ -38,7 +41,8 @@ def run(verbose=True):
     if verbose:
         print(f"measured meta entries/round (N=16): {per_round_entries} "
               f"(expected {expected})")
-    C.save_result("fig9_metadata", out)
+    C.save_result("fig9_metadata", out,
+                  harness=C.harness_meta(t0, len(SIZES) + 1))
     return out
 
 

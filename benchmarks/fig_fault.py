@@ -13,6 +13,12 @@ Table-I GSet workload on the 15-node partial mesh under
 and reports, per algorithm: total transmitted elements, the overhead
 relative to the same algorithm's lossless run (retransmission redundancy),
 and time-to-convergence (sync-only drain rounds needed after the last op).
+
+The whole fault grid runs through the one-program sweep engine
+(DESIGN.md §13): per algorithm, the five scenario schedules stack into a
+[B=5, T, N, P] mask batch and execute as ONE jitted scan — 5 programs for
+the 25-cell grid instead of 25 — with every cell bit-identical to its
+single-run equivalent, so the numbers match the pre-sweep harness.
 Every fault schedule leaves a fault-free tail of the drain, so the graph
 is eventually connected and every algorithm must converge — that and the
 paper's qualitative claim (BP+RR ≪ classic under loss: classic re-floods
@@ -27,9 +33,11 @@ Emits ``benchmarks/results/BENCH_fault.json``.
 
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
-from repro.sync import FaultSchedule, simulate
+from repro.sync import FaultSchedule, SweepSpec, simulate_sweep
 
 from benchmarks import common as C
 
@@ -63,6 +71,7 @@ def scenarios(topo, events: int, quiet: int):
 
 
 def run(nodes=C.NODES, events=40, quiet=None, smoke=False, verbose=True):
+    t0 = time.time()
     if smoke:
         nodes, events = 9, 12
     if quiet is None:
@@ -70,26 +79,33 @@ def run(nodes=C.NODES, events=40, quiet=None, smoke=False, verbose=True):
         # give the drain enough slack for the worst schedule.
         quiet = max(2 * events, 24)
     topo = C.topo_of("mesh", nodes)
-    lat, op_fn = C.gset_workload(nodes, events)
+    lat, op_fn = C.gset_sweep_workload(nodes, events, seeds=(0,))
     out = {"topology": topo.name, "nodes": nodes, "events": events,
            "quiet": quiet, "smoke": smoke, "cells": {}}
 
-    raw = {}
-    for sname, sched in scenarios(topo, events, quiet).items():
-        rows = {}
-        for algo in C.ALGOS:
-            res = simulate(algo, lat, topo, op_fn, active_rounds=events,
-                           quiet_rounds=quiet, faults=sched)
-            conv = res.convergence_round()
-            rows[algo] = {
-                "tx": res.total_tx,
-                "mem_avg": res.avg_mem,
+    # The scenario axis IS the sweep batch: stacked [B, T, N, P] masks, one
+    # jitted scan per algorithm for the whole grid (DESIGN.md §13).
+    scheds = scenarios(topo, events, quiet)
+    snames = list(scheds)
+    spec = SweepSpec(batch=len(snames), op_fn=op_fn,
+                     faults=[scheds[s] for s in snames])
+
+    raw = {s: {} for s in snames}
+    for algo in C.ALGOS:
+        res = simulate_sweep(algo, lat, topo, spec, active_rounds=events,
+                             quiet_rounds=quiet)
+        convs = res.convergence_round()
+        for b, sname in enumerate(snames):
+            cell = res.cell(b)
+            conv = int(convs[b])
+            raw[sname][algo] = {
+                "tx": cell.total_tx,
+                "mem_avg": cell.avg_mem,
                 "conv_round": conv,
                 # sync-only rounds needed after the last op (−1: never)
                 "ttc_rounds": conv - events + 1 if conv >= 0 else -1,
                 "converged": conv >= 0,
             }
-        raw[sname] = rows
 
     for sname, rows in raw.items():         # normalize against loss0 only
         for algo in C.ALGOS:
@@ -105,7 +121,8 @@ def run(nodes=C.NODES, events=40, quiet=None, smoke=False, verbose=True):
                       f"ttc={r['ttc_rounds']:>3d}")
     # smoke runs get their own file so CI never clobbers the recorded
     # full-size result referenced by EXPERIMENTS.md §Fault
-    C.save_result("BENCH_fault_smoke" if smoke else "BENCH_fault", out)
+    C.save_result("BENCH_fault_smoke" if smoke else "BENCH_fault", out,
+                  harness=C.harness_meta(t0, len(C.ALGOS) * len(snames)))
     return out
 
 

@@ -12,6 +12,8 @@ Sections:
   fault    loss/partition/churn redundancy & time-to-convergence
            (BENCH_fault.json, EXPERIMENTS.md §Fault; --smoke shrinks it
            to CI sizes)
+  sweep    one-program sweep engine A/B: batched config grid vs per-cell
+           loop (BENCH_sweep.json, DESIGN.md §13; --smoke shrinks it)
   engine   fused vs reference sync-round engine A/B (perf trajectory,
            BENCH_engine.json; analytic HBM-pass model + equivalence)
   kernels  CRDT Pallas kernel correctness sweep (interpret mode — TPU perf
@@ -68,8 +70,8 @@ def bench_kernels():
     return results
 
 
-SECTIONS = ("fig7", "fig8", "fig9", "fig10", "fig11", "fault", "engine",
-            "kernels", "roofline")
+SECTIONS = ("fig7", "fig8", "fig9", "fig10", "fig11", "fault", "sweep",
+            "engine", "kernels", "roofline")
 
 
 def main() -> None:
@@ -125,6 +127,12 @@ def main() -> None:
         from benchmarks import fig_fault
         out = fig_fault.run(smoke=args.smoke)
         all_ok &= _checks(fig_fault.validate(out))
+
+    if "sweep" not in skip:
+        _section("Sweep engine A/B — one-program batched grid vs per-cell loop")
+        from benchmarks import bench_sweep
+        out = bench_sweep.run(smoke=args.smoke)
+        all_ok &= _checks(bench_sweep.validate(out))
 
     if "engine" not in skip:
         _section("Engine A/B — fused Pallas vs reference jnp sync round")

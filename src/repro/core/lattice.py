@@ -252,7 +252,22 @@ def linear_sum(name: str, low: Lattice, high: Lattice,
 
     ``is_high``: not needed at runtime (the tag carries it) — kept for API
     symmetry with the paper's construct description.
+
+    Batch-clean: tags are per-*point* scalars while side states carry
+    universe axes, so every tag-driven select aligns the mask per leaf by
+    the side's ⊥ rank (a bare ``jnp.where(tag_mask, side, ⊥)`` would
+    right-align the node axis onto the universe axis for batched states —
+    it only ever broadcast by coincidence when N == U).
     """
+
+    def _tag_sel(mask, a, b, bot_ref):
+        # mask [...] vs side leaves [..., *U]: grow one trailing singleton
+        # per universe axis (the side lattice's ⊥ leaf rank).
+        def sel(x, y, bl):
+            c = mask.reshape(mask.shape + (1,) * jnp.ndim(bl))
+            return jnp.where(c, x, y)
+
+        return jax.tree.map(sel, a, b, bot_ref)
 
     def bottom():
         return (jnp.zeros((), jnp.int32), low.bottom(), high.bottom())
@@ -267,9 +282,8 @@ def linear_sum(name: str, low: Lattice, high: Lattice,
         a = low.join(ax, ay)
         b = high.join(bx, by)
         # low result only meaningful if both are low
-        a_out = jax.tree.map(
-            lambda l, bot: jnp.where(both_low, l, bot), a,
-            jax.tree.map(jnp.zeros_like, a))
+        a_out = _tag_sel(both_low, a, jax.tree.map(jnp.zeros_like, a),
+                         low.bottom())
         return (tag, a_out, b)
 
     def leq(x, y):
@@ -283,15 +297,19 @@ def linear_sum(name: str, low: Lattice, high: Lattice,
     def delta(x, y):
         tx, ax, bx = x
         ty, ay, by = y
-        # x strictly above y's side: whole x side is novel
+        # Optimal Δ: ⊥ whenever x ⊑ y (in particular any low x against a
+        # high y, and high-vs-high with bx ⊑ by — emitting x's own side
+        # there would be correct-but-not-minimal, breaking Δ-optimality).
+        # The low side contributes only when BOTH are low (Δ within A);
+        # a high x delegates to the high side's Δ, which against a low y
+        # compares to ⊥_B and returns all of x's high irreducibles.
         da = low.delta(ax, ay)
         db = high.delta(bx, by)
         same_low = jnp.logical_and(tx == 0, ty == 0)
-        a_out = jax.tree.map(
-            lambda d, full, bot: jnp.where(same_low, d,
-                                           jnp.where(tx == 0, full, bot)),
-            da, ax, jax.tree.map(jnp.zeros_like, da))
-        return (tx, a_out, db)
+        a_out = _tag_sel(same_low, da, jax.tree.map(jnp.zeros_like, da),
+                         low.bottom())
+        tag = jnp.where(leq(x, y), jnp.zeros_like(tx), tx)
+        return (tag, a_out, db)
 
     def size(x):
         tx, ax, bx = x

@@ -62,15 +62,34 @@ def lex_join_delta(a, b, *, block=DEFAULT_BLOCK, interpret=None):
     return ((unp(t), unp(v)), (unp(dt), unp(dv)), cnt)
 
 
-def buffer_fold(buf, *, kind: str = "max", block=FOLD_BLOCK, interpret=None):
+def buffer_fold(buf, *, kind: str = "max", block=FOLD_BLOCK, interpret=None,
+                batched: bool = False):
     """Per-neighbor BP sends from an origin-indexed buffer [K, ...U] ->
-    [K-1, ...U] leave-one-out joins."""
+    [K-1, ...U] leave-one-out joins.
+
+    ``batched=True`` treats axis 1 as a sweep config axis (buf
+    [K, B, ...U], DESIGN.md §13): each config is tiled separately under a
+    leading batch grid dimension, so per-config results are bit-identical
+    to folding that config alone.
+    """
     interpret = interpret_default() if interpret is None else interpret
     k = buf.shape[0]
-    flat = buf.reshape(k, -1)
-    n = flat.shape[1]
     bm, bn = block
     cols = bn
+    if batched:
+        bcfg = buf.shape[1]
+        flat = buf.reshape(k, bcfg, -1)
+        n = flat.shape[2]
+        rows = -(-n // cols)
+        rows_pad = -(-rows // bm) * bm
+        flat = jnp.pad(flat, ((0, 0), (0, 0), (0, rows_pad * cols - n)))
+        out = buffer_fold_2d(
+            flat.reshape(k, bcfg, rows_pad, cols), kind=kind, block=block,
+            interpret=interpret, batched=True)
+        return out.reshape(k - 1, bcfg, -1)[:, :, :n] \
+            .reshape((k - 1,) + buf.shape[1:])
+    flat = buf.reshape(k, -1)
+    n = flat.shape[1]
     rows = -(-n // cols)
     rows_pad = -(-rows // bm) * bm
     flat = jnp.pad(flat, ((0, 0), (0, rows_pad * cols - n)))
@@ -94,12 +113,22 @@ def round_recv(d_stack, x, *, kind: str = "max", block=None, interpret=None,
     when ``emit_stored=False``), and ``cnt``/``dsz`` [B, P] count each
     slot's novel / received irreducibles per node.
 
+    Sweep batching (DESIGN.md §13): a rank-3 ``x`` ([C, B, U] with a
+    leading config axis, ``d_stack`` [P, C, B, U], ``active`` [C, B, P])
+    dispatches to the kernel's leading batch grid dimension; counts come
+    back [C, B, P]. Per-cell results are bit-identical to unbatched calls.
+
     Boolean states are viewed as uint8 {0, 1} for the kernel (max ≡ or, and
     TPU tiles have no bool layout) and cast back — bit-identical.
     """
     interpret = interpret_default() if interpret is None else interpret
-    p, b, u = d_stack.shape
-    assert x.shape == (b, u)
+    batched = x.ndim == 3
+    if batched:
+        p, c, b, u = d_stack.shape
+        assert x.shape == (c, b, u)
+    else:
+        p, b, u = d_stack.shape
+        assert x.shape == (b, u)
     orig_dtype = x.dtype
     if orig_dtype == jnp.bool_:
         d_stack = d_stack.astype(jnp.uint8)
@@ -111,16 +140,26 @@ def round_recv(d_stack, x, *, kind: str = "max", block=None, interpret=None,
     bm, bn = block
     m_pad = -(-b // bm) * bm
     n_pad = -(-u // bn) * bn
-    d2 = jnp.pad(d_stack, ((0, 0), (0, m_pad - b), (0, n_pad - u)))
-    x2 = jnp.pad(x, ((0, m_pad - b), (0, n_pad - u)))
+    lead = ((0, 0),) * (2 if batched else 1)
+    d2 = jnp.pad(d_stack, lead + ((0, m_pad - b), (0, n_pad - u)))
+    x2 = jnp.pad(x, lead[:-1] + ((0, m_pad - b), (0, n_pad - u)))
     if active is None:
         a2 = None
     else:
-        assert active.shape == (b, p)
-        a2 = jnp.pad(active.astype(jnp.int32), ((0, m_pad - b), (0, 0)))
+        assert active.shape == x.shape[:-1] + (p,)
+        a2 = jnp.pad(active.astype(jnp.int32),
+                     lead[:-1] + ((0, m_pad - b), (0, 0)))
     xo, s, cnt, dsz = round_recv_2d(
         d2, x2, a2, kind=kind, block=block, interpret=interpret,
-        emit_stored=emit_stored)
+        emit_stored=emit_stored, batched=batched)
+    if batched:
+        xo = xo[:, :b, :u].astype(orig_dtype)
+        if s is not None:
+            s = s[:, :, :b, :u].astype(orig_dtype)
+        # [C, gi, gj, bm, P] -> sum universe tiles -> [C, m_pad, P] -> trim
+        cnt = cnt.sum(axis=2).reshape(c, m_pad, p)[:, :b]
+        dsz = dsz.sum(axis=2).reshape(c, m_pad, p)[:, :b]
+        return xo, s, cnt, dsz
     xo = xo[:b, :u].astype(orig_dtype)
     if s is not None:
         s = s[:, :b, :u].astype(orig_dtype)

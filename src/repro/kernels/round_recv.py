@@ -26,6 +26,12 @@ co-resident in VMEM: P ≤ 8 slots × 8×512 int32 = ≤ 128 KiB per stack), x i
 [M, N]; M = padded node axis, N = padded (flattened) universe axis. Counts
 are emitted per grid block and reduced by the wrapper, mirroring
 ``delta_extract_2d``.
+
+Sweep batching (DESIGN.md §13): ``batched=True`` prepends a config axis B
+(d [P, B, M, N], x [B, M, N]) and the grid grows a leading batch dimension
+(B, gi, gj) — each config's (m, n) tiles run the *identical* per-tile
+program the unbatched grid runs, so every sweep cell is bit-identical to
+its single-run equivalent.
 """
 
 from __future__ import annotations
@@ -52,19 +58,23 @@ def _popcount_rows(a):
 
 
 def _round_recv_kernel(d_ref, x_ref, a_ref, *o_refs, p: int, kind: str,
-                       emit_stored: bool):
+                       emit_stored: bool, batched: bool):
     if emit_stored:
         xo_ref, s_ref, cnt_ref, dsz_ref = o_refs
     else:
         xo_ref, cnt_ref, dsz_ref = o_refs
-    x = x_ref[...]                                    # [bm, bn], VMEM-resident
-    act = a_ref[...]                                  # [bm, p] active slots
+    # Batched blocks carry a singleton config dim (the batch grid axis maps
+    # each config to its own block) — index it away so the fold body is the
+    # same program either way.
+    x = x_ref[0] if batched else x_ref[...]               # [bm, bn], VMEM
+    act = a_ref[0] if batched else a_ref[...]             # [bm, p] active
     for q in range(p):
         # Active-slot mask (topology padding ∧ fault delivery, DESIGN.md
         # §12): a suppressed slot is ⊥ — contributes nothing to x, counts,
         # or stored extractions. Masking here (in VMEM) replaces a whole
         # jnp.where pass over the [N, P, U] inbox in HBM.
-        d = jnp.where(act[:, q][:, None] != 0, d_ref[q],
+        dq = d_ref[q, 0] if batched else d_ref[q]
+        d = jnp.where(act[:, q][:, None] != 0, dq,
                       jnp.zeros((), d_ref.dtype))
         if kind == "max":
             novel = d > x                  # irreducible of d strictly above x
@@ -80,41 +90,67 @@ def _round_recv_kernel(d_ref, x_ref, a_ref, *o_refs, p: int, kind: str,
         else:
             raise ValueError(kind)
         if emit_stored:
-            s_ref[q] = s
-        cnt_ref[0, 0, :, q] = cnt
-        dsz_ref[0, 0, :, q] = dsz
-    xo_ref[...] = x
+            if batched:
+                s_ref[q, 0] = s
+            else:
+                s_ref[q] = s
+        cnt_idx = (0, 0, 0, slice(None), q) if batched \
+            else (0, 0, slice(None), q)
+        cnt_ref[cnt_idx] = cnt
+        dsz_ref[cnt_idx] = dsz
+    if batched:
+        xo_ref[0] = x
+    else:
+        xo_ref[...] = x
 
 
 @functools.partial(
-    jax.jit, static_argnames=("kind", "block", "interpret", "emit_stored"))
+    jax.jit,
+    static_argnames=("kind", "block", "interpret", "emit_stored", "batched"))
 def round_recv_2d(d, x, active=None, *, kind: str = "max", block=ROUND_BLOCK,
-                  interpret: bool | None = None, emit_stored: bool = True):
-    """d: [P, M, N] slot-major gathered δ-groups, x: [M, N], tile-aligned.
+                  interpret: bool | None = None, emit_stored: bool = True,
+                  batched: bool = False):
+    """d: [P, (B,) M, N] slot-major gathered δ-groups, x: [(B,) M, N],
+    tile-aligned; ``batched`` declares the extra leading config axis B
+    (DESIGN.md §13), which becomes the leading batch grid dimension.
 
-    ``active``: optional int32 [M, P] per-(node, slot) mask — 0 suppresses
-    the slot entirely (topology padding or an injected fault, DESIGN.md
-    §12); None means all slots active.
+    ``active``: optional int32 [(B,) M, P] per-(node, slot) mask — 0
+    suppresses the slot entirely (topology padding or an injected fault,
+    DESIGN.md §12); None means all slots active.
 
-    Returns ``(x', stored, cnt, dsz)`` with ``stored`` [P, M, N] the
+    Returns ``(x', stored, cnt, dsz)`` with ``stored`` [P, (B,) M, N] the
     slot-order RR extractions (omitted when ``emit_stored=False``) and
-    ``cnt``/``dsz`` [gi, gj, bm, P] per-block per-node counts (sum axis 1 to
-    get the [M, P] totals).
+    ``cnt``/``dsz`` [(B,) gi, gj, bm, P] per-block per-node counts (sum the
+    gj axis to get the [(B,) M, P] totals).
     """
     interpret = interpret_default() if interpret is None else interpret
-    p, m, n = d.shape
-    assert x.shape == (m, n) and d.dtype == x.dtype
+    if batched:
+        p, bcfg, m, n = d.shape
+        assert x.shape == (bcfg, m, n) and d.dtype == x.dtype
+    else:
+        p, m, n = d.shape
+        assert x.shape == (m, n) and d.dtype == x.dtype
     if active is None:
-        active = jnp.ones((m, p), jnp.int32)
-    assert active.shape == (m, p)
+        active = jnp.ones(x.shape[:-1] + (p,), jnp.int32)
+    assert active.shape == x.shape[:-1] + (p,)
     active = active.astype(jnp.int32)
     bm, bn = block
-    grid = grid_for((m, n), block)
-    d_spec = pl.BlockSpec((p, bm, bn), lambda i, j: (0, i, j))
-    x_spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
-    a_spec = pl.BlockSpec((bm, p), lambda i, j: (i, 0))
-    cnt_spec = pl.BlockSpec((1, 1, bm, p), lambda i, j: (i, j, 0, 0))
-    cnt_shape = jax.ShapeDtypeStruct(grid + (bm, p), jnp.int32)
+    tiles = grid_for((m, n), block)
+    if batched:
+        grid = (bcfg,) + tiles
+        d_spec = pl.BlockSpec((p, 1, bm, bn), lambda b, i, j: (0, b, i, j))
+        x_spec = pl.BlockSpec((1, bm, bn), lambda b, i, j: (b, i, j))
+        a_spec = pl.BlockSpec((1, bm, p), lambda b, i, j: (b, i, 0))
+        cnt_spec = pl.BlockSpec((1, 1, 1, bm, p),
+                                lambda b, i, j: (b, i, j, 0, 0))
+        cnt_shape = jax.ShapeDtypeStruct((bcfg,) + tiles + (bm, p), jnp.int32)
+    else:
+        grid = tiles
+        d_spec = pl.BlockSpec((p, bm, bn), lambda i, j: (0, i, j))
+        x_spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+        a_spec = pl.BlockSpec((bm, p), lambda i, j: (i, 0))
+        cnt_spec = pl.BlockSpec((1, 1, bm, p), lambda i, j: (i, j, 0, 0))
+        cnt_shape = jax.ShapeDtypeStruct(tiles + (bm, p), jnp.int32)
     out_specs = [x_spec] + ([d_spec] if emit_stored else []) \
         + [cnt_spec, cnt_spec]
     out_shape = [jax.ShapeDtypeStruct(x.shape, x.dtype)] \
@@ -122,7 +158,7 @@ def round_recv_2d(d, x, active=None, *, kind: str = "max", block=ROUND_BLOCK,
         + [cnt_shape, cnt_shape]
     outs = pl.pallas_call(
         functools.partial(_round_recv_kernel, p=p, kind=kind,
-                          emit_stored=emit_stored),
+                          emit_stored=emit_stored, batched=batched),
         grid=grid,
         in_specs=[d_spec, x_spec, a_spec],
         out_specs=out_specs,

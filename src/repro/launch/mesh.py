@@ -8,6 +8,7 @@ setting the device count.
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def _axis_type_kwargs(n: int) -> dict:
@@ -30,3 +31,68 @@ def make_mesh(shape, axes):
     """Arbitrary mesh (tests use small ones, e.g. (2, 2))."""
     return jax.make_mesh(
         tuple(shape), tuple(axes), **_axis_type_kwargs(len(axes)))
+
+
+# -- sweep-engine config-axis sharding (DESIGN.md §13) -----------------------
+
+SWEEP_AXIS = "config"
+
+
+def sweep_mesh(num_devices: int | None = None):
+    """1-D mesh over the config axis of a simulation sweep: B independent
+    configs are embarrassingly parallel, so each device runs its own block
+    of cells with no cross-device collectives."""
+    n = len(jax.devices()) if num_devices is None else num_devices
+    return jax.make_mesh((n,), (SWEEP_AXIS,), **_axis_type_kwargs(1))
+
+
+def _shard_map():
+    """`shard_map` moved out of jax.experimental in newer jax; resolve the
+    available entry point lazily so importing this module stays cheap."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn
+    from jax.experimental.shard_map import shard_map as fn
+    return fn
+
+
+def shard_sweep_scan(run, batch: int, mesh=None):
+    """Shard the config axis of a sweep scan across devices via
+    ``shard_map``.
+
+    ``run(carry0, xs)`` must be the sweep engine's scan callable
+    (DESIGN.md §13): every carry/output-carry leaf has the config axis at
+    0, scan ys (stacked metrics) are time-major with the config axis at 1,
+    and ``xs`` is either the round-index array (replicated) or a tuple
+    ``(t, *masks)`` whose mask tails are time-major config-batched.
+    Configs never communicate, so the mapped body needs no collectives —
+    each device just scans its own block of cells.
+
+    Returns ``run`` unchanged on a single-device mesh (nothing to shard).
+    """
+    if mesh is None:
+        mesh = sweep_mesh()
+    ndev = int(np.prod(mesh.devices.shape))
+    if ndev == 1:
+        return run
+    if batch % ndev:
+        raise ValueError(
+            f"sweep batch {batch} is not divisible by the {ndev}-device "
+            f"config mesh — pad the SweepSpec or pass a smaller mesh")
+    P = jax.sharding.PartitionSpec
+    cfg0, cfg1, rep = P(SWEEP_AXIS), P(None, SWEEP_AXIS), P()
+
+    def wrapped(carry0, xs):
+        carry_spec = jax.tree.map(lambda _: cfg0, carry0)
+        if isinstance(xs, tuple):
+            xs_spec = (rep,) + tuple(cfg1 for _ in xs[1:])
+        else:
+            xs_spec = rep
+        out_carry, out_ys = jax.eval_shape(run, carry0, xs)
+        out_specs = (jax.tree.map(lambda _: cfg0, out_carry),
+                     jax.tree.map(lambda _: cfg1, out_ys))
+        return _shard_map()(
+            run, mesh=mesh, in_specs=(carry_spec, xs_spec),
+            out_specs=out_specs, check_rep=False)(carry0, xs)
+
+    return wrapped

@@ -3,7 +3,8 @@
 from repro.sync.algorithms import ALGORITHMS, SyncAlgorithm
 from repro.sync.engine import ENGINES
 from repro.sync.faults import FaultSchedule, RoundFaults
-from repro.sync.simulator import SimResult, converged, simulate
+from repro.sync.simulator import SimResult, cluster_uniform, converged, simulate
+from repro.sync.sweep import SweepSpec, simulate_sweep
 from repro.sync.topology import Topology, by_name, full, partial_mesh, ring, tree
 from repro.sync import engine, faults, scuttlebutt
 
@@ -12,12 +13,15 @@ __all__ = [
     "ENGINES",
     "FaultSchedule",
     "RoundFaults",
+    "SweepSpec",
     "SyncAlgorithm",
     "engine",
     "faults",
     "SimResult",
+    "cluster_uniform",
     "converged",
     "simulate",
+    "simulate_sweep",
     "Topology",
     "by_name",
     "full",

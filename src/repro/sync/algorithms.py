@@ -33,6 +33,14 @@ Faults (DESIGN.md §12): ``round_step`` optionally takes one round's
 sends leave the sender's δ-buffer *retained* for retransmission instead of
 cleared. With no faults (or all-ok masks) behavior is bit-identical to the
 fault-free algorithm.
+
+Sweeps (DESIGN.md §13): setting ``batch=B`` prepends a config axis to every
+carry leaf ([B, N, ...U] states, [B, N, P+1, ...U] buffers) and makes
+``round_step`` execute B independent simulations of the same algorithm over
+the shared topology in one program; metrics come back per-config ([B]
+instead of scalar). Every cell is bit-identical to the corresponding
+unbatched run — all per-cell arithmetic is elementwise or reduces over the
+same axes in the same order.
 """
 
 from __future__ import annotations
@@ -60,16 +68,16 @@ def metric_dtype():
 
 
 class RoundMetrics(NamedTuple):
-    tx: jnp.ndarray        # elements sent this round (scalar)
+    tx: jnp.ndarray        # elements sent this round (scalar; [B] batched)
     mem: jnp.ndarray       # elements held (state + buffer entries) at round end
     cpu: jnp.ndarray       # element-ops processed this round (proxy, DESIGN.md §10)
     max_mem_node: jnp.ndarray  # worst single-node memory
 
 
 class AlgoCarry(NamedTuple):
-    x: Any                 # [N, ...U] lattice states
-    buf: Any               # None | [N, ...U] | [N, P+1, ...U]
-    buf_elems: jnp.ndarray  # [N] buffered entry elements (memory metric)
+    x: Any                 # [N, ...U] lattice states ([B, N, ...U] batched)
+    buf: Any               # None | [(B,) N, ...U] | [(B,) N, P+1, ...U]
+    buf_elems: jnp.ndarray  # [(B,) N] buffered entry elements (memory metric)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +87,8 @@ class SyncAlgorithm:
     topo: Topology
     loo: str = "prefix"    # leave-one-out strategy for BP sends
     engine: str = "reference"  # "reference" | "fused" (DESIGN.md §11)
+    batch: Optional[int] = None  # config-axis width B, None = single run
+                                 # (sweep engine, DESIGN.md §13)
 
     @property
     def resolved_engine(self) -> str:
@@ -97,20 +107,41 @@ class SyncAlgorithm:
     def extracts(self) -> bool:
         return self.name in ("rr", "bprr")
 
+    @property
+    def batched(self) -> bool:
+        return self.batch is not None
+
+    @property
+    def node_prefix(self) -> tuple:
+        """Leading batch axes of a per-node array: (N,) or (B, N)."""
+        n = self.topo.num_nodes
+        return (n,) if self.batch is None else (self.batch, n)
+
+    @property
+    def slot_axis(self) -> int:
+        """Axis of the origin slot in per-origin buffers."""
+        return 1 if self.batch is None else 2
+
+    def _msum(self, v, acc=None):
+        """Metric sum over node/slot axes, preserving the config axis."""
+        axes = tuple(range(1 if self.batched else 0, v.ndim))
+        return jnp.sum(v if acc is None else v.astype(acc), axis=axes)
+
     # -- state ---------------------------------------------------------------
 
     def init(self, x0=None) -> AlgoCarry:
-        n = self.topo.num_nodes
         p = self.topo.max_degree
         bot = self.lattice.bottom()
-        x = T.bcast(bot, (n,)) if x0 is None else x0
+        prefix = self.node_prefix
+        x = T.bcast(bot, prefix) if x0 is None else x0
         if not self.has_buffer:
             buf = None
         elif self.per_origin:
-            buf = T.bcast(bot, (n, p + 1))
+            buf = T.bcast(bot, prefix + (p + 1,))
         else:
-            buf = T.bcast(bot, (n,))
-        return AlgoCarry(x=x, buf=buf, buf_elems=jnp.zeros((n,), jnp.int32))
+            buf = T.bcast(bot, prefix)
+        return AlgoCarry(x=x, buf=buf,
+                         buf_elems=jnp.zeros(prefix, jnp.int32))
 
     # -- helpers ---------------------------------------------------------------
 
@@ -118,10 +149,12 @@ class SyncAlgorithm:
         """d[i, p] = ⊔ {B[i, o] | o ≠ p} for p in 0..P-1 (slot P always in)."""
         lat = self.lattice
         p = self.topo.max_degree
+        ax = self.slot_axis
         if self.resolved_engine == "fused":
-            # one buffer_fold kernel pass over [P+1, N·U] (DESIGN.md §11)
-            return engine_mod.fused_loo_sends(buf, kind=lat.kernel_kind)
-        slots = [T.slot(buf, k) for k in range(p + 1)]
+            # one buffer_fold kernel pass over [P+1, (B·)N·U] (DESIGN.md §11)
+            return engine_mod.fused_loo_sends(buf, kind=lat.kernel_kind,
+                                              batched=self.batched)
+        slots = [T.slot(buf, k, axis=ax) for k in range(p + 1)]
         if self.loo == "naive":
             outs = []
             for j in range(p):
@@ -132,7 +165,10 @@ class SyncAlgorithm:
                     acc = slots[o] if acc is None else lat.join(acc, slots[o])
                 outs.append(acc)
         else:
-            # prefix/suffix joins: O(P) joins for all P outputs.
+            # prefix/suffix joins: O(P) joins for all P outputs. The ⊥
+            # accumulator stays [N, ...U] even for sweeps — the first real
+            # slot join broadcasts it up to the (possibly device-local)
+            # config extent, keeping this closure shard-agnostic.
             bot = T.bcast(self.lattice.bottom(), (self.topo.num_nodes,))
             prefix = [None] * (p + 1)
             suffix = [None] * (p + 1)
@@ -145,52 +181,51 @@ class SyncAlgorithm:
                 suffix[k] = acc
                 acc = lat.join(acc, slots[k])
             outs = [lat.join(prefix[j], suffix[j]) for j in range(p)]
-        # stack to [N, P, ...]
-        return jax.tree.map(lambda *xs: jnp.stack(xs, axis=1), *outs)
+        # stack to [(B,) N, P, ...]
+        return jax.tree.map(lambda *xs: jnp.stack(xs, axis=ax), *outs)
 
     # -- one synchronous round -------------------------------------------------
 
     def round_step(self, carry: AlgoCarry, op_delta,
                    faults=None) -> tuple[AlgoCarry, RoundMetrics]:
         """One synchronous round; ``faults`` is an optional per-round
-        ``faults.RoundFaults`` mask triple (None ⇒ fault-free)."""
+        ``faults.RoundFaults`` mask triple (None ⇒ fault-free; leaves carry
+        a leading [B] axis when ``batch`` is set)."""
         lat, topo = self.lattice, self.topo
-        n, p = topo.num_nodes, topo.max_degree
+        p = topo.max_degree
+        sax = self.slot_axis
         x, buf, buf_elems = carry
 
         acc = metric_dtype()
         cpu = jnp.zeros((), acc)
 
         # (1) local update: δ = mᵟ(xᵢ); store(δ, i)      [Alg 2, lines 6-8]
-        dsz = lat.size(op_delta).astype(jnp.int32)             # [N]
+        dsz = lat.size(op_delta).astype(jnp.int32)             # [(B,) N]
         x = lat.join(x, op_delta)
         if self.has_buffer:
             if self.per_origin:
-                self_slot = T.slot(buf, p)
-                buf = T.set_slot(buf, p, lat.join(self_slot, op_delta))
+                self_slot = T.slot(buf, p, axis=sax)
+                buf = T.set_slot(buf, p, lat.join(self_slot, op_delta),
+                                 axis=sax)
             else:
                 buf = lat.join(buf, op_delta)
             buf_elems = buf_elems + dsz
-        cpu = cpu + jnp.sum(dsz.astype(acc))
+        cpu = cpu + self._msum(dsz, acc)
 
         # (2) sends                                        [Alg 2, lines 9-12]
         if not self.has_buffer:
-            d_all = jax.tree.map(
-                lambda a: jnp.broadcast_to(a[:, None], (n, p) + a.shape[1:]), x
-            )
+            d_all = self._bcast_sends(x)
         elif self.per_origin:
             d_all = self._loo_sends(buf)
         else:
-            d_all = jax.tree.map(
-                lambda a: jnp.broadcast_to(a[:, None], (n, p) + a.shape[1:]), buf
-            )
-        send_sizes = lat.size(d_all).astype(jnp.int32)          # [N, P]
+            d_all = self._bcast_sends(buf)
+        send_sizes = lat.size(d_all).astype(jnp.int32)          # [(B,) N, P]
         # tx counts what an up sender puts on the wire, delivered or not
         # (DESIGN.md §12) — down nodes send nothing.
         send_live = topo.mask if faults is None \
-            else topo.mask & faults.up[:, None]
+            else topo.mask & faults.up[..., None]
         send_sizes = send_sizes * send_live
-        tx = jnp.sum(send_sizes.astype(acc))
+        tx = self._msum(send_sizes, acc)
         cpu = cpu + tx  # serialization cost ∝ elements sent
 
         # (3) clear buffer                                 [Alg 2, line 13]
@@ -203,7 +238,7 @@ class SyncAlgorithm:
                 buf = zeros
                 buf_elems = jnp.zeros_like(buf_elems)
             else:
-                delivered = jnp.all(faults.send_ok | ~topo.mask, axis=1) \
+                delivered = jnp.all(faults.send_ok | ~topo.mask, axis=-1) \
                     & faults.up
                 buf = T.where(delivered, zeros, buf)
                 buf_elems = jnp.where(delivered, 0, buf_elems)
@@ -217,33 +252,51 @@ class SyncAlgorithm:
                 x, buf, buf_elems, cpu, d_all, acc, faults=faults)
 
         # (5) metrics
-        state_elems = lat.size(x).astype(jnp.int32)             # [N]
+        state_elems = lat.size(x).astype(jnp.int32)             # [(B,) N]
         node_mem = state_elems.astype(acc) + buf_elems.astype(acc)
         metrics = RoundMetrics(
             tx=tx,
-            mem=jnp.sum(node_mem),
+            mem=jnp.sum(node_mem, axis=-1),
             cpu=cpu,
-            max_mem_node=jnp.max(node_mem),
+            max_mem_node=jnp.max(node_mem, axis=-1),
         )
         return AlgoCarry(x=x, buf=buf, buf_elems=buf_elems), metrics
+
+    def _bcast_sends(self, state):
+        """Broadcast one per-node state over the P send slots:
+        [(B,) N, ...U] -> [(B,) N, P, ...U]."""
+        p = self.topo.max_degree
+        ax = self.slot_axis
+
+        def bc(a):
+            e = jnp.expand_dims(a, ax)
+            return jnp.broadcast_to(e, a.shape[:ax] + (p,) + a.shape[ax:])
+
+        return jax.tree.map(bc, state)
 
     def _receive_reference(self, x, buf, buf_elems, cpu, d_all, acc,
                            faults=None):
         """Reference receive: sequential per-slot jnp loop (3+ HBM passes
         over the state per slot — the fused engine's baseline)."""
         lat, topo = self.lattice, self.topo
-        n, p = topo.num_nodes, topo.max_degree
+        p = topo.max_degree
+        sax = self.slot_axis
         for q in range(p):
             sender = topo.nbrs[:, q]
             sslot = topo.rev[:, q]
             valid = topo.mask[:, q]
             if faults is not None:
-                valid = valid & faults.recv_ok[:, q]
-            d = T.gather2(d_all, sender, sslot)                 # [N, ...U]
-            d = T.where(valid, d, T.bcast(lat.bottom(), (n,)))
+                valid = valid & faults.recv_ok[..., q]
+            d = T.gather2(d_all, sender, sslot,
+                          batched=self.batched)                 # [(B,) N, ...U]
+            # where_bot: valid may be [N] (no faults) against [B, N, ...U]
+            # leaves and leaf universe ranks differ (linear-sum tags are
+            # rank-0) — per-leaf ⊥-aligned select keeps the closure shard-
+            # agnostic (the local config extent never appears in it).
+            d = T.where_bot(valid, d, lat.bottom())
 
             if self.name == "state":
-                cpu = cpu + jnp.sum(lat.size(d).astype(acc))
+                cpu = cpu + self._msum(lat.size(d), acc)
                 x = lat.join(x, d)
                 continue
 
@@ -255,13 +308,12 @@ class SyncAlgorithm:
                 keep = jnp.logical_not(lat.leq(d, x)) & valid   # inflation check
 
             ssz = lat.size(stored).astype(jnp.int32) * keep
-            cpu = cpu + jnp.sum(lat.size(d).astype(acc)) \
-                      + jnp.sum(ssz.astype(acc))
+            cpu = cpu + self._msum(lat.size(d), acc) + self._msum(ssz, acc)
             x = lat.join(x, d)
             if self.per_origin:
-                cur = T.slot(buf, q)
+                cur = T.slot(buf, q, axis=sax)
                 upd = T.where(keep, lat.join(cur, stored), cur)
-                buf = T.set_slot(buf, q, upd)
+                buf = T.set_slot(buf, q, upd, axis=sax)
             else:
                 buf = T.where(keep, lat.join(buf, stored), buf)
             buf_elems = buf_elems + ssz

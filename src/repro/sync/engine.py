@@ -49,14 +49,20 @@ def resolve(engine: str, lattice) -> str:
     return engine
 
 
-def gather_inbox(d_all, topo):
+def gather_inbox(d_all, topo, batched: bool = False):
     """Route per-edge messages: inbox[n, q] = d_all[nbrs[n,q], rev[n,q]].
 
     One gather pass over the [N, P, U] send block — the fused engine's only
     data movement before the single kernel pass. Padding slots carry
     garbage (node 0's sends); the kernel's active-slot mask suppresses
     them in VMEM, saving the extra masking pass over HBM.
+
+    With ``batched=True`` the send block carries a leading config axis
+    ([B, N, P, U], DESIGN.md §13) and the same shared-topology gather is
+    applied to every config.
     """
+    if batched:
+        return d_all[:, topo.nbrs, topo.rev]             # [B, N, P, U]
     return d_all[topo.nbrs, topo.rev]                    # [N, P, U]
 
 
@@ -87,19 +93,29 @@ def fused_receive(algo, x, buf, buf_elems, cpu, d_all, acc_dtype,
     * fault masks (message loss / churn, DESIGN.md §12) fold with the
       topology padding mask into the kernel's active-slot input — a
       dropped slot contributes nothing to x, counts, or buffers, exactly
-      like the reference loop's widened ``valid`` mask.
+      like the reference loop's widened ``valid`` mask;
+    * sweep batching (DESIGN.md §13): when ``algo.batch`` is set, the
+      state carries a leading config axis ([B, N, U]) and the kernels run
+      with a leading batch grid dimension — every config's tiles execute
+      the identical per-tile program, so each cell stays bit-identical to
+      its unbatched run.
     """
     lat, topo = algo.lattice, algo.topo
     kind = lat.kernel_kind
     p = topo.max_degree
+    sax = algo.slot_axis                                 # 1, or 2 batched
 
     active = topo.mask if faults is None else topo.mask & faults.recv_ok
-    inbox = gather_inbox(d_all, topo)                    # [N, P, U]
-    d_stack = jnp.transpose(inbox, (1, 0, 2))            # [P, N, U]
+    if algo.batched and active.ndim == 2:
+        # Lift to the traced config extent (shard-local under shard_map —
+        # never algo.batch, which is the global sweep width).
+        active = jnp.broadcast_to(active, x.shape[:1] + active.shape)
+    inbox = gather_inbox(d_all, topo, batched=algo.batched)  # [(B,) N, P, U]
+    d_stack = jnp.moveaxis(inbox, sax, 0)                # [P, (B,) N, U]
     x, stored, cnt, dsz = kops.round_recv(
         d_stack, x, kind=kind, emit_stored=algo.has_buffer, active=active)
 
-    cpu = cpu + jnp.sum(dsz.astype(acc_dtype))
+    cpu = cpu + algo._msum(dsz, acc_dtype)
     if not algo.has_buffer:                              # state-based
         return x, buf, buf_elems, cpu
 
@@ -109,34 +125,38 @@ def fused_receive(algo, x, buf, buf_elems, cpu, d_all, acc_dtype,
         keep = cnt > 0                                   # ¬(d ⊑ x_running)
         ssz = dsz * keep
 
+    nbr_slots = (slice(None),) * sax + (slice(None, p),)
     if algo.per_origin:                                  # bp / bprr
-        slot_vals = jnp.transpose(stored, (1, 0, 2)) if algo.extracts \
+        slot_vals = jnp.moveaxis(stored, 0, sax) if algo.extracts \
             else jnp.where(keep[..., None], inbox, jnp.zeros((), inbox.dtype))
         # join (not set): fault retention can leave prior entries in the
         # neighbor slots; after a fault-free clear this is the identity.
-        buf = buf.at[:, :p].set(lat.join(buf[:, :p], slot_vals))
+        buf = buf.at[nbr_slots].set(lat.join(buf[nbr_slots], slot_vals))
     else:                                                # classic / rr
         add = _fold_slots(stored, kind) if algo.extracts \
             else _fold_slots(
-                jnp.transpose(
+                jnp.moveaxis(
                     jnp.where(keep[..., None], inbox,
                               jnp.zeros((), inbox.dtype)),
-                    (1, 0, 2)),
+                    sax, 0),
                 kind)
         buf = lat.join(buf, add)
 
-    cpu = cpu + jnp.sum(ssz.astype(acc_dtype))
-    buf_elems = buf_elems + jnp.sum(ssz, axis=1, dtype=jnp.int32)
+    cpu = cpu + algo._msum(ssz, acc_dtype)
+    buf_elems = buf_elems + jnp.sum(ssz, axis=-1, dtype=jnp.int32)
     return x, buf, buf_elems, cpu
 
 
-def fused_loo_sends(buf, kind: str):
-    """All P leave-one-out sends from the origin-indexed buffer [N, P+1, U]
-    in one ``buffer_fold`` kernel pass (node axis folded into the tile
-    space). Returns [N, P, U]."""
+def fused_loo_sends(buf, kind: str, batched: bool = False):
+    """All P leave-one-out sends from the origin-indexed buffer
+    [(B,) N, P+1, U] in one ``buffer_fold`` kernel pass (node axis folded
+    into the tile space; the config axis of a sweep becomes the kernel's
+    leading batch grid dimension). Returns [(B,) N, P, U]."""
     orig_dtype = buf.dtype
     if orig_dtype == jnp.bool_:
         buf = buf.astype(jnp.uint8)                      # max ≡ or on {0, 1}
-    stack = jnp.transpose(buf, (1, 0, 2))                # [P+1, N, U]
-    sends = kops.buffer_fold(stack, kind=kind)           # [P, N, U]
-    return jnp.transpose(sends, (1, 0, 2)).astype(orig_dtype)
+    sax = 2 if batched else 1
+    stack = jnp.moveaxis(buf, sax, 0)                    # [P+1, (B,) N, U]
+    sends = kops.buffer_fold(stack, kind=kind,
+                             batched=batched)            # [P, (B,) N, U]
+    return jnp.moveaxis(sends, 0, sax).astype(orig_dtype)

@@ -15,6 +15,13 @@ message-loss / partition / churn masks through the scan as plain inputs —
 the simulated program stays a single jitted scan, and both engines honor
 the masks identically.
 
+Sweeps (DESIGN.md §13): the scan body is built once by
+``build_round_step`` and shared between ``simulate`` (one config) and
+``sync/sweep.py``'s ``simulate_sweep`` (a leading [B] config axis batching
+a whole experiment grid into one program). Keeping one builder is what
+makes the sweep invariant checkable: cell b of a sweep runs the *same*
+step program as a single ``simulate`` call, just with batched carries.
+
 Metrics are accumulated in int64 (DESIGN.md §10): the scan is traced under
 ``jax.experimental.enable_x64`` so fleet-scale universe × degree × rounds
 sums cannot wrap the int32 range. Lattice state dtypes are unaffected (all
@@ -38,13 +45,18 @@ from repro.sync.topology import Topology
 
 
 class SimResult(NamedTuple):
-    tx: np.ndarray           # [T] elements sent per round
+    tx: np.ndarray           # [T] elements sent per round ([B, T] for sweeps)
     mem: np.ndarray          # [T] elements held (cluster total) per round
     cpu: np.ndarray          # [T] element-ops per round
     max_mem_node: np.ndarray  # [T]
-    final_x: Any             # [N, ...U] final states
+    final_x: Any             # [N, ...U] final states ([B, N, ...U] sweeps)
     uniform: Optional[np.ndarray]  # [T] bool: all nodes identical at round
                                    # end (None when tracking was off)
+
+    @property
+    def batch(self) -> Optional[int]:
+        """Config-axis width B for sweep results, None for single runs."""
+        return int(self.tx.shape[0]) if self.tx.ndim == 2 else None
 
     @property
     def total_tx(self) -> int:
@@ -58,19 +70,145 @@ class SimResult(NamedTuple):
     def avg_mem(self) -> float:
         return float(self.mem.mean())
 
-    def convergence_round(self) -> int:
+    def cell(self, b: int) -> "SimResult":
+        """Config b of a sweep result as a single-run SimResult — the view
+        the bit-identity invariant (DESIGN.md §13) is stated over."""
+        if self.batch is None:
+            raise ValueError("not a sweep result (no config axis)")
+        return SimResult(
+            tx=self.tx[b], mem=self.mem[b], cpu=self.cpu[b],
+            max_mem_node=self.max_mem_node[b],
+            final_x=jax.tree.map(lambda a: a[b], self.final_x),
+            uniform=None if self.uniform is None else self.uniform[b],
+        )
+
+    def convergence_round(self):
         """First round t such that every round ≥ t ended with all nodes
         holding identical states (−1 if never). With quiescence drain this
-        is the time-to-convergence measured by the fault benchmark."""
+        is the time-to-convergence measured by the fault benchmark.
+        Sweep results get a per-config int array [B]."""
         if self.uniform is None:
             raise ValueError(
                 "per-round convergence was not tracked; pass "
                 "simulate(track_convergence=True)")
         uni = np.asarray(self.uniform, bool)
-        if not uni[-1]:
-            return -1
-        stay = np.flip(np.logical_and.accumulate(np.flip(uni)))
-        return int(np.argmax(stay))
+        stay = np.flip(np.logical_and.accumulate(np.flip(uni, -1), -1), -1)
+        out = np.where(uni[..., -1], stay.argmax(-1), -1)
+        return int(out) if out.ndim == 0 else out
+
+
+def cluster_uniform(lattice: Lattice, x, batched: bool = False):
+    """All nodes hold the same state: pairwise ⊑ both ways vs node 0.
+
+    The one cluster-agreement test, shared by ``converged()`` and the
+    in-scan per-round ``uniform`` tracker (and, batched, by the sweep
+    engine). Returns a scalar bool, or [B] with ``batched=True``.
+    """
+    idx = (slice(None), slice(0, 1)) if batched else (slice(0, 1),)
+    xb = jax.tree.map(lambda a: jnp.broadcast_to(a[idx], a.shape), x)
+    agree = lattice.leq(x, xb) & lattice.leq(xb, x)      # [(B,) N]
+    return jnp.all(agree, axis=-1)
+
+
+def converged(lattice: Lattice, final_x) -> bool:
+    """All nodes hold the same state (pairwise ⊑ both ways vs node 0)."""
+    return bool(cluster_uniform(lattice, final_x))
+
+
+def build_round_step(alg: SyncAlgorithm, op_fn, active_rounds: int,
+                     views, track_convergence: bool):
+    """Build the pure ``lax.scan`` body for one op+sync round.
+
+    Shared by ``simulate`` (unbatched) and ``simulate_sweep`` (leading
+    config axis, selected by ``alg.batch``): the returned ``step`` is the
+    per-round program in both cases, which is what keeps every sweep cell
+    bit-identical to its single-run equivalent.
+
+    ``views``: None, or a ``FaultViews``-like triple whose ``at_round``
+    slices the per-round masks out of the scan xs tail.
+    """
+    lattice = alg.lattice
+
+    def step(carry, xs):
+        if views is None:
+            t, rf = xs, None
+        else:
+            t, rf = xs[0], views.at_round(xs[1:])
+        delta = op_fn(carry.x, t)
+        # Confine wide_metrics' x64 tracing to the metric accumulators: an
+        # op_fn with unpinned dtypes would otherwise emit int64/float64
+        # deltas, promote the state, and break the scan carry.
+        delta = jax.tree.map(lambda d, xl: d.astype(xl.dtype), delta, carry.x)
+        # The gate stays rank-minimal (scalar, or the fault masks' own
+        # rank) and where_bot aligns it per leaf — the closure never bakes
+        # in the config extent, so shard_map can run it on local blocks.
+        gate = t < active_rounds
+        if rf is not None:
+            gate = gate & rf.up           # a down node executes no ops
+        delta = T.where_bot(gate, delta, lattice.bottom())
+        carry, metrics = alg.round_step(carry, delta, faults=rf)
+        if track_convergence:
+            # Per-round cluster agreement (time-to-convergence telemetry).
+            uni = cluster_uniform(lattice, carry.x, batched=alg.batched)
+        elif alg.batched:
+            lead = jax.tree.leaves(carry.x)[0].shape[0]
+            uni = jnp.zeros((lead,), jnp.bool_)
+        else:
+            uni = jnp.zeros((), jnp.bool_)
+        return carry, (metrics, uni)
+
+    return step
+
+
+def run_scan(step, carry0, xs, jit: bool, wide_metrics: bool,
+             wrap: Optional[Callable] = None):
+    """Host wrapper around the jitted scan: jit + the x64 metric context.
+
+    ``wrap`` optionally post-processes the scan callable ``run(c0, xs)``
+    before jit (the sweep engine uses it to shard the config axis across
+    devices via ``launch.mesh.shard_sweep_scan``); xs stay an explicit
+    argument so wrappers can assign them shardings.
+    """
+
+    def run(c0, xs_):
+        return jax.lax.scan(step, c0, xs_)
+
+    if wrap is not None:
+        run = wrap(run)
+    if jit:
+        run = jax.jit(run)
+    if wide_metrics:
+        with jax.experimental.enable_x64():
+            return run(carry0, xs)
+    return run(carry0, xs)
+
+
+def collect_result(carry, metrics, uniform, track_convergence: bool,
+                   batched: bool = False) -> SimResult:
+    """Device → host: transpose sweep metrics to [B, T], run the overflow
+    check, and assemble the SimResult."""
+
+    def t_major(a):
+        a = np.asarray(a)
+        return a.swapaxes(0, 1) if batched else a   # scan stacks [T, B]
+
+    tx = t_major(metrics.tx)
+    mem = t_major(metrics.mem)
+    cpu = t_major(metrics.cpu)
+    # Wrap-around in the metric accumulators shows up as negative counts —
+    # impossible for element tallies, so fail loudly instead of reporting
+    # garbage (can only trigger with wide_metrics=False at extreme scale).
+    if (tx < 0).any() or (mem < 0).any() or (cpu < 0).any():
+        raise OverflowError(
+            "round-metric accumulator overflow: rerun with wide_metrics=True")
+    return SimResult(
+        tx=tx,
+        mem=mem,
+        cpu=cpu,
+        max_mem_node=t_major(metrics.max_mem_node),
+        final_x=jax.device_get(carry.x),
+        uniform=t_major(uniform) if track_convergence else None,
+    )
 
 
 def simulate(
@@ -111,7 +249,6 @@ def simulate(
     alg = SyncAlgorithm(name=algo, lattice=lattice, topo=topo, loo=loo,
                         engine=engine)
     carry0 = alg.init(x0)
-    n = topo.num_nodes
     total = active_rounds + quiet_rounds
     if faults is not None and not faults.same_topology(topo):
         raise ValueError(
@@ -122,70 +259,12 @@ def simulate(
     if track_convergence is None:
         track_convergence = faults is not None
 
-    def step(carry, xs):
-        if views is None:
-            t, rf = xs, None
-        else:
-            t, rf = xs[0], views.at_round(xs[1:])
-        delta = op_fn(carry.x, t)
-        # Confine wide_metrics' x64 tracing to the metric accumulators: an
-        # op_fn with unpinned dtypes would otherwise emit int64/float64
-        # deltas, promote the state, and break the scan carry.
-        delta = jax.tree.map(lambda d, xl: d.astype(xl.dtype), delta, carry.x)
-        gate = jnp.broadcast_to(t < active_rounds, (n,))
-        if rf is not None:
-            gate = gate & rf.up           # a down node executes no ops
-        delta = T.where(gate, delta, T.bcast(lattice.bottom(), (n,)))
-        carry, metrics = alg.round_step(carry, delta, faults=rf)
-        if track_convergence:
-            # Per-round cluster agreement (time-to-convergence telemetry):
-            # all nodes ⊑-equal to node 0 at round end.
-            xb = jax.tree.map(
-                lambda a: jnp.broadcast_to(a[:1], a.shape), carry.x)
-            uni = jnp.all(lattice.leq(carry.x, xb) & lattice.leq(xb, carry.x))
-        else:
-            uni = jnp.zeros((), jnp.bool_)
-        return carry, (metrics, uni)
-
+    step = build_round_step(alg, op_fn, active_rounds, views,
+                            track_convergence)
     if views is None:
         xs = jnp.arange(total)
     else:
         xs = (jnp.arange(total), views.recv_ok, views.send_ok, views.up)
 
-    def run(c0):
-        return jax.lax.scan(step, c0, xs)
-
-    if jit:
-        run = jax.jit(run)
-    if wide_metrics:
-        with jax.experimental.enable_x64():
-            carry, (metrics, uniform) = run(carry0)
-    else:
-        carry, (metrics, uniform) = run(carry0)
-
-    tx = np.asarray(metrics.tx)
-    mem = np.asarray(metrics.mem)
-    cpu = np.asarray(metrics.cpu)
-    # Wrap-around in the metric accumulators shows up as negative counts —
-    # impossible for element tallies, so fail loudly instead of reporting
-    # garbage (can only trigger with wide_metrics=False at extreme scale).
-    if (tx < 0).any() or (mem < 0).any() or (cpu < 0).any():
-        raise OverflowError(
-            "round-metric accumulator overflow: rerun with wide_metrics=True")
-    return SimResult(
-        tx=tx,
-        mem=mem,
-        cpu=cpu,
-        max_mem_node=np.asarray(metrics.max_mem_node),
-        final_x=jax.device_get(carry.x),
-        uniform=np.asarray(uniform) if track_convergence else None,
-    )
-
-
-def converged(lattice: Lattice, final_x) -> bool:
-    """All nodes hold the same state (pairwise ⊑ both ways vs node 0)."""
-    x0 = jax.tree.map(lambda a: a[:1], final_x)
-    xb = jax.tree.map(lambda a: jnp.broadcast_to(a[:1], a.shape), final_x)
-    le = lattice.leq(final_x, xb)
-    ge = lattice.leq(xb, final_x)
-    return bool(jnp.all(le & ge))
+    carry, (metrics, uniform) = run_scan(step, carry0, xs, jit, wide_metrics)
+    return collect_result(carry, metrics, uniform, track_convergence)

@@ -27,23 +27,52 @@ def where(cond, a, b):
     return jax.tree.map(sel, a, b)
 
 
+def where_bot(cond, a, bot):
+    """``a`` where ``cond`` else ⊥, with per-leaf mask alignment taken from
+    the *unbatched* bottom state ``bot``: each bot leaf's rank IS that
+    leaf's universe rank (0 for linear-sum tags, 1 for dense maps), so the
+    mask grows exactly that many trailing singletons and then broadcasts
+    right-aligned over any leading batch axes. This lets a [N] (or scalar)
+    mask gate [B, N, ...U] leaves without the closure ever knowing the
+    config extent — the sweep engine's shard-agnostic select
+    (DESIGN.md §13) — while still handling mixed-rank leaves that a fixed
+    one-axis pad (or :func:`where`'s trailing pad) would misalign."""
+
+    def sel(x, bl):
+        c = cond.reshape(cond.shape + (1,) * jnp.ndim(bl))
+        return jnp.where(c, x, bl)
+
+    return jax.tree.map(sel, a, bot)
+
+
 def take_axis0(state, idx):
     """Gather along axis 0 of every leaf."""
     return jax.tree.map(lambda a: a[idx], state)
 
 
-def gather2(state, idx0, idx1):
-    """Leafwise ``a[idx0, idx1]`` (advanced indexing on two leading axes)."""
+def gather2(state, idx0, idx1, batched: bool = False):
+    """Leafwise ``a[idx0, idx1]`` (advanced indexing on two leading axes).
+
+    ``batched=True`` treats axis 0 as a config batch axis and applies the
+    same gather to every batch slice (``a[:, idx0, idx1]``) — the sweep
+    engine's routing over a shared topology (DESIGN.md §13).
+    """
+    if batched:
+        return jax.tree.map(lambda a: a[:, idx0, idx1], state)
     return jax.tree.map(lambda a: a[idx0, idx1], state)
 
 
-def slot(state, p):
-    """Leafwise ``a[:, p]`` — select buffer slot p for every node."""
-    return jax.tree.map(lambda a: a[:, p], state)
+def slot(state, p, axis: int = 1):
+    """Leafwise ``a[:, p]`` — select buffer slot p for every node.  The
+    slot axis sits at 1 for [N, P+1, ...U] buffers and at 2 for sweep-
+    batched [B, N, P+1, ...U] buffers."""
+    return jax.tree.map(
+        lambda a: a[(slice(None),) * axis + (p,)], state)
 
 
-def set_slot(state, p, val):
-    return jax.tree.map(lambda a, v: a.at[:, p].set(v), state, val)
+def set_slot(state, p, val, axis: int = 1):
+    return jax.tree.map(
+        lambda a, v: a.at[(slice(None),) * axis + (p,)].set(v), state, val)
 
 
 def dyn_slot(state, p):

@@ -1,0 +1,332 @@
+"""Sweep-engine invariant (DESIGN.md §13): every cell of a
+``simulate_sweep`` batch is bit-identical — final states AND all metrics —
+to the corresponding single ``simulate()`` run, for every algorithm, on
+both engines, with and without fault schedules.
+
+Plus: per-config convergence tracking, stacked initial states, SweepSpec
+validation, ``stack_op`` lifting, and the shard_map config-axis path
+(single-device no-op inline; true multi-device equivalence in a
+subprocess with forced host devices).
+"""
+
+import subprocess
+import sys
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import subprocess_env
+from repro.core import BitGSet, GSet
+from repro.sync import (
+    ALGORITHMS,
+    FaultSchedule,
+    SweepSpec,
+    converged,
+    simulate,
+    simulate_sweep,
+    topology,
+)
+
+N, T, Q, B = 7, 5, 8, 3
+
+
+def _perm(seed):
+    if seed == 0:
+        return jnp.arange(T)
+    return jnp.asarray(np.random.default_rng(seed).permutation(T))
+
+
+def gset_cell_op(seed, n=N, rounds=T):
+    """Single-run op: node-unique adds in a seed-permuted order."""
+    perm = _perm(seed)
+
+    def op_fn(x, t):
+        ids = jnp.arange(n) * rounds + perm[jnp.minimum(t, rounds - 1)]
+        d = jnp.zeros((n, n * rounds), jnp.bool_)
+        return d.at[jnp.arange(n), ids].set(True)
+
+    return op_fn
+
+
+def gset_sweep_op(seeds, n=N, rounds=T):
+    perms = jnp.stack([_perm(s) for s in seeds])
+
+    def op_fn(x, t):
+        b = x.shape[0]
+        tc = jnp.minimum(t, rounds - 1)
+        ids = jnp.arange(n)[None, :] * rounds + perms[:b, tc][:, None]
+        d = jnp.zeros((b, n, n * rounds), jnp.bool_)
+        return d.at[jnp.arange(b)[:, None], jnp.arange(n)[None, :],
+                    ids].set(True)
+
+    return op_fn
+
+
+def bitgset_sweep_ops(n=N, rounds=T):
+    """Packed bitor-kind lattice: exercises the fused engine's second
+    kernel kind under the batch grid."""
+    bg = BitGSet(universe=n * rounds)
+
+    def cell_op(x, t):
+        ids = jnp.arange(n) * rounds + jnp.minimum(t, rounds - 1)
+        m = jnp.zeros((n, bg.num_words), jnp.uint32)
+        m = m.at[jnp.arange(n), ids // 32].set(
+            jnp.uint32(1) << (ids % 32).astype(jnp.uint32))
+        return bg.add_mask_delta(x, m)
+
+    def sweep_op(x, t):
+        b = x.shape[0]
+        ids = jnp.arange(n) * rounds + jnp.minimum(t, rounds - 1)
+        m = jnp.zeros((b, n, bg.num_words), jnp.uint32)
+        m = m.at[:, jnp.arange(n), ids // 32].set(
+            jnp.uint32(1) << (ids % 32).astype(jnp.uint32))
+        return bg.add_mask_delta(x, m)
+
+    return bg.lattice, cell_op, sweep_op
+
+
+SEEDS = (0, 3, 11)
+
+
+def fault_mix(topo):
+    """Per-cell schedules: fault-free, lossy, and composite churn+partition
+    — the three shapes a fault-study sweep mixes."""
+    n = topo.num_nodes
+    composite = FaultSchedule.bernoulli(topo, T, 0.2, seed=2).compose(
+        FaultSchedule.partition(
+            topo, T, start=1, stop=T - 1,
+            groups=(np.arange(n) >= n // 2).astype(np.int32))).compose(
+        FaultSchedule.churn(topo, T, [(n // 2, 1, T - 1)]))
+    return [None, FaultSchedule.bernoulli(topo, T, 0.3, seed=7), composite]
+
+
+def assert_cell_identical(cell, single, ctx):
+    fa = cell.final_x if isinstance(cell.final_x, (list, tuple)) \
+        else (cell.final_x,)
+    fb = single.final_x if isinstance(single.final_x, (list, tuple)) \
+        else (single.final_x,)
+    for la, lb in zip(fa, fb):
+        np.testing.assert_array_equal(la, lb, err_msg=f"{ctx}: final state")
+    for field in ("tx", "mem", "cpu", "max_mem_node"):
+        np.testing.assert_array_equal(
+            getattr(cell, field), getattr(single, field),
+            err_msg=f"{ctx}: {field}")
+    if single.uniform is None:
+        assert cell.uniform is None, f"{ctx}: uniform tracked only in sweep"
+    else:
+        np.testing.assert_array_equal(cell.uniform, single.uniform,
+                                      err_msg=f"{ctx}: uniform")
+
+
+@pytest.mark.parametrize("engine", ["reference", "fused"])
+@pytest.mark.parametrize("algo", ALGORITHMS)
+def test_sweep_cells_bit_identical_fault_free(algo, engine):
+    topo = topology.partial_mesh(N, 4)
+    lat = GSet(universe=N * T).lattice
+    spec = SweepSpec(batch=B, op_fn=gset_sweep_op(SEEDS))
+    res = simulate_sweep(algo, lat, topo, spec, active_rounds=T,
+                         quiet_rounds=Q, engine=engine)
+    assert res.batch == B
+    for b, seed in enumerate(SEEDS):
+        single = simulate(algo, lat, topo, gset_cell_op(seed),
+                          active_rounds=T, quiet_rounds=Q, engine=engine)
+        assert_cell_identical(res.cell(b), single,
+                              f"{algo}/{engine}/cell{b}")
+        assert converged(lat, res.cell(b).final_x)
+
+
+@pytest.mark.parametrize("engine", ["reference", "fused"])
+@pytest.mark.parametrize("algo", ALGORITHMS)
+def test_sweep_cells_bit_identical_faulted(algo, engine):
+    topo = topology.partial_mesh(N, 4)
+    lat = GSet(universe=N * T).lattice
+    scheds = fault_mix(topo)
+    spec = SweepSpec(batch=B, op_fn=gset_sweep_op(SEEDS), faults=scheds)
+    res = simulate_sweep(algo, lat, topo, spec, active_rounds=T,
+                         quiet_rounds=Q, engine=engine)
+    convs = res.convergence_round()
+    assert convs.shape == (B,)
+    for b, seed in enumerate(SEEDS):
+        single = simulate(algo, lat, topo, gset_cell_op(seed),
+                          active_rounds=T, quiet_rounds=Q, engine=engine,
+                          faults=scheds[b], track_convergence=True)
+        assert_cell_identical(res.cell(b), single,
+                              f"{algo}/{engine}/faulted/cell{b}")
+        assert int(convs[b]) == single.convergence_round()
+        # every schedule leaves a fault-free drain tail -> must converge
+        assert int(convs[b]) >= 0
+
+
+@pytest.mark.parametrize("engine", ["reference", "fused"])
+def test_sweep_bitor_kernel_kind(engine):
+    """The packed bitor lattice through the batched kernel grid."""
+    lat, cell_op, sweep_op = bitgset_sweep_ops()
+    topo = topology.tree(N)
+    res = simulate_sweep("bprr", lat, topo,
+                         SweepSpec(batch=2, op_fn=sweep_op),
+                         active_rounds=T, quiet_rounds=Q, engine=engine)
+    single = simulate("bprr", lat, topo, cell_op, active_rounds=T,
+                      quiet_rounds=Q, engine=engine)
+    for b in range(2):
+        assert_cell_identical(res.cell(b), single, f"bitgset/{engine}/{b}")
+
+
+def _linsum_workload(n=N, side=4):
+    """Linear-sum lattice (A ⊕ B over two max-maps): its state carries a
+    rank-0 tag leaf alongside [U]-ranked sides — the mixed-leaf-rank shape
+    that regressed when the op/receive gates assumed one trailing universe
+    axis. Nodes inflate the low side early, then node 0 jumps the cluster
+    to the high side mid-run (tag flips propagate through sync)."""
+    from repro.core.lattice import MapLattice, linear_sum
+    from repro.core import value_lattices as vl
+
+    low = MapLattice(side, vl.max_int(), "lo").build()
+    high = MapLattice(side, vl.max_int(), "hi").build()
+    lat = linear_sum("linsum", low, high, None)
+
+    def cell_op(x, t):
+        tags = jnp.where(t >= 2, jnp.ones((n,), jnp.int32),
+                         jnp.zeros((n,), jnp.int32))
+        lo = jnp.zeros((n, side), jnp.int32).at[:, 0].set(
+            jnp.where(t < 2, t + 1, 0).astype(jnp.int32))
+        hi = jnp.zeros((n, side), jnp.int32).at[:, 1].set(
+            jnp.where(t >= 2, t + 1, 0).astype(jnp.int32))
+        return (tags, lo, hi)
+
+    def sweep_op(x, t):
+        b = x[0].shape[0]
+        d = cell_op(None, t)
+        return tuple(jnp.broadcast_to(l, (b,) + l.shape) for l in d)
+
+    return lat, cell_op, sweep_op
+
+
+@pytest.mark.parametrize("algo", ["state", "bprr"])
+def test_linsum_mixed_rank_leaves(algo):
+    """Regression: lattices with a rank-0 tag leaf (linear sums) must run
+    through simulate() AND match sweep cells — the reference engine's
+    gates must align masks per leaf, not assume one universe axis."""
+    topo = topology.ring(N)
+    lat, cell_op, sweep_op = _linsum_workload()
+    single = simulate(algo, lat, topo, cell_op, active_rounds=T,
+                      quiet_rounds=Q)
+    assert converged(lat, single.final_x)
+    res = simulate_sweep(algo, lat, topo, SweepSpec(batch=2, op_fn=sweep_op),
+                         active_rounds=T, quiet_rounds=Q)
+    for b in range(2):
+        assert_cell_identical(res.cell(b), single, f"linsum/{algo}/{b}")
+
+
+def test_sweep_stacked_x0():
+    """Per-cell initial states ride the config axis."""
+    topo = topology.ring(N)
+    lat = GSet(universe=N * T).lattice
+    x0_cells = []
+    for b in range(B):
+        x0 = np.zeros((N, N * T), bool)
+        x0[0, :b + 1] = True              # node 0 pre-seeded differently
+        x0_cells.append(x0)
+    x0_stack = jnp.asarray(np.stack(x0_cells))
+    spec = SweepSpec(batch=B, op_fn=gset_sweep_op(SEEDS), x0=x0_stack)
+    res = simulate_sweep("bprr", lat, topo, spec, active_rounds=T,
+                         quiet_rounds=Q)
+    for b in range(B):
+        single = simulate("bprr", lat, topo, gset_cell_op(SEEDS[b]),
+                          active_rounds=T, quiet_rounds=Q,
+                          x0=jnp.asarray(x0_cells[b]))
+        assert_cell_identical(res.cell(b), single, f"x0/cell{b}")
+
+
+def test_stack_op_lifts_single_ops():
+    topo = topology.partial_mesh(N, 4)
+    lat = GSet(universe=N * T).lattice
+    op = SweepSpec.stack_op([gset_cell_op(s) for s in SEEDS])
+    res = simulate_sweep("rr", lat, topo, SweepSpec(batch=B, op_fn=op),
+                         active_rounds=T, quiet_rounds=Q)
+    single = simulate("rr", lat, topo, gset_cell_op(SEEDS[1]),
+                      active_rounds=T, quiet_rounds=Q)
+    assert_cell_identical(res.cell(1), single, "stack_op/cell1")
+
+
+def test_sweep_spec_validation():
+    topo = topology.partial_mesh(N, 4)
+    other = topology.tree(N)
+    with pytest.raises(ValueError):
+        SweepSpec(batch=0, op_fn=lambda x, t: x)
+    with pytest.raises(ValueError):
+        SweepSpec(batch=3, op_fn=lambda x, t: x,
+                  faults=[None, None])        # wrong length
+    spec = SweepSpec(batch=2, op_fn=gset_sweep_op(SEEDS[:2]),
+                     faults=[None, FaultSchedule.none(other, T)])
+    lat = GSet(universe=N * T).lattice
+    with pytest.raises(ValueError):           # schedule bound to other topo
+        simulate_sweep("bprr", lat, topo, spec, active_rounds=T)
+
+
+def test_cell_requires_batch():
+    topo = topology.partial_mesh(N, 4)
+    lat = GSet(universe=N * T).lattice
+    single = simulate("bprr", lat, topo, gset_cell_op(0), active_rounds=T,
+                      quiet_rounds=Q)
+    assert single.batch is None
+    with pytest.raises(ValueError):
+        single.cell(0)
+
+
+def test_shard_single_device_noop():
+    """shard=True on one device must be exactly the unsharded program."""
+    topo = topology.partial_mesh(N, 4)
+    lat = GSet(universe=N * T).lattice
+    spec = SweepSpec(batch=B, op_fn=gset_sweep_op(SEEDS))
+    a = simulate_sweep("bprr", lat, topo, spec, active_rounds=T,
+                       quiet_rounds=Q, shard=False)
+    b = simulate_sweep("bprr", lat, topo, spec, active_rounds=T,
+                       quiet_rounds=Q, shard=True)
+    for f in ("tx", "mem", "cpu", "max_mem_node"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+    np.testing.assert_array_equal(np.asarray(a.final_x),
+                                  np.asarray(b.final_x))
+
+
+SHARD_SCRIPT = r"""
+import jax, jax.numpy as jnp, numpy as np
+assert len(jax.devices()) == 4, jax.devices()
+from repro.core import GSet
+from repro.sync import FaultSchedule, SweepSpec, simulate_sweep, topology
+
+N, T, Q, B = 7, 5, 8, 4
+topo = topology.partial_mesh(N, 4)
+lat = GSet(universe=N * T).lattice
+
+def op_b(x, t):
+    b = x.shape[0]
+    ids = jnp.arange(N) * T + jnp.minimum(t, T - 1)
+    d = jnp.zeros((b, N, N * T), jnp.bool_)
+    return d.at[:, jnp.arange(N), ids].set(True)
+
+scheds = [None if b % 2 == 0 else FaultSchedule.bernoulli(topo, T, 0.3, seed=b)
+          for b in range(B)]
+for engine in ("reference", "fused"):
+    spec = SweepSpec(batch=B, op_fn=op_b, faults=scheds)
+    a = simulate_sweep("bprr", lat, topo, spec, active_rounds=T,
+                       quiet_rounds=Q, shard=False, engine=engine)
+    b = simulate_sweep("bprr", lat, topo, spec, active_rounds=T,
+                       quiet_rounds=Q, shard=True, engine=engine)
+    for f in ("tx", "mem", "cpu", "max_mem_node", "uniform"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f), err_msg=f)
+    np.testing.assert_array_equal(np.asarray(a.final_x), np.asarray(b.final_x))
+print("SHARD_OK")
+"""
+
+
+def test_shard_map_multi_device_subprocess():
+    """True shard_map equivalence on 4 forced host devices (both engines).
+    Runs in a subprocess because XLA device count is locked at jax import."""
+    proc = subprocess.run(
+        [sys.executable, "-c", SHARD_SCRIPT],
+        env=subprocess_env(4), capture_output=True, text=True, timeout=420,
+        cwd=str(Path(__file__).resolve().parents[1]))
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "SHARD_OK" in proc.stdout
