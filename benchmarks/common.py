@@ -209,13 +209,39 @@ def run_delta_algos_sweep(lat, op_fn, batch, topo, events=EVENTS,
     return out
 
 
+def env_meta() -> dict:
+    """Provenance stamped into every results JSON: the exact code and
+    runtime a number came from (git commit, jax version, device kind) —
+    without it the BENCH trajectory files are not comparable across PRs
+    or machines."""
+    import subprocess
+
+    import jax
+
+    meta = {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": jax.devices()[0].device_kind,
+    }
+    try:
+        # --dirty: numbers produced from uncommitted code must not be
+        # attributed to a commit that does not contain that code
+        meta["git_commit"] = subprocess.run(
+            ["git", "describe", "--always", "--dirty"],
+            cwd=str(Path(__file__).resolve().parent), capture_output=True,
+            text=True, timeout=10).stdout.strip() or None
+    except Exception:  # noqa: BLE001 - provenance is best-effort
+        meta["git_commit"] = None
+    return meta
+
+
 def save_result(name: str, payload, harness=None):
-    """Write one results JSON; ``harness`` optionally records the
-    section's own speed (wall-clock seconds and simulated cell count), so
-    the BENCH trajectory captures harness throughput alongside the
-    paper metrics."""
-    if harness is not None:
-        payload = {**payload, "harness": harness}
+    """Write one results JSON. Every file gets a ``harness`` meta block:
+    the environment provenance (``env_meta``) plus, when the section
+    passes one, its own speed record (wall-clock seconds and simulated
+    cell count) so the BENCH trajectory captures harness throughput
+    alongside the paper metrics."""
+    payload = {**payload, "harness": {**(harness or {}), **env_meta()}}
     RESULTS.mkdir(parents=True, exist_ok=True)
     (RESULTS / f"{name}.json").write_text(json.dumps(payload, indent=2))
 

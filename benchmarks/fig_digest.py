@@ -1,0 +1,216 @@
+"""Digest resync benchmark: elements transmitted for a joining replica and
+a healed partition, across divergence ratios (EXPERIMENTS.md §Digest;
+beyond-paper scenario opened by DESIGN.md §14).
+
+The paper's delta algorithms only ship δ-groups born from δ-mutations: a
+replica whose *state* diverged — fresh join, or healing after a partition —
+gets nothing from them (the join scenario shows bprr at tx = 0, never
+converging). The classic fallback is full-state resync, the waste the
+digest subsystem attacks.
+
+Two scenarios on the 15-node partial mesh:
+
+* **join** — every node but the joiner holds the first ``r·U`` universe
+  elements; the joiner is ⊥. Sync-only rounds; the sweep batches the
+  divergence ratios r as config cells with stacked initial states. The
+  optimal-Δ lower bound is what the joiner is missing (``r·U`` elements —
+  any protocol must deliver at least that).
+* **heal** — the Table-I GSet workload under a real ``FaultSchedule``
+  partition of varying width composed with 2% message loss (digest rounds
+  must compose with the fault layer); divergence at heal time grows with
+  the partition width. Reported tx is the post-heal traffic.
+
+Reported per algorithm: total tx over the window, tx through the
+convergence round, time-to-convergence, and ratios vs the full-state
+baseline and the optimal-Δ bound. Emits
+``benchmarks/results/fig_digest.json`` (``_smoke`` variant for CI).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sync import DigestSpec, FaultSchedule, SweepSpec, simulate_sweep
+from repro.core import GSet
+
+from benchmarks import common as C
+
+JOIN_ALGOS = ("state", "bprr", "state_driven", "digest_driven")
+HEAL_ALGOS = ("state", "bprr", "state_driven", "digest_driven")
+RATIOS = (0.05, 0.10, 0.25, 0.50, 0.75)
+LOSS = 0.02
+SEED = 11
+
+
+def _join_x0(nodes: int, universe: int, ratios, joiner: int = 0):
+    cells = []
+    for r in ratios:
+        x0 = np.zeros((nodes, universe), bool)
+        x0[:, : int(round(r * universe))] = True
+        x0[joiner] = False
+        cells.append(x0)
+    return jnp.asarray(np.stack(cells))
+
+
+def run_join(topo, universe: int, ratios, rounds: int, spec: DigestSpec,
+             verbose=True):
+    lat = GSet(universe=universe).lattice
+    x0 = _join_x0(topo.num_nodes, universe, ratios)
+    sweep = SweepSpec(batch=len(ratios),
+                      op_fn=lambda x, t: jnp.zeros_like(x), x0=x0)
+    out = {}
+    for algo in JOIN_ALGOS:
+        res = simulate_sweep(algo, lat, topo, sweep, active_rounds=0,
+                             quiet_rounds=rounds, track_convergence=True,
+                             digest=spec)
+        convs = res.convergence_round()
+        rows = {}
+        for b, r in enumerate(ratios):
+            conv = int(convs[b])
+            bound = int(round(r * universe))
+            tx_conv = int(res.tx[b, : conv + 1].sum()) if conv >= 0 else None
+            rows[f"r{int(r * 100)}"] = {
+                "divergence": r,
+                "bound": bound,
+                "converged": conv >= 0,
+                "conv_round": conv,
+                "tx_window": int(res.tx[b].sum()),
+                "tx_to_conv": tx_conv,
+                "tx_to_conv_vs_bound": round(tx_conv / max(bound, 1), 2)
+                if tx_conv is not None else None,
+            }
+        out[algo] = rows
+        if verbose:
+            line = "  ".join(
+                f"r={c['divergence']:.2f}:"
+                f"{c['tx_to_conv'] if c['converged'] else 'n/c'}"
+                for c in rows.values())
+            print(f"  join {algo:13s} tx_to_conv  {line}")
+    for algo in JOIN_ALGOS:          # vs the full-state baseline
+        for key, row in out[algo].items():
+            base = out["state"][key]["tx_window"]
+            row["tx_window_vs_state"] = round(row["tx_window"] / max(base, 1),
+                                              4)
+    return out
+
+
+def run_heal(topo, events: int, widths, quiet: int, spec: DigestSpec,
+             verbose=True):
+    n = topo.num_nodes
+    lat, op_fn = C.gset_sweep_workload(n, events, seeds=(0,))
+    groups = (np.arange(n) >= n // 2).astype(np.int32)
+    scheds = [
+        FaultSchedule.partition(topo, events, start=0, stop=w, groups=groups)
+        .compose(FaultSchedule.bernoulli(topo, events, LOSS, seed=SEED))
+        for w in widths
+    ]
+    sweep = SweepSpec(batch=len(widths), op_fn=op_fn, faults=scheds)
+    out = {}
+    for algo in HEAL_ALGOS:
+        res = simulate_sweep(algo, lat, topo, sweep, active_rounds=events,
+                             quiet_rounds=quiet, digest=spec)
+        convs = res.convergence_round()
+        rows = {}
+        for b, w in enumerate(widths):
+            conv = int(convs[b])
+            rows[f"w{w}"] = {
+                "partition_rounds": w,
+                "converged": conv >= 0,
+                "ttc_rounds": conv - events + 1 if conv >= 0 else -1,
+                "tx_total": int(res.tx[b].sum()),
+                # traffic from the heal round on — the resync cost itself
+                "tx_post_heal": int(res.tx[b, w:].sum()),
+            }
+        out[algo] = rows
+        if verbose:
+            line = "  ".join(f"w={c['partition_rounds']}:"
+                             f"{c['tx_post_heal']},ttc={c['ttc_rounds']}"
+                             for c in rows.values())
+            print(f"  heal {algo:13s} post-heal tx  {line}")
+    return out
+
+
+def run(nodes=C.NODES, smoke=False, verbose=True):
+    t0 = time.time()
+    if smoke:
+        nodes, universe, rounds = 9, 256, 10
+        ratios, events, widths = (0.10, 0.50), 8, (2, 6)
+        spec = DigestSpec(block_elems=32)
+    else:
+        universe, rounds = 1024, 14
+        ratios, events, widths = RATIOS, 16, (4, 8, 12, 16)
+        spec = DigestSpec(block_elems=64)
+    topo = C.topo_of("mesh", nodes)
+    out = {
+        "topology": topo.name, "nodes": nodes, "universe": universe,
+        "rounds": rounds, "events": events, "smoke": smoke,
+        "block_elems": spec.block_elems,
+        "join": run_join(topo, universe, ratios, rounds, spec,
+                         verbose=verbose),
+        "heal": run_heal(topo, events, widths, quiet=2 * events, spec=spec,
+                         verbose=verbose),
+    }
+    cells = (len(JOIN_ALGOS) * len(ratios) + len(HEAL_ALGOS) * len(widths))
+    C.save_result("fig_digest_smoke" if smoke else "fig_digest", out,
+                  harness=C.harness_meta(t0, cells))
+    return out
+
+
+def validate(out):
+    join, heal = out["join"], out["heal"]
+    checks = []
+    resync = ("state", "state_driven", "digest_driven")
+
+    def conv_tx(algo, key):
+        """tx-to-convergence, with a non-converged cell reading as +inf so
+        comparisons report FAIL instead of raising on the None sentinel."""
+        v = join[algo][key]["tx_to_conv"]
+        return float("inf") if v is None else v
+
+    def conv_ratio(algo, key):
+        v = join[algo][key]["tx_to_conv_vs_bound"]
+        return float("inf") if v is None else v
+
+    checks.append((
+        "join: state/state_driven/digest_driven converge at every ratio",
+        all(c["converged"] for a in resync for c in join[a].values())))
+    checks.append((
+        "join: δ-buffer gossip (bprr) cannot heal state divergence",
+        all(not c["converged"] and c["tx_window"] == 0
+            for c in join["bprr"].values())))
+    le50 = [k for k, c in join["digest_driven"].items()
+            if c["divergence"] <= 0.5]
+    checks.append((
+        "join: digest_driven tx strictly below full-state resync @ <=50% "
+        "divergence (to-convergence AND whole window)",
+        all(conv_tx("digest_driven", k) < conv_tx("state", k)
+            and join["digest_driven"][k]["tx_window"]
+            < join["state"][k]["tx_window"] for k in le50)))
+    checks.append((
+        "join: state_driven < state (whole window)",
+        all(join["state_driven"][k]["tx_window"]
+            < join["state"][k]["tx_window"] for k in join["state"])))
+    checks.append((
+        "join: digest_driven approaches the optimal-Δ bound (<= 16x at "
+        ">=25% divergence; state-based >= 25x)",
+        all(conv_ratio("digest_driven", k) <= 16
+            and conv_ratio("state", k) >= 25
+            for k, c in join["digest_driven"].items()
+            if 0.25 <= c["divergence"] <= 0.75)))
+    checks.append((
+        "heal: every algorithm converges after the partition heals "
+        "(composed with loss)",
+        all(c["converged"] for a in heal for c in heal[a].values())))
+    checks.append((
+        "heal: digest_driven post-heal tx below full-state resync",
+        all(heal["digest_driven"][k]["tx_post_heal"]
+            < heal["state"][k]["tx_post_heal"] for k in heal["state"])))
+    return checks
+
+
+if __name__ == "__main__":
+    for name, ok in validate(run()):
+        print(f"[{'PASS' if ok else 'FAIL'}] {name}")

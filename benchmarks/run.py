@@ -2,27 +2,11 @@
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--full] [--smoke]
                                                 [--section NAME] [--skip ...]
-
-Sections:
-  fig7   GSet/GCounter transmission, tree + mesh     (paper Fig 7, Fig 1)
-  fig8   GMap 10/30/60/100% transmission             (paper Fig 8)
-  fig9   metadata per node vs cluster size           (paper Fig 9)
-  fig10  memory ratio vs BP+RR                       (paper Fig 10)
-  fig11  Retwis under Zipf (bandwidth/memory/CPU)    (paper Fig 11-12)
-  fault    loss/partition/churn redundancy & time-to-convergence
-           (BENCH_fault.json, EXPERIMENTS.md §Fault; --smoke shrinks it
-           to CI sizes)
-  sweep    one-program sweep engine A/B: batched config grid vs per-cell
-           loop (BENCH_sweep.json, DESIGN.md §13; --smoke shrinks it)
-  engine   fused vs reference sync-round engine A/B (perf trajectory,
-           BENCH_engine.json; analytic HBM-pass model + equivalence)
-  kernels  CRDT Pallas kernel correctness sweep (interpret mode — TPU perf
-           claims come from the roofline analysis, not CPU timings)
-  roofline  dry-run roofline table (if results exist)
+                                                [--list-sections]
 
 ``--section NAME`` runs exactly one section (e.g. CI's
 ``--section fault --smoke``); ``--skip`` removes sections from the
-default full sweep.
+default full sweep; ``--list-sections`` prints the registry and exits.
 
 Each section prints its table and appends PASS/FAIL validation checks
 against the paper's qualitative claims.
@@ -37,10 +21,6 @@ import time
 import numpy as np
 
 
-def _section(title):
-    print(f"\n{'='*72}\n== {title}\n{'='*72}")
-
-
 def _checks(checks):
     ok = True
     for name, passed in checks:
@@ -49,7 +29,7 @@ def _checks(checks):
     return ok
 
 
-def bench_kernels():
+def bench_kernels(args):
     import jax.numpy as jnp
     from repro.kernels import ops, ref
 
@@ -67,11 +47,91 @@ def bench_kernels():
     ok = bool((ops.buffer_fold(buf) == ref.buffer_fold(buf)).all())
     results.append(("buffer_fold", ok))
     print(f"  buffer_fold  (5, 262144) == ref: {ok}")
+    dx = jnp.asarray(rng.integers(0, 100, size=(64, 4000)), jnp.int32)
+    got = ops.digest_blocks(dx, block_elems=64, kind="max")
+    ok = bool((np.asarray(got) == np.asarray(
+        ref.digest_blocks(dx, 64, "max"))).all())
+    results.append(("digest_blocks", ok))
+    print(f"  digest_blocks (64, 4000) == ref: {ok}")
     return results
 
 
-SECTIONS = ("fig7", "fig8", "fig9", "fig10", "fig11", "fault", "sweep",
-            "engine", "kernels", "roofline")
+# -- section registry (name -> title, runner(args) -> checks | None) ----------
+
+def _sec_fig7(args):
+    from benchmarks import fig7_transmission as f7
+    return f7.validate(f7.run())
+
+
+def _sec_fig8(args):
+    from benchmarks import fig8_gmap as f8
+    return f8.validate(f8.run())
+
+
+def _sec_fig9(args):
+    from benchmarks import fig9_metadata as f9
+    return f9.validate(f9.run())
+
+
+def _sec_fig10(args):
+    from benchmarks import fig10_memory as f10
+    return f10.validate(f10.run())
+
+
+def _sec_fig11(args):
+    from benchmarks import fig11_retwis as f11
+    return f11.validate(f11.run(full=args.full))
+
+
+def _sec_fault(args):
+    from benchmarks import fig_fault
+    return fig_fault.validate(fig_fault.run(smoke=args.smoke))
+
+
+def _sec_digest(args):
+    from benchmarks import fig_digest
+    return fig_digest.validate(fig_digest.run(smoke=args.smoke))
+
+
+def _sec_sweep(args):
+    from benchmarks import bench_sweep
+    return bench_sweep.validate(bench_sweep.run(smoke=args.smoke))
+
+
+def _sec_engine(args):
+    from benchmarks import bench_engine
+    return bench_engine.validate(bench_engine.run(full=args.full))
+
+
+def _sec_roofline(args):
+    try:
+        from benchmarks import roofline_report
+        roofline_report.table("pod16x16")
+    except Exception as e:  # noqa: BLE001
+        print(f"  (no dry-run results: {e})")
+    return None
+
+
+REGISTRY = {
+    "fig7": ("Fig 7 — GSet/GCounter transmission (tree, mesh)", _sec_fig7),
+    "fig8": ("Fig 8 — GMap K% transmission", _sec_fig8),
+    "fig9": ("Fig 9 — synchronization metadata per node", _sec_fig9),
+    "fig10": ("Fig 10 — memory ratio vs BP+RR (mesh)", _sec_fig10),
+    "fig11": ("Fig 11/12 — Retwis under Zipf contention", _sec_fig11),
+    "fault": ("Fault injection — loss/partition/churn (mesh)", _sec_fault),
+    "digest": ("Digest resync — joining replica / healed partition "
+               "(DESIGN.md §14)", _sec_digest),
+    "sweep": ("Sweep engine A/B — one-program batched grid vs per-cell loop",
+              _sec_sweep),
+    "engine": ("Engine A/B — fused Pallas vs reference jnp sync round",
+               _sec_engine),
+    "kernels": ("CRDT Pallas kernels (interpret-mode correctness sweep)",
+                bench_kernels),
+    "roofline": ("Roofline table (from dry-run artifacts, if present)",
+                 _sec_roofline),
+}
+
+SECTIONS = tuple(REGISTRY)
 
 
 def main() -> None:
@@ -79,79 +139,34 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale Retwis (50 nodes / 1500 objects)")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized fault section (small mesh, few rounds)")
+                    help="CI-sized fault/digest/sweep sections")
     ap.add_argument("--section", default="", choices=("",) + SECTIONS,
                     help="run exactly one section")
     ap.add_argument("--skip", default="", help="comma list of sections")
+    ap.add_argument("--list-sections", action="store_true",
+                    help="print the section registry and exit")
     args = ap.parse_args()
+    if args.list_sections:
+        for name, (title, _) in REGISTRY.items():
+            print(f"  {name:10s} {title}")
+        return
     if args.section:
         skip = set(SECTIONS) - {args.section}
     else:
         skip = set(args.skip.split(",")) if args.skip else set()
+    unknown = skip - set(SECTIONS)
+    if unknown:
+        ap.error(f"unknown --skip sections: {sorted(unknown)}")
 
     t0 = time.time()
     all_ok = True
-
-    if "fig7" not in skip:
-        _section("Fig 7 — GSet/GCounter transmission (tree, mesh)")
-        from benchmarks import fig7_transmission as f7
-        out = f7.run()
-        all_ok &= _checks(f7.validate(out))
-
-    if "fig8" not in skip:
-        _section("Fig 8 — GMap K% transmission")
-        from benchmarks import fig8_gmap as f8
-        out = f8.run()
-        all_ok &= _checks(f8.validate(out))
-
-    if "fig9" not in skip:
-        _section("Fig 9 — synchronization metadata per node")
-        from benchmarks import fig9_metadata as f9
-        out = f9.run()
-        all_ok &= _checks(f9.validate(out))
-
-    if "fig10" not in skip:
-        _section("Fig 10 — memory ratio vs BP+RR (mesh)")
-        from benchmarks import fig10_memory as f10
-        out = f10.run()
-        all_ok &= _checks(f10.validate(out))
-
-    if "fig11" not in skip:
-        _section("Fig 11/12 — Retwis under Zipf contention")
-        from benchmarks import fig11_retwis as f11
-        out = f11.run(full=args.full)
-        all_ok &= _checks(f11.validate(out))
-
-    if "fault" not in skip:
-        _section("Fault injection — loss/partition/churn (mesh)")
-        from benchmarks import fig_fault
-        out = fig_fault.run(smoke=args.smoke)
-        all_ok &= _checks(fig_fault.validate(out))
-
-    if "sweep" not in skip:
-        _section("Sweep engine A/B — one-program batched grid vs per-cell loop")
-        from benchmarks import bench_sweep
-        out = bench_sweep.run(smoke=args.smoke)
-        all_ok &= _checks(bench_sweep.validate(out))
-
-    if "engine" not in skip:
-        _section("Engine A/B — fused Pallas vs reference jnp sync round")
-        from benchmarks import bench_engine
-        out = bench_engine.run(full=args.full)
-        all_ok &= _checks(bench_engine.validate(out))
-
-    if "kernels" not in skip:
-        _section("CRDT Pallas kernels (interpret-mode correctness sweep)")
-        res = bench_kernels()
-        all_ok &= all(ok for _, ok in res)
-
-    if "roofline" not in skip:
-        _section("Roofline table (from dry-run artifacts, if present)")
-        try:
-            from benchmarks import roofline_report
-            roofline_report.table("pod16x16")
-        except Exception as e:  # noqa: BLE001
-            print(f"  (no dry-run results: {e})")
+    for name, (title, runner) in REGISTRY.items():
+        if name in skip:
+            continue
+        print(f"\n{'=' * 72}\n== {title}\n{'=' * 72}")
+        checks = runner(args)
+        if checks is not None:
+            all_ok &= _checks(checks)
 
     print(f"\nbenchmarks done in {time.time()-t0:.0f}s — "
           f"{'ALL CHECKS PASSED' if all_ok else 'SOME CHECKS FAILED'}")

@@ -1,0 +1,162 @@
+"""Digest kernels: blockwise summary reduction + masked block extraction.
+
+The digest-driven sync mode (DESIGN.md §14) adds two hot per-round passes
+over the [N, U] state:
+
+* **digest reduction** — every ``block_elems``-wide universe block folds
+  to three uint32 summary words ``[hash, count, agg]`` (layout defined by
+  ``sync/digest.py``; the mixing constants and modular arithmetic are
+  shared, so kernel and jnp reference agree bitwise);
+* **masked extraction** — Δ(state, block_mask): per neighbor slot q, emit
+  the state restricted to the blocks flagged by that slot's digest diff.
+  The state tile is read ONCE and stays VMEM-resident while all P slot
+  masks apply — the extraction analogue of ``round_recv``'s one-pass
+  receive (a jnp composition would stream the state from HBM P times).
+
+Layout: x is [M, N] (padded node rows × padded flattened universe), block
+width ``bn`` is a multiple of ``block_elems`` so digest blocks never span
+tiles. Masks are int32 [P, M, NB] with NB = N // block_elems.
+
+Sweep batching (DESIGN.md §13): ``batched=True`` prepends a config axis B
+and the grid grows a leading batch dimension; every config's tiles run the
+identical per-tile program, keeping sweep cells bit-identical to their
+single-run equivalents.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import grid_for, interpret_default
+
+DIGEST_BLOCK = (8, 512)
+
+
+def _pos_weights(be: int):
+    # rank-3 iota: Mosaic rejects rank-1 iota on TPU; (1, 1, be)
+    # broadcasts straight against the [bm, nblk, be] block view
+    from repro.sync.digest import WMUL
+
+    pos = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, be), 2)
+    return (jnp.uint32(2) * pos + jnp.uint32(1)) * WMUL
+
+
+def _digest_kernel(x_ref, h_ref, c_ref, a_ref, *, be: int, kind: str,
+                   batched: bool):
+    # The hash pipeline is IMPORTED from the canonical jnp digest, not
+    # re-implemented: the engine bit-identity invariant rests on kernel
+    # and reference agreeing word-for-word, so there is exactly one copy
+    # of the mixing code. Deferred to trace time (like kernels/ref.py)
+    # because a module-level import would be circular via
+    # sync/__init__ -> engine -> kernels.ops -> kernels.digest.
+    from repro.sync.digest import mix, or_fold
+
+    v = x_ref[0] if batched else x_ref[...]              # [bm, bn] uint32
+    bm, bn = v.shape
+    blk = v.reshape(bm, bn // be, be)
+    h = jnp.sum(mix((blk + jnp.uint32(1)) * _pos_weights(be)), axis=-1,
+                dtype=jnp.uint32)
+    cnt = jnp.sum((blk != 0).astype(jnp.uint32), axis=-1, dtype=jnp.uint32)
+    agg = or_fold(blk) if kind == "bitor" else jnp.max(blk, axis=-1)
+    if batched:
+        h_ref[0], c_ref[0], a_ref[0] = h, cnt, agg
+    else:
+        h_ref[...], c_ref[...], a_ref[...] = h, cnt, agg
+
+
+@functools.partial(
+    jax.jit, static_argnames=("be", "kind", "block", "interpret", "batched"))
+def digest_blocks_2d(x, *, be: int, kind: str = "max", block=DIGEST_BLOCK,
+                     interpret: bool | None = None, batched: bool = False):
+    """x: [(B,) M, N] uint32 tile-aligned, ``be`` | block width. Returns
+    (hash, count, agg) each [(B,) M, N // be] uint32."""
+    interpret = interpret_default() if interpret is None else interpret
+    assert x.dtype == jnp.uint32
+    bm, bn = block
+    assert bn % be == 0
+    if batched:
+        bcfg, m, n = x.shape
+    else:
+        m, n = x.shape
+    tiles = grid_for((m, n), block)
+    nb = n // be
+    nb_t = bn // be
+    if batched:
+        grid = (bcfg,) + tiles
+        x_spec = pl.BlockSpec((1, bm, bn), lambda b, i, j: (b, i, j))
+        o_spec = pl.BlockSpec((1, bm, nb_t), lambda b, i, j: (b, i, j))
+        o_shape = jax.ShapeDtypeStruct((bcfg, m, nb), jnp.uint32)
+    else:
+        grid = tiles
+        x_spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+        o_spec = pl.BlockSpec((bm, nb_t), lambda i, j: (i, j))
+        o_shape = jax.ShapeDtypeStruct((m, nb), jnp.uint32)
+    return pl.pallas_call(
+        functools.partial(_digest_kernel, be=be, kind=kind, batched=batched),
+        grid=grid,
+        in_specs=[x_spec],
+        out_specs=[o_spec] * 3,
+        out_shape=[o_shape] * 3,
+        interpret=interpret,
+    )(x)
+
+
+def _extract_kernel(x_ref, m_ref, o_ref, *, p: int, be: int, batched: bool):
+    v = x_ref[0] if batched else x_ref[...]              # [bm, bn], resident
+    bm, bn = v.shape
+    zero = jnp.zeros((), v.dtype)
+    for q in range(p):
+        mq = m_ref[q, 0] if batched else m_ref[q]        # [bm, bn // be]
+        full = jnp.broadcast_to(mq[:, :, None],
+                                (bm, bn // be, be)).reshape(bm, bn)
+        out = jnp.where(full != 0, v, zero)
+        if batched:
+            o_ref[q, 0] = out
+        else:
+            o_ref[q] = out
+
+
+@functools.partial(
+    jax.jit, static_argnames=("be", "block", "interpret", "batched"))
+def masked_extract_2d(x, masks, *, be: int, block=DIGEST_BLOCK,
+                      interpret: bool | None = None, batched: bool = False):
+    """x: [(B,) M, N] tile-aligned, masks: int32 [P, (B,) M, N // be].
+    Returns [P, (B,) M, N]: slot q's state restricted to its masked
+    blocks (⊥ = 0 elsewhere), with the x tile read once for all P slots."""
+    interpret = interpret_default() if interpret is None else interpret
+    bm, bn = block
+    assert bn % be == 0
+    if batched:
+        bcfg, m, n = x.shape
+        p = masks.shape[0]
+        assert masks.shape == (p, bcfg, m, n // be)
+    else:
+        m, n = x.shape
+        p = masks.shape[0]
+        assert masks.shape == (p, m, n // be)
+    tiles = grid_for((m, n), block)
+    nb_t = bn // be
+    if batched:
+        grid = (bcfg,) + tiles
+        x_spec = pl.BlockSpec((1, bm, bn), lambda b, i, j: (b, i, j))
+        m_spec = pl.BlockSpec((p, 1, bm, nb_t), lambda b, i, j: (0, b, i, j))
+        o_spec = pl.BlockSpec((p, 1, bm, bn), lambda b, i, j: (0, b, i, j))
+        o_shape = jax.ShapeDtypeStruct((p, bcfg, m, n), x.dtype)
+    else:
+        grid = tiles
+        x_spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+        m_spec = pl.BlockSpec((p, bm, nb_t), lambda i, j: (0, i, j))
+        o_spec = pl.BlockSpec((p, bm, bn), lambda i, j: (0, i, j))
+        o_shape = jax.ShapeDtypeStruct((p, m, n), x.dtype)
+    return pl.pallas_call(
+        functools.partial(_extract_kernel, p=p, be=be, batched=batched),
+        grid=grid,
+        in_specs=[x_spec, m_spec],
+        out_specs=o_spec,
+        out_shape=o_shape,
+        interpret=interpret,
+    )(x, masks)

@@ -22,6 +22,7 @@ from repro.kernels.common import (
 )
 from repro.kernels.common import LANE
 from repro.kernels.delta_extract import delta_extract_2d
+from repro.kernels.digest import DIGEST_BLOCK, digest_blocks_2d, masked_extract_2d
 from repro.kernels.join import join_2d
 from repro.kernels.lex_join import lex_join_delta_2d
 from repro.kernels.round_recv import ROUND_BLOCK, round_recv_2d
@@ -167,6 +168,74 @@ def round_recv(d_stack, x, *, kind: str = "max", block=None, interpret=None,
     cnt = cnt.sum(axis=1).reshape(m_pad, p)[:b]
     dsz = dsz.sum(axis=1).reshape(m_pad, p)[:b]
     return xo, s, cnt, dsz
+
+
+# -- digest subsystem (DESIGN.md §14) ----------------------------------------
+
+def _digest_tile(u: int, be: int):
+    """Digest tile: lane-aligned, block-aligned (be is a power of two, so
+    any 128-multiple width is block-aligned for be <= 128; wider blocks
+    round the tile up to a block multiple)."""
+    bn = min(512, -(-u // LANE) * LANE)
+    bn = max(bn, be)
+    bn = -(-bn // be) * be
+    return (DIGEST_BLOCK[0], bn)
+
+
+def digest_blocks(x, *, block_elems: int, kind: str = "max", interpret=None,
+                  batched: bool = False):
+    """Blockwise digest of dense states x [(B,) N, U] -> uint32
+    [(B,) N, nB, 3] with channels [hash, count, agg] — bit-identical to
+    ``sync.digest.digest_state`` on single-array states (same mixing
+    constants; all arithmetic is order-independent mod 2^32).
+
+    ``batched=True`` declares the leading config axis B (DESIGN.md §13),
+    which becomes the kernel's leading batch grid dimension.
+    """
+    interpret = interpret_default() if interpret is None else interpret
+    m, u = x.shape[-2], x.shape[-1]
+    nb = -(-u // block_elems)
+    block = _digest_tile(u, block_elems)
+    bm, bn = block
+    m_pad = -(-m // bm) * bm
+    n_pad = -(-u // bn) * bn
+    lead = ((0, 0),) if batched else ()
+    v = jnp.pad(x.astype(jnp.uint32),
+                lead + ((0, m_pad - m), (0, n_pad - u)))
+    h, c, a = digest_blocks_2d(v, be=block_elems, kind=kind, block=block,
+                               interpret=interpret, batched=batched)
+    out = jnp.stack([h, c, a], axis=-1)          # [(B,) m_pad, NBpad, 3]
+    return out[..., :m, :nb, :]
+
+
+def masked_extract(x, block_masks, *, block_elems: int, interpret=None,
+                   batched: bool = False):
+    """Per-slot Δ(state, block_mask): x [(B,) N, U] restricted to each
+    slot's masked blocks. ``block_masks`` bool [(B,) N, P, nB]; returns
+    [(B,) N, P, U] in x's dtype with the x tile read once for all P slots.
+    """
+    interpret = interpret_default() if interpret is None else interpret
+    m, u = x.shape[-2], x.shape[-1]
+    p = block_masks.shape[-2]
+    nb = -(-u // block_elems)
+    assert block_masks.shape[-1] == nb
+    block = _digest_tile(u, block_elems)
+    bm, bn = block
+    m_pad = -(-m // bm) * bm
+    n_pad = -(-u // bn) * bn
+    nb_pad = n_pad // block_elems
+    orig_dtype = x.dtype
+    if orig_dtype == jnp.bool_:
+        x = x.astype(jnp.uint8)
+    lead = ((0, 0),) if batched else ()
+    x2 = jnp.pad(x, lead + ((0, m_pad - m), (0, n_pad - u)))
+    # [(B,) N, P, nB] -> [P, (B,) N_pad, nB_pad] int32
+    mk = jnp.moveaxis(block_masks.astype(jnp.int32), -2, 0)
+    mk = jnp.pad(mk, ((0, 0),) + lead + ((0, m_pad - m), (0, nb_pad - nb)))
+    out = masked_extract_2d(x2, mk, be=block_elems, block=block,
+                            interpret=interpret, batched=batched)
+    out = out[..., :m, :u]                        # [P, (B,) N, U]
+    return jnp.moveaxis(out, 0, -2).astype(orig_dtype)
 
 
 # -- bit-packed GSet helpers (beyond-paper wire/memory format) ---------------

@@ -70,6 +70,24 @@ def round_recv(d_stack, x, kind: str = "max"):
             jnp.stack(cnt, axis=1), jnp.stack(dsz, axis=1))
 
 
+def digest_blocks(x, be: int, kind: str = "max"):
+    """Blockwise digest oracle: delegates to the canonical pure-jnp digest
+    (sync/digest.py) — the kernel must reproduce it bitwise."""
+    from repro.sync import digest as dg
+
+    return dg.digest_state(x, dg.DigestSpec(block_elems=be), kind)
+
+
+def masked_extract(x, block_masks, be: int):
+    """Masked block extraction oracle: x [..., U] restricted per slot to
+    ``block_masks`` [..., P, nB] -> [..., P, U]."""
+    from repro.sync import digest as dg
+
+    spec = dg.DigestSpec(block_elems=be)
+    em = dg.block_mask_to_elems(block_masks, x.shape[-1], spec)
+    return jnp.where(em, x[..., None, :], jnp.zeros((), x.dtype))
+
+
 def buffer_fold(buf, kind: str = "max"):
     """buf [K, ...] -> sends [K-1, ...]: sends[j] = ⊔_{o≠j} buf[o]."""
     k = buf.shape[0]

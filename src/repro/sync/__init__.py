@@ -1,20 +1,24 @@
 """Synchronization algorithms and network simulation (paper §IV-V)."""
 
-from repro.sync.algorithms import ALGORITHMS, SyncAlgorithm
+from repro.sync.algorithms import ALGORITHMS, RESYNC_ALGORITHMS, SyncAlgorithm
+from repro.sync.digest import DigestSpec
 from repro.sync.engine import ENGINES
 from repro.sync.faults import FaultSchedule, RoundFaults
 from repro.sync.simulator import SimResult, cluster_uniform, converged, simulate
 from repro.sync.sweep import SweepSpec, simulate_sweep
 from repro.sync.topology import Topology, by_name, full, partial_mesh, ring, tree
-from repro.sync import engine, faults, scuttlebutt
+from repro.sync import digest, engine, faults, scuttlebutt
 
 __all__ = [
     "ALGORITHMS",
+    "RESYNC_ALGORITHMS",
+    "DigestSpec",
     "ENGINES",
     "FaultSchedule",
     "RoundFaults",
     "SweepSpec",
     "SyncAlgorithm",
+    "digest",
     "engine",
     "faults",
     "SimResult",

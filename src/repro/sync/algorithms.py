@@ -41,6 +41,26 @@ the shared topology in one program; metrics come back per-config ([B]
 instead of scalar). Every cell is bit-identical to the corresponding
 unbatched run — all per-cell arithmetic is elementwise or reduces over the
 same axes in the same order.
+
+Anti-entropy resync (DESIGN.md §14): the delta flavors above only ship
+δ-groups born from δ-mutations — a replica whose *state* diverged (fresh
+join, healed partition) receives nothing from them. Two digest-era modes
+close that gap, both pipelined into the same one-send-per-round step:
+
+* ``state_driven``   — per edge, the lower-id endpoint ships its full
+  state every round; the responder replies with the optimal
+  Δ(its state, received state) computed at receive time (paper §VI /
+  arXiv:1603.01529's state-driven sync). Half the full-state traffic of
+  ``state``, optimal in the return direction.
+* ``digest_driven``  — every node ships a block digest of its state
+  (sync/digest.py) each round and, per neighbor, the blocks whose
+  summaries disagree with that neighbor's last digest — near-optimal
+  for arbitrary divergence at block granularity (ConflictSync,
+  arXiv:2505.01144). Digest messages are priced as Merkle descents.
+
+Neither mode retains δ-buffers: requests repeat every round, so loss,
+partitions, and churn merely delay the next handshake (stale digests are
+safe under monotone growth — see DESIGN.md §14).
 """
 
 from __future__ import annotations
@@ -52,11 +72,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.lattice import Lattice
+from repro.sync import digest as dgst
 from repro.sync import engine as engine_mod
 from repro.sync import treeops as T
+from repro.sync.digest import DigestSpec
 from repro.sync.topology import Topology
 
-ALGORITHMS = ("state", "classic", "bp", "rr", "bprr")
+ALGORITHMS = ("state", "classic", "bp", "rr", "bprr", "state_driven",
+              "digest_driven")
+# The digest-era anti-entropy modes (DESIGN.md §14); they take the resync
+# round path instead of the Algorithm 1/2 δ-buffer path.
+RESYNC_ALGORITHMS = ("state_driven", "digest_driven")
 
 
 def metric_dtype():
@@ -76,8 +102,10 @@ class RoundMetrics(NamedTuple):
 
 class AlgoCarry(NamedTuple):
     x: Any                 # [N, ...U] lattice states ([B, N, ...U] batched)
-    buf: Any               # None | [(B,) N, ...U] | [(B,) N, P+1, ...U]
+    buf: Any               # None | [(B,) N, ...U] | [(B,) N, P(+1), ...U]
     buf_elems: jnp.ndarray  # [(B,) N] buffered entry elements (memory metric)
+    aux: Any = None        # algorithm round-trip state (digest_driven: the
+                           # per-slot remote digests + validity flags)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +117,8 @@ class SyncAlgorithm:
     engine: str = "reference"  # "reference" | "fused" (DESIGN.md §11)
     batch: Optional[int] = None  # config-axis width B, None = single run
                                  # (sweep engine, DESIGN.md §13)
+    digest: Optional[DigestSpec] = None  # digest geometry for
+                                         # "digest_driven" (None = default)
 
     @property
     def resolved_engine(self) -> str:
@@ -96,8 +126,19 @@ class SyncAlgorithm:
         return engine_mod.resolve(self.engine, self.lattice)
 
     @property
+    def is_resync(self) -> bool:
+        """Anti-entropy resync modes (DESIGN.md §14)."""
+        return self.name in RESYNC_ALGORITHMS
+
+    @property
+    def digest_spec(self) -> DigestSpec:
+        return self.digest if self.digest is not None else DigestSpec()
+
+    @property
     def has_buffer(self) -> bool:
-        return self.name != "state"
+        # digest_driven holds digests (in aux), not δ-groups; state_driven's
+        # buf holds the per-neighbor Δ-responses awaiting their send round.
+        return self.name not in ("state", "digest_driven")
 
     @property
     def per_origin(self) -> bool:
@@ -134,14 +175,24 @@ class SyncAlgorithm:
         bot = self.lattice.bottom()
         prefix = self.node_prefix
         x = T.bcast(bot, prefix) if x0 is None else x0
-        if not self.has_buffer:
+        aux = None
+        if self.name == "digest_driven":
+            u = dgst.state_universe(bot)    # rejects undigestable lattices
+            nb = self.digest_spec.num_blocks(u)
+            buf = None
+            # per-slot last-received remote digests + have-one flags
+            aux = (jnp.zeros(prefix + (p, nb, dgst.CHANNELS), jnp.uint32),
+                   jnp.zeros(prefix + (p,), jnp.bool_))
+        elif self.name == "state_driven":
+            buf = T.bcast(bot, prefix + (p,))   # destination-indexed resp
+        elif not self.has_buffer:
             buf = None
         elif self.per_origin:
             buf = T.bcast(bot, prefix + (p + 1,))
         else:
             buf = T.bcast(bot, prefix)
         return AlgoCarry(x=x, buf=buf,
-                         buf_elems=jnp.zeros(prefix, jnp.int32))
+                         buf_elems=jnp.zeros(prefix, jnp.int32), aux=aux)
 
     # -- helpers ---------------------------------------------------------------
 
@@ -191,10 +242,12 @@ class SyncAlgorithm:
         """One synchronous round; ``faults`` is an optional per-round
         ``faults.RoundFaults`` mask triple (None ⇒ fault-free; leaves carry
         a leading [B] axis when ``batch`` is set)."""
+        if self.is_resync:
+            return self._resync_round(carry, op_delta, faults)
         lat, topo = self.lattice, self.topo
         p = topo.max_degree
         sax = self.slot_axis
-        x, buf, buf_elems = carry
+        x, buf, buf_elems, _ = carry
 
         acc = metric_dtype()
         cpu = jnp.zeros((), acc)
@@ -273,6 +326,156 @@ class SyncAlgorithm:
             return jnp.broadcast_to(e, a.shape[:ax] + (p,) + a.shape[ax:])
 
         return jax.tree.map(bc, state)
+
+    # -- anti-entropy resync rounds (DESIGN.md §14) ----------------------------
+
+    def _slot_where(self, cond, a, b):
+        """Select between two slot-indexed states by a [(B,) N, P] mask.
+        Like ``treeops.where_bot``, the mask grows one trailing singleton
+        per universe axis (taken from the unbatched ⊥ leaf ranks) and then
+        broadcasts right-aligned over any leading config axes — the
+        closure never bakes in the config extent (shard-agnostic,
+        DESIGN.md §13)."""
+
+        def sel(xl, yl, bl):
+            c = cond.reshape(cond.shape + (1,) * jnp.ndim(bl))
+            return jnp.where(c, xl, yl)
+
+        return jax.tree.map(sel, a, b, self.lattice.bottom())
+
+    def _join_inbox(self, x, inbox):
+        """x ⊔ every (pre-masked) inbox slot — the kernel pass of the
+        resync receive. The reference loop and the fused ``round_recv``
+        fold are bit-identical (max/or joins are exact)."""
+        if self.resolved_engine == "fused":
+            return engine_mod.fused_join_inbox(self, x, inbox)
+        for q in range(self.topo.max_degree):
+            x = self.lattice.join(x, T.slot(inbox, q, axis=self.slot_axis))
+        return x
+
+    def _resync_round(self, carry: AlgoCarry, op_delta,
+                      faults=None) -> tuple[AlgoCarry, RoundMetrics]:
+        """One pipelined anti-entropy round for ``state_driven`` /
+        ``digest_driven`` (DESIGN.md §14).
+
+        Both modes are stateless w.r.t. δ-history: what a node sends is a
+        function of its current state and (for responses) the most recent
+        request/digest it holds, recomputed every round. Loss, partitions,
+        and churn therefore need no ack-gated retention — a lost message
+        is subsumed by the next handshake, and stale digests are safe
+        because states only grow (skipping a block whose summaries matched
+        at any past time never hides novelty the peer still lacks).
+        """
+        lat, topo = self.lattice, self.topo
+        n, p = topo.num_nodes, topo.max_degree
+        x, buf, buf_elems, aux = carry
+
+        acc = metric_dtype()
+
+        # (1) local update: δ = mᵟ(xᵢ) joins in (no buffering — resync
+        # modes carry op effects inside the state itself)
+        dsz = lat.size(op_delta).astype(jnp.int32)             # [(B,) N]
+        x = lat.join(x, op_delta)
+        cpu = self._msum(dsz, acc)
+
+        up = None if faults is None else faults.up
+        send_live = topo.mask if up is None else topo.mask & up[..., None]
+        valid = topo.mask if faults is None else topo.mask & faults.recv_ok
+
+        if self.name == "state_driven":
+            # Per-edge orientation: the lower id initiates (ships state),
+            # the higher id responds with Δ computed at receive time.
+            ids = jnp.arange(n, dtype=topo.nbrs.dtype)
+            init_send = (ids[:, None] < topo.nbrs) & topo.mask  # [N, P]
+            req_recv = (topo.nbrs < ids[:, None]) & topo.mask
+            d_all = self._slot_where(init_send, self._bcast_sends(x), buf)
+            dig_words = None
+        else:
+            # digest_driven: every slot ships (digest, differing blocks).
+            dig, dvalid = aux
+            spec = self.digest_spec
+            kind = lat.kernel_kind or "max"
+            u = dgst.state_universe(lat.bottom())
+            if self.resolved_engine == "fused":
+                local_dig = engine_mod.fused_digest(
+                    x, spec, kind, batched=self.batched)
+            else:
+                local_dig = dgst.digest_state(x, spec, kind)  # [.., N, nB, 3]
+            local_exp = local_dig[..., None, :, :]            # slot bcast
+            blocks = dgst.digest_diff(local_exp, dig) \
+                & dvalid[..., None]                           # [.., N, P, nB]
+            if self.resolved_engine == "fused":
+                d_all = engine_mod.fused_extract(
+                    x, blocks, spec, batched=self.batched)
+            else:
+                em = dgst.block_mask_to_elems(blocks, u, spec)
+                d_all = dgst.extract_blocks(self._bcast_sends(x), em)
+            # Digest exchange priced as the interactive Merkle-descent
+            # transcript between the two CURRENT trees (root first, recurse
+            # into differing subtrees — converged peers pay one root node),
+            # capped at the flat leaf layer (a heavy-divergence descent
+            # visits more nodes than just shipping every leaf). An
+            # undelivered exchange costs the unanswered root only.
+            dig_in = local_dig[:, topo.nbrs] if self.batched \
+                else local_dig[topo.nbrs]                  # [.., N, P, nB, 3]
+            flat = jnp.int32(spec.words(u))
+            ok = topo.mask if faults is None else topo.mask & faults.send_ok
+            desc = jnp.minimum(dgst.descent_words(local_exp, dig_in), flat)
+            dig_words = jnp.where(ok, desc,
+                                  jnp.int32(dgst.CHANNELS)) * send_live
+
+        # (2) sends: tx counts what an up sender puts on the wire,
+        # delivered or not (DESIGN.md §12)
+        send_sizes = lat.size(d_all).astype(jnp.int32) * send_live
+        tx = self._msum(send_sizes, acc)
+        if dig_words is not None:
+            tx = tx + self._msum(dig_words, acc)
+        cpu = cpu + tx
+
+        # (3) receive: gather + mask once in jnp (the masked inbox is also
+        # the Δ-response / size operand), then one join fold per engine
+        inbox = T.gather2(d_all, topo.nbrs, topo.rev, batched=self.batched)
+        inbox = T.where_bot(valid, inbox, lat.bottom())
+        recv_sizes = lat.size(inbox).astype(jnp.int32)         # [.., N, P]
+        cpu = cpu + self._msum(recv_sizes, acc)
+        x = self._join_inbox(x, inbox)
+
+        if self.name == "state_driven":
+            # (4a) responses: Δ(x', request) for every delivered request,
+            # overwriting the response buffer (soft state — a lost request
+            # just skips this round's response; the initiator re-requests)
+            req_ok = req_recv & valid
+            resp = T.where_bot(req_ok,
+                               lat.delta(self._bcast_sends(x), inbox),
+                               lat.bottom())
+            rsz = lat.size(resp).astype(jnp.int32)             # [.., N, P]
+            cpu = cpu + self._msum(rsz, acc)
+            buf = resp
+            buf_elems = jnp.sum(rsz, axis=-1).astype(jnp.int32)
+        else:
+            # (4b) store delivered digests (each sender broadcast ONE
+            # digest to all its neighbors — no rev routing needed)
+            dig = jnp.where(valid[..., None, None], dig_in, dig)
+            dvalid = dvalid | valid
+            aux = (dig, dvalid)
+            # digesting the state is one elementwise pass over U per up node
+            upm = jnp.ones_like(dsz) if up is None \
+                else up.astype(jnp.int32) * jnp.ones_like(dsz)
+            cpu = cpu + self._msum(upm * jnp.int32(u), acc)
+            # memory: the stored remote digests are this mode's metadata
+            buf_elems = (jnp.sum(dvalid, axis=-1)
+                         * jnp.int32(spec.words(u))).astype(jnp.int32)
+
+        # (5) metrics
+        state_elems = lat.size(x).astype(jnp.int32)            # [(B,) N]
+        node_mem = state_elems.astype(acc) + buf_elems.astype(acc)
+        metrics = RoundMetrics(
+            tx=tx,
+            mem=jnp.sum(node_mem, axis=-1),
+            cpu=cpu,
+            max_mem_node=jnp.max(node_mem, axis=-1),
+        )
+        return AlgoCarry(x=x, buf=buf, buf_elems=buf_elems, aux=aux), metrics
 
     def _receive_reference(self, x, buf, buf_elems, cpu, d_all, acc,
                            faults=None):

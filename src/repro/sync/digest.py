@@ -1,0 +1,248 @@
+"""Hierarchical block digests over the universe axis (DESIGN.md §14).
+
+The paper's delta algorithms (§IV) exploit join decompositions only on the
+steady-state gossip path: every δ-group ever shipped originates from a
+δ-mutation.  A replica that joins fresh, or heals from a partition with
+*state-level* divergence, has no δ-groups to describe what it is missing —
+the classic fallback is a full-state exchange, exactly the waste the paper
+attacks.  State-driven / digest-driven synchronization (and ConflictSync,
+arXiv:2505.01144) recover near-optimal transmission for arbitrary
+divergence by exchanging *digests* and extracting decomposition-based
+deltas against them.
+
+This module is the digest layer shared by both sync modes and engines:
+
+* **Digest layout** — the (flattened) universe axis is cut into
+  ``block_elems``-wide blocks; each block is summarized by three uint32
+  channels ``[hash, count, agg]``:
+
+    - ``hash``  — position-weighted mixed sum of the block's raw slot
+      values (order-independent modular arithmetic, so the Pallas kernel
+      and the pure-jnp path are bit-identical by construction);
+    - ``count`` — number of non-⊥ slots (the popcount summary);
+    - ``agg``   — pointwise max of the block ("max" kinds) or the or-fold
+      of its packed words ("bitor").
+
+  Equal blocks always produce equal summaries; differing blocks produce
+  differing summaries unless the hash channel collides (≈2⁻³² per block —
+  the same w.h.p. contract Merkle-tree anti-entropy systems run on).
+
+* **Merkle roll-up** — leaf summaries fold pairwise into a tree whose
+  root summarizes the whole state.  ``descent_words`` prices a digest
+  message as the transcript of a Merkle descent (root first, recurse into
+  differing subtrees), which is what a wire protocol would actually send:
+  converged peers pay one root node per message instead of the whole leaf
+  layer.
+
+* **Diff → mask → extract** — ``digest_diff`` turns a remote digest into
+  a boolean block mask ("which blocks may hold novelty"), and
+  ``extract_blocks`` materializes Δ(state, block_mask): the state
+  restricted to masked blocks, a valid sub-state of any map-like lattice
+  because whole slots are kept or dropped together.
+
+States may be single dense arrays or struct-of-arrays tuples whose leaves
+share the trailing universe axis (MapLattice points: GSet, GCounter, GMap,
+BitGSet words, LWWMap lex pairs).  Lattices with mixed-rank leaves
+(linear sums, products) have no block structure to digest — ``digestable``
+reports False and the sync layer rejects them up front.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Mixing constants (Knuth / murmur-style multiplicative hashing). All
+# arithmetic is mod 2^32: commutative and associative, so jnp reductions
+# and Pallas in-kernel folds agree bitwise regardless of evaluation order.
+WMUL = np.uint32(0x85EBCA77)
+LEAF_MUL = np.uint32(0x27D4EB2F)
+PAIR_L = np.uint32(0xC2B2AE35)
+PAIR_R = np.uint32(0x165667B1)
+
+CHANNELS = 3  # [hash, count, agg] uint32 words per block
+
+
+@dataclasses.dataclass(frozen=True)
+class DigestSpec:
+    """Digest geometry: how the universe axis is blocked.
+
+    ``block_elems`` must be a power of two ≥ 8 so blocks tile cleanly into
+    the kernels' lane-aligned VMEM tiles (DESIGN.md §14).
+    """
+
+    block_elems: int = 32
+
+    def __post_init__(self):
+        be = self.block_elems
+        if be < 8 or be & (be - 1):
+            raise ValueError(
+                f"block_elems must be a power of two >= 8, got {be}")
+
+    def num_blocks(self, universe: int) -> int:
+        return -(-universe // self.block_elems)
+
+    def words(self, universe: int) -> int:
+        """Flat wire size of one digest message in uint32 words (the leaf
+        layer; the Merkle descent cost model can only charge less)."""
+        return CHANNELS * self.num_blocks(universe)
+
+
+def state_universe(state) -> int:
+    """Shared trailing universe extent of a digestable state's leaves.
+
+    Raises ValueError for states without one (rank-0 leaves or mismatched
+    trailing axes — linear sums, products of unequal maps).
+    """
+    leaves = jax.tree.leaves(state)
+    dims = {l.shape[-1] if l.ndim else None for l in leaves}
+    if None in dims or len(dims) != 1:
+        raise ValueError(
+            "digest sync needs map-like states whose leaves share one "
+            f"trailing universe axis; got leaf shapes "
+            f"{[getattr(l, 'shape', None) for l in leaves]}")
+    return dims.pop()
+
+
+def digestable(lattice) -> bool:
+    try:
+        state_universe(lattice.bottom())
+        return True
+    except ValueError:
+        return False
+
+
+def _pos_weights(be: int) -> jnp.ndarray:
+    """Per-position odd multipliers, shared by every block (weights depend
+    only on the position *within* the block, so tiled kernels need no
+    global column offset)."""
+    pos = np.arange(be, dtype=np.uint32)
+    return jnp.asarray((2 * pos + 1) * WMUL)
+
+
+def mix(v: jnp.ndarray) -> jnp.ndarray:
+    """Elementwise uint32 avalanche mix (fmix32-style; shared with the
+    Pallas kernel). The full-avalanche nonlinearity matters: the block
+    hash sums per-position mixes, and an affine-in-value mix would make
+    equal-cardinality boolean diffs with equal index sums collide
+    DETERMINISTICALLY (e.g. {0,3} vs {1,2}), not at the advertised 2⁻³²."""
+    v = v ^ (v >> 16)
+    v = v * jnp.uint32(0x7FEB352D)
+    v = v ^ (v >> 15)
+    v = v * jnp.uint32(0x846CA68B)
+    return v ^ (v >> 16)
+
+
+def or_fold(v: jnp.ndarray) -> jnp.ndarray:
+    """Or-reduce the trailing (power-of-two) axis by halving."""
+    while v.shape[-1] > 1:
+        v = v[..., ::2] | v[..., 1::2]
+    return v[..., 0]
+
+
+def _leaf_digest(leaf, spec: DigestSpec, kind: str):
+    be = spec.block_elems
+    u = leaf.shape[-1]
+    nb = spec.num_blocks(u)
+    v = leaf.astype(jnp.uint32)
+    pad = nb * be - u
+    if pad:
+        v = jnp.pad(v, [(0, 0)] * (v.ndim - 1) + [(0, pad)])
+    v = v.reshape(v.shape[:-1] + (nb, be))
+    # position folds into the mix INPUT (not an outer weight): the sum of
+    # avalanche-mixed (value, position) words behaves like a random
+    # subset-sum, so distinct blocks collide at ~2^-32 rather than
+    # deterministically (see mix()).
+    h = jnp.sum(mix((v + jnp.uint32(1)) * _pos_weights(be)), axis=-1,
+                dtype=jnp.uint32)
+    cnt = jnp.sum((v != 0).astype(jnp.uint32), axis=-1, dtype=jnp.uint32)
+    agg = or_fold(v) if kind == "bitor" else jnp.max(v, axis=-1)
+    return h, cnt, agg
+
+
+def digest_state(state, spec: DigestSpec, kind: str = "max") -> jnp.ndarray:
+    """Digest a (possibly batched) state: leaves [..., U] -> uint32
+    [..., num_blocks, 3]. Multi-leaf states combine leafwise with odd
+    per-leaf multipliers (identity for single-array states, so the Pallas
+    kernel path reproduces this bitwise)."""
+    leaves = jax.tree.leaves(state)
+    h = cnt = agg = None
+    for i, leaf in enumerate(leaves):
+        lh, lc, la = _leaf_digest(leaf, spec, kind)
+        lm = jnp.uint32(1) if i == 0 else jnp.uint32(2 * i + 1) * LEAF_MUL
+        h = lh * lm if h is None else h + lh * lm
+        cnt = lc if cnt is None else cnt + lc
+        agg = la if agg is None else jnp.maximum(agg, la)
+    return jnp.stack([h, cnt, agg], axis=-1)
+
+
+def digest_diff(local: jnp.ndarray, remote: jnp.ndarray) -> jnp.ndarray:
+    """Block mask of *possible* divergence: True wherever any summary
+    channel differs. Never drops a truly differing block (modulo the hash
+    contract above); equal blocks are never masked."""
+    return jnp.any(local != remote, axis=-1)
+
+
+def block_mask_to_elems(mask: jnp.ndarray, universe: int,
+                        spec: DigestSpec) -> jnp.ndarray:
+    """bool [..., nB] block mask -> bool [..., U] slot mask."""
+    return jnp.repeat(mask, spec.block_elems, axis=-1)[..., :universe]
+
+
+def extract_blocks(state, elem_mask: jnp.ndarray):
+    """Δ(state, block_mask): the state restricted to masked slots (⊥
+    outside). Whole slots are kept or dropped, so the result is a valid
+    sub-state for any map-like lattice (lex pairs included)."""
+    return jax.tree.map(
+        lambda l: jnp.where(elem_mask, l, jnp.zeros((), l.dtype)), state)
+
+
+# -- Merkle roll-up and the descent cost model --------------------------------
+
+def merkle_levels(leaf: jnp.ndarray) -> list[jnp.ndarray]:
+    """Fold the leaf layer [..., nB, 3] pairwise up to the root.
+
+    Returns ``[leaf_padded, ..., root]`` with level ℓ holding 2^(L-ℓ)
+    nodes; the leaf layer is zero-padded to a power of two (identical on
+    both sides of any comparison, so padding never reads as divergence).
+    A parent mixes its children's channels, so any child difference
+    surfaces in the parent (w.h.p.) — the property the descent relies on.
+    """
+    nb = leaf.shape[-2]
+    size = 1
+    while size < nb:
+        size *= 2
+    if size != nb:
+        pad = [(0, 0)] * (leaf.ndim - 2) + [(0, size - nb), (0, 0)]
+        leaf = jnp.pad(leaf, pad)
+    levels = [leaf]
+    cur = leaf
+    while cur.shape[-2] > 1:
+        left, right = cur[..., ::2, :], cur[..., 1::2, :]
+        h = mix(left[..., 0]) * PAIR_L + mix(right[..., 0]) * PAIR_R
+        cnt = left[..., 1] + right[..., 1]
+        agg = jnp.maximum(left[..., 2], right[..., 2])
+        cur = jnp.stack([h, cnt, agg], axis=-1)
+        levels.append(cur)
+    return levels
+
+
+def descent_words(local_leaf: jnp.ndarray,
+                  remote_leaf: jnp.ndarray) -> jnp.ndarray:
+    """Cost (uint32 words) of one digest message priced as a Merkle
+    descent against the sender's latest view of the peer's tree
+    (DESIGN.md §14): the root is always sent; every differing internal
+    node fetches its two children. Equal trees cost one node. Shapes:
+    ``local_leaf`` broadcasts against ``remote_leaf`` ([..., nB, 3]);
+    returns int32 with the block axes reduced away."""
+    loc = merkle_levels(local_leaf)
+    rem = merkle_levels(remote_leaf)
+    nodes = jnp.ones(jnp.broadcast_shapes(
+        loc[-1].shape[:-2], rem[-1].shape[:-2]), jnp.int32)
+    for lv_l, lv_r in zip(loc[1:], rem[1:]):     # internal levels + root
+        diff = jnp.any(lv_l != lv_r, axis=-1)    # [..., nodes_at_level]
+        nodes = nodes + 2 * jnp.sum(diff, axis=-1).astype(jnp.int32)
+    return CHANNELS * nodes

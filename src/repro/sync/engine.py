@@ -147,6 +147,34 @@ def fused_receive(algo, x, buf, buf_elems, cpu, d_all, acc_dtype,
     return x, buf, buf_elems, cpu
 
 
+def fused_join_inbox(algo, x, inbox):
+    """Resync receive (DESIGN.md §14): fold all P pre-masked inbox slots
+    into x in one ``round_recv`` pass (state tile VMEM-resident across the
+    slots; counts/extractions are not needed — the resync modes compute
+    sizes and Δ-responses from the shared masked inbox in jnp, so both
+    engines consume identical operands by construction)."""
+    d_stack = jnp.moveaxis(inbox, algo.slot_axis, 0)     # [P, (B,) N, U]
+    xo, _, _, _ = kops.round_recv(
+        d_stack, x, kind=algo.lattice.kernel_kind, emit_stored=False)
+    return xo
+
+
+def fused_digest(x, spec, kind: str, batched: bool = False):
+    """Blockwise digest of the dense state in one ``kernels.digest`` pass;
+    bit-identical to ``sync.digest.digest_state`` (shared mixing constants,
+    order-independent mod-2^32 arithmetic)."""
+    return kops.digest_blocks(x, block_elems=spec.block_elems, kind=kind,
+                              batched=batched)
+
+
+def fused_extract(x, block_masks, spec, batched: bool = False):
+    """Δ(state, block_mask) for all P neighbor slots in one kernel pass
+    (the state tile is read once; a jnp composition would stream it from
+    HBM P times). Returns [(B,) N, P, U]."""
+    return kops.masked_extract(x, block_masks, block_elems=spec.block_elems,
+                               batched=batched)
+
+
 def fused_loo_sends(buf, kind: str, batched: bool = False):
     """All P leave-one-out sends from the origin-indexed buffer
     [(B,) N, P+1, U] in one ``buffer_fold`` kernel pass (node axis folded

@@ -40,6 +40,7 @@ import numpy as np
 from repro.core.lattice import Lattice
 from repro.sync import treeops as T
 from repro.sync.algorithms import AlgoCarry, RoundMetrics, SyncAlgorithm
+from repro.sync.digest import DigestSpec
 from repro.sync.faults import FaultSchedule
 from repro.sync.topology import Topology
 
@@ -225,6 +226,7 @@ def simulate(
     wide_metrics: bool = True,
     faults: Optional[FaultSchedule] = None,
     track_convergence: Optional[bool] = None,
+    digest: Optional[DigestSpec] = None,
 ) -> SimResult:
     """Run ``active_rounds`` op+sync rounds plus ``quiet_rounds`` sync-only
     drain rounds of ``algo`` over ``topo``.
@@ -245,9 +247,12 @@ def simulate(
     (``SimResult.uniform`` / ``convergence_round()``) at the cost of two
     extra leq passes per round; default None enables it exactly when a
     fault schedule is given (time-to-convergence is a fault metric).
+
+    ``digest`` overrides the block geometry of the ``digest_driven``
+    algorithm (DESIGN.md §14); ignored by every other algorithm.
     """
     alg = SyncAlgorithm(name=algo, lattice=lattice, topo=topo, loo=loo,
-                        engine=engine)
+                        engine=engine, digest=digest)
     carry0 = alg.init(x0)
     total = active_rounds + quiet_rounds
     if faults is not None and not faults.same_topology(topo):

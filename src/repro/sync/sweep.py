@@ -39,6 +39,7 @@ import numpy as np
 
 from repro.core.lattice import Lattice
 from repro.sync.algorithms import SyncAlgorithm
+from repro.sync.digest import DigestSpec
 from repro.sync.faults import FaultSchedule, FaultViews
 from repro.sync.simulator import (
     SimResult,
@@ -139,6 +140,7 @@ def simulate_sweep(
     wide_metrics: bool = True,
     track_convergence: Optional[bool] = None,
     shard: bool = False,
+    digest: Optional[DigestSpec] = None,
 ) -> SimResult:
     """Run ``spec.batch`` configurations of ``algo`` over the shared
     ``topo``/``lattice`` as one jitted scan.
@@ -154,7 +156,7 @@ def simulate_sweep(
     requires ``batch`` divisible by the device count).
     """
     alg = SyncAlgorithm(name=algo, lattice=lattice, topo=topo, loo=loo,
-                        engine=engine, batch=spec.batch)
+                        engine=engine, batch=spec.batch, digest=digest)
     carry0 = alg.init(spec.x0)
     total = active_rounds + quiet_rounds
     views = spec.stacked_views(topo, total)

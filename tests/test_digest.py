@@ -1,0 +1,340 @@
+"""Digest subsystem tests (DESIGN.md §14): layout, diff/extract laws,
+Merkle roll-up + descent pricing, the Pallas kernel pair, and the two
+anti-entropy sync modes on the scenarios that motivate them — a joining
+replica and a healed partition, where δ-buffer gossip provably cannot
+resynchronize divergent *state*.
+
+Engine bit-identity and fault-grid behavior for ``state_driven`` /
+``digest_driven`` ride the existing ALGORITHMS-parametrized suites
+(test_engine_equivalence, test_fault_injection, test_sweep); this file
+covers what those cannot: digest-specific laws and divergent-x0 scenarios.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import BitGSet, GCounter, GSet, LWWMap
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.sync import DigestSpec, converged, digest as dg, simulate, topology
+from repro.sync.sweep import SweepSpec, simulate_sweep
+
+N = 9
+
+
+# -- DigestSpec / layout ------------------------------------------------------
+
+def test_digest_spec_validation():
+    for bad in (0, 4, 12, 33):
+        with pytest.raises(ValueError):
+            DigestSpec(block_elems=bad)
+    spec = DigestSpec(block_elems=16)
+    assert spec.num_blocks(100) == 7
+    assert spec.words(100) == 3 * 7
+
+
+def test_state_universe_rejects_mixed_rank_leaves():
+    from repro.core.lattice import MapLattice, linear_sum
+    from repro.core import value_lattices as vl
+
+    low = MapLattice(4, vl.max_int(), "lo").build()
+    high = MapLattice(4, vl.max_int(), "hi").build()
+    lat = linear_sum("linsum", low, high, None)
+    assert not dg.digestable(lat)
+    assert dg.digestable(GSet(universe=8).lattice)
+    assert dg.digestable(LWWMap(num_keys=8).lattice)
+    # ... and digest_driven refuses the lattice up front
+    topo = topology.ring(5)
+    with pytest.raises(ValueError, match="universe"):
+        simulate("digest_driven", lat, topo, lambda x, t: x,
+                 active_rounds=0, quiet_rounds=1)
+
+
+# -- diff / extract laws ------------------------------------------------------
+
+def _states(kind, rng):
+    if kind == "gcounter":
+        return jnp.asarray(rng.integers(0, 6, 100), jnp.int32)
+    if kind == "gset":
+        return jnp.asarray(rng.integers(0, 2, 100), jnp.bool_)
+    if kind == "bitgset":
+        return jnp.asarray(rng.integers(0, 2**32, 5, dtype=np.uint64)
+                           .astype(np.uint32))
+    if kind == "lww":
+        ts = rng.integers(0, 4, 100)
+        va = np.where(ts > 0, rng.integers(0, 4, 100), 0)
+        return (jnp.asarray(ts, jnp.int32), jnp.asarray(va, jnp.int32))
+    raise ValueError(kind)
+
+
+LATTICES = {
+    "gcounter": GCounter(100).lattice,  # universe == num_replicas here
+    "gset": GSet(universe=100).lattice,
+    "bitgset": BitGSet(universe=160).lattice,
+    "lww": LWWMap(num_keys=100).lattice,
+}
+
+
+@pytest.mark.parametrize("kind", sorted(LATTICES))
+def test_digest_extract_law(kind):
+    """The digest-sync correctness law: joining the extraction of a's
+    diff-masked blocks into b recovers a ⊔ b — no differing block is ever
+    dropped by ``digest_diff``."""
+    lat = LATTICES[kind]
+    spec = DigestSpec(block_elems=16)
+    rng = np.random.default_rng(3)
+    for trial in range(10):
+        a = _states(kind, rng)
+        b = _states(kind, rng)
+        lkind = lat.kernel_kind or "max"
+        mask = dg.digest_diff(dg.digest_state(a, spec, lkind),
+                              dg.digest_state(b, spec, lkind))
+        u = dg.state_universe(a)
+        em = dg.block_mask_to_elems(mask, u, spec)
+        ext = dg.extract_blocks(a, em)
+        lhs = lat.join(ext, b)
+        rhs = lat.join(a, b)
+        assert bool(lat.leq(lhs, rhs)) and bool(lat.leq(rhs, lhs)), \
+            f"{kind} trial {trial}: extraction dropped novelty"
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_digest_diff_never_drops_a_differing_block(data):
+    """Property: every block where the raw states differ is flagged by
+    ``digest_diff`` (the w.h.p. hash contract, exercised adversarially)."""
+    be = 8
+    spec = DigestSpec(block_elems=be)
+    u = 24
+    a = jnp.asarray(data.draw(st.lists(st.integers(0, 5), min_size=u,
+                                       max_size=u)), jnp.int32)
+    b = jnp.asarray(data.draw(st.lists(st.integers(0, 5), min_size=u,
+                                       max_size=u)), jnp.int32)
+    mask = np.asarray(dg.digest_diff(dg.digest_state(a, spec),
+                                     dg.digest_state(b, spec)))
+    true_diff = (np.asarray(a).reshape(-1, be)
+                 != np.asarray(b).reshape(-1, be)).any(-1)
+    assert (mask | ~true_diff).all()
+    # ... and equal blocks are never flagged (digests are deterministic)
+    assert not (mask & ~true_diff).any()
+
+
+def test_boolean_blocks_collision_free_exhaustively():
+    """Regression: the block hash must not be affine in boolean states —
+    an affine hash collides DETERMINISTICALLY for equal-cardinality diffs
+    with equal index sums (e.g. {0,3} vs {1,2}). Exhaustively check all
+    2^8 boolean blocks of width 8 digest distinctly."""
+    spec = DigestSpec(block_elems=8)
+    blocks = jnp.asarray(
+        [[(i >> b) & 1 for b in range(8)] for i in range(256)], jnp.bool_)
+    digs = np.asarray(dg.digest_state(blocks, spec))     # [256, 1, 3]
+    flat = {tuple(d[0]) for d in digs}
+    assert len(flat) == 256, "distinct boolean blocks collided"
+    # the historical collision pair, explicitly
+    a = jnp.zeros(8, jnp.bool_).at[jnp.asarray([0, 3])].set(True)
+    b = jnp.zeros(8, jnp.bool_).at[jnp.asarray([1, 2])].set(True)
+    assert bool(dg.digest_diff(dg.digest_state(a, spec),
+                               dg.digest_state(b, spec)).any())
+
+
+# -- Merkle roll-up / descent pricing ----------------------------------------
+
+def test_merkle_rollup_and_descent():
+    spec = DigestSpec(block_elems=8)
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(0, 9, 100), jnp.int32)
+    da = dg.digest_state(a, spec)
+    levels = dg.merkle_levels(da)
+    assert levels[0].shape[-2] == 16          # 13 blocks padded to 2^4
+    assert levels[-1].shape[-2] == 1          # root
+    # equal trees: the descent stops at the root
+    assert int(dg.descent_words(da, da)) == dg.CHANNELS
+    # a single flipped slot: one leaf path differs -> descent cost is
+    # O(depth), far below the flat leaf layer
+    b = a.at[17].set(99)
+    db = dg.digest_state(b, spec)
+    w = int(dg.descent_words(da, db))
+    assert dg.CHANNELS < w <= dg.CHANNELS * (1 + 2 * len(levels[1:]))
+    assert w < spec.words(100)
+
+
+# -- the Pallas kernel pair vs the jnp reference ------------------------------
+
+@pytest.mark.parametrize("be", [16, 32, 128])
+@pytest.mark.parametrize("kind", ["max", "bitor"])
+def test_digest_kernel_matches_reference(kind, be):
+    rng = np.random.default_rng(1)
+    if kind == "bitor":
+        x = jnp.asarray(rng.integers(0, 2**32, (9, 300), dtype=np.uint64)
+                        .astype(np.uint32))
+    else:
+        x = jnp.asarray(rng.integers(0, 50, (9, 300)), jnp.int32)
+    got = kops.digest_blocks(x, block_elems=be, kind=kind)
+    want = kref.digest_blocks(x, be, kind)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # batched grid: every config bit-identical to its solo run
+    xb = jnp.stack([x, x[::-1]])
+    gb = kops.digest_blocks(xb, block_elems=be, kind=kind, batched=True)
+    np.testing.assert_array_equal(np.asarray(gb[0]), np.asarray(got))
+    np.testing.assert_array_equal(
+        np.asarray(gb[1]),
+        np.asarray(kops.digest_blocks(x[::-1], block_elems=be, kind=kind)))
+
+
+@pytest.mark.parametrize("dtype", ["bool", "int32", "uint32"])
+def test_masked_extract_kernel_matches_reference(dtype):
+    rng = np.random.default_rng(2)
+    be = 32
+    u, p = 200, 4
+    nb = -(-u // be)
+    if dtype == "bool":
+        x = jnp.asarray(rng.integers(0, 2, (7, u)), jnp.bool_)
+    elif dtype == "int32":
+        x = jnp.asarray(rng.integers(0, 9, (7, u)), jnp.int32)
+    else:
+        x = jnp.asarray(rng.integers(0, 2**32, (7, u), dtype=np.uint64)
+                        .astype(np.uint32))
+    masks = jnp.asarray(rng.integers(0, 2, (7, p, nb)), bool)
+    got = kops.masked_extract(x, masks, block_elems=be)
+    want = kref.masked_extract(x, masks, be)
+    assert got.dtype == x.dtype
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    xb = jnp.stack([x, x])
+    mb = jnp.stack([masks, masks[:, ::-1]])
+    gb = kops.masked_extract(xb, mb, block_elems=be, batched=True)
+    np.testing.assert_array_equal(np.asarray(gb[0]), np.asarray(got))
+
+
+# -- the motivating scenarios: joining replica / healed partition -------------
+
+def _join_setup(universe=128, frac=0.5):
+    """Everyone but node 0 holds the first frac·U elements; node 0 is ⊥."""
+    lat = GSet(universe=universe).lattice
+    x0 = np.zeros((N, universe), bool)
+    x0[1:, : int(frac * universe)] = True
+    return lat, jnp.asarray(x0)
+
+
+def _quiet_op(x, t):
+    return jnp.zeros_like(x)
+
+
+def test_delta_gossip_cannot_heal_divergent_state():
+    """The gap the subsystem closes: δ-buffer algorithms ship only
+    δ-mutation groups, so a fresh joiner receives NOTHING from them."""
+    topo = topology.partial_mesh(N, 4)
+    lat, x0 = _join_setup()
+    for algo in ("classic", "bprr"):
+        res = simulate(algo, lat, topo, _quiet_op, active_rounds=0,
+                       quiet_rounds=12, x0=x0, track_convergence=True)
+        assert not converged(lat, res.final_x), algo
+        assert res.convergence_round() == -1
+        assert res.total_tx == 0
+
+
+@pytest.mark.parametrize("engine", ["reference", "fused"])
+@pytest.mark.parametrize("algo", ["state", "state_driven", "digest_driven"])
+def test_resync_heals_joining_replica(algo, engine):
+    topo = topology.partial_mesh(N, 4)
+    lat, x0 = _join_setup()
+    res = simulate(algo, lat, topo, _quiet_op, active_rounds=0,
+                   quiet_rounds=14, x0=x0, engine=engine,
+                   track_convergence=True)
+    assert converged(lat, res.final_x)
+    assert res.convergence_round() >= 0
+    assert np.asarray(res.final_x)[0, :64].all()
+
+
+def test_resync_transmission_ordering_on_join():
+    """The subsystem's raison d'être: over a fixed anti-entropy window
+    covering a replica join, digest ≪ state-driven ≪ full-state resync
+    (the steady-state digest floor is a few words per edge, while state
+    flavors re-ship states forever), and digest-driven resolves the join
+    itself within a small multiple of the optimal-Δ lower bound."""
+    topo = topology.partial_mesh(N, 4)
+    lat, x0 = _join_setup(frac=0.5)
+    bound = 64  # joiner misses 64 elements; everyone else misses nothing
+    window, to_conv = {}, {}
+    for algo in ("state", "state_driven", "digest_driven"):
+        res = simulate(algo, lat, topo, _quiet_op, active_rounds=0,
+                       quiet_rounds=14, x0=x0, track_convergence=True)
+        conv = res.convergence_round()
+        assert conv >= 0, algo
+        window[algo] = res.total_tx
+        to_conv[algo] = int(res.tx[: conv + 1].sum())
+    assert window["digest_driven"] < window["state_driven"] < window["state"]
+    assert window["digest_driven"] * 4 < window["state"]
+    assert to_conv["digest_driven"] < 16 * bound
+    assert to_conv["state"] >= 30 * bound
+
+
+def test_digest_driven_heals_partition_and_composes_with_loss():
+    """Post-partition heal — the motivating fault scenario — composed with
+    message loss: both resync modes converge once the graph heals."""
+    from repro.sync import FaultSchedule
+
+    T, Q = 8, 16
+    topo = topology.partial_mesh(N, 4)
+    lat = GSet(universe=N * T).lattice
+
+    def op_fn(x, t):
+        ids = jnp.arange(N) * T + jnp.minimum(t, T - 1)
+        d = jnp.zeros((N, N * T), jnp.bool_)
+        return d.at[jnp.arange(N), ids].set(True)
+
+    groups = (np.arange(N) >= N // 2).astype(np.int32)
+    sched = FaultSchedule.partition(topo, T, 0, T, groups).compose(
+        FaultSchedule.bernoulli(topo, T, 0.15, seed=3))
+    for algo in ("state_driven", "digest_driven"):
+        res = simulate(algo, lat, topo, op_fn, active_rounds=T,
+                       quiet_rounds=Q, faults=sched)
+        assert converged(lat, res.final_x), algo
+        assert int(np.asarray(res.final_x)[0].sum()) == N * T
+
+
+def test_digest_block_size_is_tunable():
+    """Coarser blocks -> smaller digests, more over-send; both converge
+    and the DigestSpec plumbs through simulate()."""
+    topo = topology.partial_mesh(N, 4)
+    lat, x0 = _join_setup(universe=256, frac=0.25)
+    tx = {}
+    for be in (16, 128):
+        res = simulate("digest_driven", lat, topo, _quiet_op,
+                       active_rounds=0, quiet_rounds=12, x0=x0,
+                       digest=DigestSpec(block_elems=be),
+                       track_convergence=True)
+        assert converged(lat, res.final_x)
+        conv = res.convergence_round()
+        tx[be] = int(res.tx[: conv + 1].sum())
+    assert tx[16] != tx[128]        # geometry actually changes the wire
+
+
+def test_resync_sweep_over_divergence_ratios():
+    """Stacked divergent x0 on the sweep config axis — the fig_digest
+    harness shape — with each cell bit-identical to its single run."""
+    topo = topology.partial_mesh(N, 4)
+    fracs = (0.25, 0.75)
+    universe = 128
+    lat = GSet(universe=universe).lattice
+    x0s = []
+    for f in fracs:
+        x0 = np.zeros((N, universe), bool)
+        x0[1:, : int(f * universe)] = True
+        x0s.append(x0)
+    spec = SweepSpec(batch=len(fracs),
+                     op_fn=lambda x, t: jnp.zeros_like(x),
+                     x0=jnp.asarray(np.stack(x0s)))
+    res = simulate_sweep("digest_driven", lat, topo, spec, active_rounds=0,
+                         quiet_rounds=12, track_convergence=True)
+    convs = res.convergence_round()
+    for b, f in enumerate(fracs):
+        single = simulate("digest_driven", lat, topo,
+                          lambda x, t: jnp.zeros_like(x), active_rounds=0,
+                          quiet_rounds=12, x0=jnp.asarray(x0s[b]),
+                          track_convergence=True)
+        np.testing.assert_array_equal(res.cell(b).tx, single.tx)
+        np.testing.assert_array_equal(np.asarray(res.cell(b).final_x),
+                                      np.asarray(single.final_x))
+        assert int(convs[b]) == single.convergence_round() >= 0
