@@ -1,0 +1,153 @@
+"""Store-engine A/B: one-program keyed store vs the per-object Python
+loop (DESIGN.md §15; BENCH_store.json).
+
+The pre-store harness shape — one ``simulate()`` per CRDT object — pays
+a fresh trace + compile and thousands of tiny-array dispatches per
+object; at store scale (the paper's Retwis runs 30K objects, the ROADMAP
+north star is millions) that cost dominates everything. The store engine
+runs every object as one jitted scan over [B, N, U] arrays:
+one compile, B× larger elementwise ops per dispatch.
+
+The per-object loop is timed on a fixed sample of objects and
+extrapolated linearly (per-object trace/compile/dispatch cost is
+object-count-independent, which the recorded per-scale sample timings
+confirm) — timing *every* object through the loop at 64K objects would
+take hours, which is precisely the point being measured. The sampled
+objects are checked bit-identical (states + all metrics) to their store
+cells before any timing is reported.
+
+Wall-clock here is CPU wall-clock of the *harness*; kernel-level perf
+keeps its story in BENCH_engine's analytic pass model.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.lattice import MapLattice
+from repro.core import value_lattices as vl
+from repro.sync import StoreSpec, simulate, simulate_store
+from repro.sync import workloads as W
+
+from benchmarks import common as C
+
+SCALES = (1024, 4096, 16384)
+FULL_SCALES = SCALES + (65536,)
+SMOKE_SCALES = (256, 1024)
+LOOP_SAMPLE = 16
+
+NODES, SLOTS, ROUNDS, OPS, ZIPF = 16, 32, 20, 4, 1.0
+ALGO = "bprr"
+
+
+def _cells_identical(res, singles_idx, singles):
+    for b, single in zip(singles_idx, singles):
+        cell = res.object_result(int(b))
+        same = (np.array_equal(cell.tx, single.tx)
+                and np.array_equal(cell.mem, single.mem)
+                and np.array_equal(cell.cpu, single.cpu)
+                and np.array_equal(np.asarray(cell.final_x),
+                                   np.asarray(single.final_x)))
+        if not same:
+            return False
+    return True
+
+
+def run(smoke=False, full=False, verbose=True):
+    t0 = time.time()
+    scales = SMOKE_SCALES if smoke else (FULL_SCALES if full else SCALES)
+    topo = C.topo_of("mesh", NODES)
+    lat = MapLattice(SLOTS, vl.max_int(), "retwis").build()
+
+    per_scale = []
+    identical = True
+    for objects in scales:
+        wl = W.retwis(objects, NODES, ROUNDS, OPS, ZIPF, seed=0)
+        counts = wl.update_counts()                       # [T, N, B]
+        spec = StoreSpec(objects=objects,
+                         op_fn=W.versioned_slot_op(counts, SLOTS),
+                         weights=W.retwis_weights(objects))
+
+        # -- one-program store (compile + run: compile IS harness cost) -----
+        ts = time.time()
+        res = simulate_store(ALGO, lat, topo, spec, active_rounds=ROUNDS)
+        ts = time.time() - ts
+
+        # -- per-object loop, sampled + extrapolated ------------------------
+        sample = min(LOOP_SAMPLE, objects)
+        idx = np.linspace(0, objects - 1, sample).astype(int)
+        tl = time.time()
+        # Keep the SimResults: simulate() already materializes them, so
+        # retention is timing-neutral and spares a second identical run
+        # for the bit-identity check below.
+        singles = [
+            simulate(ALGO, lat, topo,
+                     W.versioned_slot_cell_op(counts, int(b), SLOTS),
+                     active_rounds=ROUNDS)
+            for b in idx
+        ]
+        tl = time.time() - tl
+        loop_est = tl / sample * objects
+
+        same = _cells_identical(res, idx, singles)
+        identical &= same
+        row = {
+            "objects": objects,
+            "store_s": round(ts, 3),
+            "loop_sample_objects": int(sample),
+            "loop_sample_s": round(tl, 3),
+            "loop_s_per_object": round(tl / sample, 4),
+            "loop_s_extrapolated": round(loop_est, 1),
+            "speedup_vs_loop": round(loop_est / max(ts, 1e-9), 1),
+            "sampled_cells_identical": bool(same),
+        }
+        per_scale.append(row)
+        if verbose:
+            print(f"  B={objects:6d}  store={ts:7.2f}s  "
+                  f"loop≈{loop_est:9.1f}s "
+                  f"({tl:.2f}s/{sample} objects)  "
+                  f"speedup={row['speedup_vs_loop']:8.1f}x  "
+                  f"identical={same}")
+
+    out = {
+        "workload": {"algo": ALGO, "topology": topo.name, "nodes": NODES,
+                     "slots": SLOTS, "rounds": ROUNDS, "ops_per_node": OPS,
+                     "zipf": ZIPF, "engine": "reference"},
+        "smoke": smoke,
+        "scales": per_scale,
+        "cells_identical": bool(identical),
+    }
+    cells = sum(r["objects"] + r["loop_sample_objects"] for r in per_scale)
+    C.save_result("BENCH_store_smoke" if smoke else "BENCH_store", out,
+                  harness=C.harness_meta(t0, cells))
+    return out
+
+
+def validate(out):
+    floor_at = 1024 if out["smoke"] else 4096
+    floor = 1.5 if out["smoke"] else 3.0
+    big = [r for r in out["scales"] if r["objects"] >= floor_at]
+    return [
+        ("every sampled store cell bit-identical to its per-object run",
+         out["cells_identical"]),
+        (f"one-program store ≥ {floor}× faster than the per-object loop "
+         f"at ≥ {floor_at} objects",
+         bool(big) and all(r["speedup_vs_loop"] >= floor for r in big)),
+        ("store advantage grows with object count",
+         len(out["scales"]) < 2
+         or out["scales"][-1]["speedup_vs_loop"]
+         >= out["scales"][0]["speedup_vs_loop"]),
+    ]
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    for name, ok in validate(run(smoke=args.smoke, full=args.full)):
+        print(f"[{'PASS' if ok else 'FAIL'}] {name}")

@@ -24,6 +24,7 @@ import time
 import numpy as np
 
 from repro.sync import SweepSpec, simulate, simulate_sweep
+from repro.sync import workloads as W
 
 from benchmarks import common as C
 
@@ -33,18 +34,7 @@ SEEDS = tuple(range(16))
 def _single_cell_op(nodes, events, seed):
     """The unbatched op_fn for one seed — same permutation scheme as
     ``common.gset_sweep_workload`` cell ``seed``."""
-    import jax.numpy as jnp
-
-    perm = np.arange(events) if seed == 0 \
-        else np.random.default_rng(seed).permutation(events)
-    perm = jnp.asarray(perm, jnp.int32)
-
-    def op_fn(x, t):
-        ids = jnp.arange(nodes) * events + perm[jnp.minimum(t, events - 1)]
-        d = jnp.zeros((nodes, nodes * events), jnp.bool_)
-        return d.at[jnp.arange(nodes), ids].set(True)
-
-    return op_fn
+    return W.gset_unique_op(nodes, events, seed)
 
 
 def run(nodes=C.NODES, events=C.EVENTS, quiet=C.QUIET, seeds=SEEDS,

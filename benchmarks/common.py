@@ -1,5 +1,8 @@
-"""Shared benchmark machinery: workload builders for the paper's
-micro-benchmarks (Table I) and result formatting."""
+"""Shared benchmark machinery: lattice + op-stream pairings for the
+paper's micro-benchmarks (Table I) and result formatting. The op streams
+themselves live in ``repro.sync.workloads`` (shared with the store
+engine); this module pairs them with their lattices and owns the
+results-JSON plumbing."""
 
 from __future__ import annotations
 
@@ -12,6 +15,7 @@ import numpy as np
 
 from repro.core import GCounter, GMap, GSet
 from repro.sync import SweepSpec, scuttlebutt, simulate, simulate_sweep, topology
+from repro.sync import workloads as W
 
 RESULTS = Path(__file__).resolve().parent / "results"
 
@@ -30,47 +34,20 @@ def topo_of(name: str, nodes: int = NODES):
 
 def gset_workload(nodes=NODES, events=EVENTS):
     """Table I GSet: addition of a globally unique element per node/tick."""
-    lat = GSet(universe=nodes * events).lattice
-
-    def op_fn(x, t):
-        ids = jnp.arange(nodes) * events + jnp.minimum(t, events - 1)
-        d = jnp.zeros((nodes, nodes * events), jnp.bool_)
-        return d.at[jnp.arange(nodes), ids].set(True)
-
-    return lat, op_fn
+    return GSet(universe=nodes * events).lattice, \
+        W.gset_unique_op(nodes, events)
 
 
 def gcounter_workload(nodes=NODES):
     """Table I GCounter: one increment per node/tick."""
-    lat = GCounter(nodes).lattice
-
-    def op_fn(x, t):
-        idx = jnp.arange(nodes)
-        d = jnp.zeros((nodes, nodes), jnp.int32)
-        return d.at[idx, idx].set(x[idx, idx] + 1)
-
-    return lat, op_fn
+    return GCounter(nodes).lattice, W.gcounter_op(nodes)
 
 
 def gmap_workload(k_pct: int, nodes=NODES, keys=GMAP_KEYS):
-    """Table I GMap K%: each node updates (K/N)% of keys per tick (disjoint
-    per-node key blocks), so K% of all keys change per interval. Blocks are
-    clamped to the per-node span so rounding never makes them overlap (an
-    overlap would create cross-node version contention the paper's
-    benchmark doesn't have)."""
-    span = keys // nodes
-    per_node = min(max(int(round(keys * k_pct / 100.0 / nodes)), 1), span)
-    lat = GMap(num_keys=keys).lattice
-    blocks = np.zeros((nodes, keys), bool)
-    for i in range(nodes):
-        start = i * span
-        blocks[i, start:start + per_node] = True
-    blocks = jnp.asarray(blocks)
-
-    def op_fn(x, t):
-        return jnp.where(blocks, x + 1, 0).astype(x.dtype)
-
-    return lat, op_fn
+    """Table I GMap K%: each node updates (K/N)% of keys per tick
+    (disjoint per-node key blocks — see ``workloads.gmap_key_blocks``)."""
+    return GMap(num_keys=keys).lattice, \
+        W.gmap_block_op(nodes, keys, k_pct)
 
 
 def scuttlebutt_gset_codec(nodes=NODES, events=EVENTS):
@@ -95,12 +72,11 @@ def scuttlebutt_gcounter_codec(nodes=NODES):
 
 
 def scuttlebutt_gmap_codec(k_pct: int, nodes=NODES, keys=GMAP_KEYS):
-    span = keys // nodes
-    per_node = min(max(int(round(keys * k_pct / 100.0 / nodes)), 1), span)
-    blocks = np.zeros((nodes, keys), np.int32)
-    for i in range(nodes):
-        blocks[i, i * span:i * span + per_node] = 1
-    blocks = jnp.asarray(blocks)
+    # Same key-block geometry as the gmap workload it is benchmarked
+    # against — one definition (workloads.gmap_key_blocks), two codecs.
+    blocks_b = W.gmap_key_blocks(nodes, keys, k_pct)
+    per_node = int(blocks_b.sum(axis=1)[0])
+    blocks = jnp.asarray(blocks_b.astype(np.int32))
 
     def range_join(lo, hi):
         ver = jnp.where(hi > lo, hi, 0)
@@ -139,34 +115,8 @@ def gset_sweep_workload(nodes=NODES, events=EVENTS, seeds=(0,)):
     *which* unique element lands each round (transmission counts are
     permutation-invariant, so all cells agree — the batch axis is the
     harness-speed lever, not a result changer)."""
-    lat = GSet(universe=nodes * events).lattice
-    perms = np.stack([
-        np.arange(events) if s == 0
-        else np.random.default_rng(s).permutation(events)
-        for s in seeds])
-    perms = jnp.asarray(perms, jnp.int32)                  # [S, T]
-
-    def op_fn(x, t):
-        b = x.shape[0]
-        # Explicit contract (no silent slicing): the seed table must match
-        # the batch exactly, or hold a single seed broadcast to every cell
-        # (fig_fault's fault-scenario sweeps share one op stream). Either
-        # way the table is indexed by the GLOBAL batch, so device-local
-        # blocks (simulate_sweep(shard=True)) are not supported here.
-        assert b == len(seeds) or len(seeds) == 1, (
-            f"op stream built for {len(seeds)} seeds cannot serve a "
-            f"batch of {b} cells — pass exactly one seed (broadcast) or "
-            "one per cell")
-        tab = perms if len(seeds) == b \
-            else jnp.broadcast_to(perms, (b,) + perms.shape[1:])
-        tc = jnp.minimum(t, events - 1)
-        ids = jnp.arange(nodes)[None, :] * events \
-            + tab[:, tc][:, None]                          # [B, N]
-        d = jnp.zeros((b, nodes, nodes * events), jnp.bool_)
-        return d.at[jnp.arange(b)[:, None], jnp.arange(nodes)[None, :],
-                    ids].set(True)
-
-    return lat, op_fn
+    return GSet(universe=nodes * events).lattice, \
+        W.gset_unique_sweep_op(nodes, events, seeds)
 
 
 def gcounter_sweep_workload(nodes=NODES):
@@ -174,15 +124,7 @@ def gcounter_sweep_workload(nodes=NODES):
     workload is deterministic — all cells are identical and cell 0 matches
     ``gcounter_workload`` bit-for-bit — so run it with ``batch=1``: a
     wider batch would only re-simulate the same cell."""
-    lat = GCounter(nodes).lattice
-
-    def op_fn(x, t):
-        b = x.shape[0]
-        idx = jnp.arange(nodes)
-        d = jnp.zeros((b, nodes, nodes), jnp.int32)
-        return d.at[:, idx, idx].set(x[:, idx, idx] + 1)
-
-    return lat, op_fn
+    return GCounter(nodes).lattice, W.gcounter_sweep_op(nodes)
 
 
 def run_delta_algos_sweep(lat, op_fn, batch, topo, events=EVENTS,

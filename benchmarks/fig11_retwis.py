@@ -1,20 +1,30 @@
-"""Fig 11/12 reproduction: Retwis workload under Zipf contention.
+"""Fig 11/12 reproduction: Retwis workload under Zipf contention, on the
+keyed object-store engine (DESIGN.md §15).
 
 Retwis objects (paper §V-D): per-user followers (GSet), wall (GMap
 tweet-id → content), timeline (GMap ts → id). Ops: 15% follow (1 update),
-35% post (1 + #followers updates), 50% timeline read (0 updates). Updates
-target objects via a Zipf distribution (coefficient 0.5 → 1.5); every
-object is an independent CRDT with its own δ-buffer — the simulation vmaps
-the Algorithm-1/2 round step over the object axis, so the per-object
-inflation check semantics of classic delta-based are preserved.
+35% post (1 update), 50% timeline read (0 updates). Updates target
+objects via a Zipf distribution (coefficient 0.5 → 1.5); every object is
+an independent CRDT with its own δ-buffer. The store engine runs ALL
+objects as one jitted scan (``simulate_store``) — per-object
+Algorithm-1/2 semantics (inflation checks, origin tags, Δ-extraction)
+are preserved bit-exactly, and the schedule (``sync/workloads.py``) is
+seed-deterministic, so this harness reproduces the pre-store vmap
+harness's numbers value-for-value.
 
-Byte accounting uses the paper's sizes: 31B tweet ids, 270B content,
-20B node/user ids. Default is a scaled-down config (CPU container);
-``--full`` approaches the paper's 50-node / 30K-object setting.
+Byte accounting uses the paper's sizes (31 B tweet ids, 270 B content,
+20 B user ids) as per-object element weights — engine metrics
+(``StoreResult.store_tx_bytes``), not benchmark-side numpy math.
 
 Measured: transmission bytes/node and memory bytes/node for classic vs
-BP+RR, split into first/second experiment half (Fig 11), and the CPU
-(element-ops) overhead of classic vs BP+RR (Fig 12).
+BP+RR, split into first/second experiment half (Fig 11), the CPU
+(element-ops) overhead of classic vs BP+RR (Fig 12), plus two
+beyond-paper store extensions: a fused-engine bit-identity check and the
+anti-entropy resync modes (state_driven / digest_driven) running
+per-object.
+
+Default is a scaled-down config (CPU container); ``--full`` approaches
+the paper's 50-node / 30K-object setting.
 """
 
 from __future__ import annotations
@@ -22,86 +32,71 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lattice import MapLattice
 from repro.core import value_lattices as vl
-from repro.sync.algorithms import SyncAlgorithm
-from repro.sync import topology
+from repro.sync import StoreSpec, simulate_store
+from repro.sync import workloads as W
 
 from benchmarks import common as C
 
 ZIPFS = (0.5, 0.75, 1.0, 1.25, 1.5)
-ID_B, CONTENT_B = 31, 270
-FOLLOW_B = 20
-WALL_B = ID_B + CONTENT_B
-TL_B = ID_B + 8
 
 
-def build_schedule(rng, zipf, rounds, nodes, objects, ops_per_node):
-    """[T, N, K] object targets (Zipf) + op-kind mix per paper Table II."""
-    ranks = np.arange(1, objects + 1, dtype=np.float64)
-    probs = ranks ** -zipf
-    probs /= probs.sum()
-    targets = rng.choice(objects, size=(rounds, nodes, ops_per_node), p=probs)
-    kinds = rng.choice(3, size=(rounds, nodes, ops_per_node),
-                       p=[0.15, 0.35, 0.50])  # follow / post / read
-    return targets, kinds
-
-
-def run_one(algo, topo, zipf, rounds, objects, slots, ops_per_node, seed=0):
-    rng = np.random.default_rng(seed)
-    nodes = topo.num_nodes
-    targets, kinds = build_schedule(rng, zipf, rounds, nodes, objects,
-                                    ops_per_node)
-    # object classes cycle follower/wall/timeline; per-element byte weights
-    obj_bytes = np.array([FOLLOW_B, WALL_B, TL_B])[
-        np.arange(objects) % 3].astype(np.float64)
-
-    # per-(round, node, object): number of updates (reads contribute 0)
-    upd = np.zeros((rounds, nodes, objects), np.int32)
-    writes = kinds < 2
-    for t in range(rounds):
-        for n in range(nodes):
-            objs = targets[t, n][writes[t, n]]
-            np.add.at(upd[t, n], objs, 1)
-    upd = jnp.asarray(upd)
-
+def build_store(zipf, rounds, nodes, objects, slots, ops_per_node, seed=0):
+    """One Retwis store: lattice (versioned-slot objects), seeded op
+    stream, per-object byte weights."""
+    wl = W.retwis(objects, nodes, rounds, ops_per_node, zipf, seed=seed)
     lat = MapLattice(slots, vl.max_int(), "retwis").build()
-    alg = SyncAlgorithm(name=algo, lattice=lat, topo=topo)
+    spec = StoreSpec(objects=objects,
+                     op_fn=W.versioned_slot_op(wl.update_counts(), slots),
+                     weights=W.retwis_weights(objects))
+    return lat, spec
 
-    # vmap the round step over the object axis
-    def round_all(carry, t):
-        def op_fn_obj(x_obj, cnt_obj):
-            # each node bumps `cnt` slots of the object starting at a
-            # rotating index — concurrent updates from different nodes hit
-            # overlapping slots, which is exactly the contention the paper's
-            # Zipf workload creates
-            ver = jnp.max(x_obj, axis=-1, keepdims=True)
-            idx = (ver % slots).astype(jnp.int32)
-            sel = (jnp.arange(slots)[None, :] - idx) % slots < cnt_obj[:, None]
-            return jnp.where(sel, x_obj + 1, 0)
 
-        cnt = upd[t]                       # [N, R]
-        def step_obj(c, cnt_o):
-            d = op_fn_obj(c.x, cnt_o)
-            return alg.round_step(c, d)
+def run_one(algo, topo, zipf, rounds, objects, slots, ops_per_node, seed=0,
+            engine="reference", **sim_kw):
+    lat, spec = build_store(zipf, rounds, topo.num_nodes, objects, slots,
+                            ops_per_node, seed)
+    res = simulate_store(algo, lat, topo, spec, active_rounds=rounds,
+                         engine=engine, **sim_kw)
+    return res
 
-        carry, metrics = jax.vmap(step_obj, in_axes=(0, 1))(carry, cnt)
-        return carry, metrics
 
-    carry0 = jax.vmap(lambda _: alg.init())(jnp.arange(objects))
-    def scan_fn(carry, t):
-        return round_all(carry, t)
-    carry, metrics = jax.lax.scan(scan_fn, carry0, jnp.arange(rounds))
-    tx = np.asarray(metrics.tx, np.float64)          # [T, R]
-    mem = np.asarray(metrics.mem, np.float64)
-    cpu = np.asarray(metrics.cpu, np.float64)
-    tx_bytes = (tx * obj_bytes[None, :]).sum(axis=1)
-    mem_bytes = (mem * obj_bytes[None, :]).sum(axis=1)
-    return tx_bytes, mem_bytes, cpu.sum(axis=1)
+def engines_identical(ref_results, topo, zipf, rounds, objects, slots,
+                      ops_per_node):
+    """Fused-engine check: the store must produce bit-identical states and
+    metrics on both engines (the pre-store harness only ever ran the
+    reference round step). ``ref_results`` are the main loop's
+    reference-engine runs at this zipf — only the fused runs are new."""
+    ok = True
+    for algo, a in ref_results.items():
+        b = run_one(algo, topo, zipf, rounds, objects, slots, ops_per_node,
+                    engine="fused")
+        ok &= all(np.array_equal(getattr(a, f), getattr(b, f))
+                  for f in ("tx", "mem", "cpu", "max_mem_node"))
+        ok &= bool(np.array_equal(np.asarray(a.final_x),
+                                  np.asarray(b.final_x)))
+    return bool(ok)
+
+
+def resync_block(topo, zipf, rounds, objects, slots, ops_per_node,
+                 quiet=10):
+    """Beyond-paper: the anti-entropy modes running per-object through the
+    store (digest aux rides the object axis). With a quiescence drain the
+    whole store must converge."""
+    out = {}
+    for algo in ("state_driven", "digest_driven"):
+        res = run_one(algo, topo, zipf, rounds, objects, slots, ops_per_node,
+                      quiet_rounds=quiet, track_convergence=True)
+        conv = res.convergence_round()
+        out[algo] = {
+            "tx_mb_node": float(res.total_tx_bytes / topo.num_nodes / 1e6),
+            "all_objects_converged": bool((conv >= 0).all()),
+            "last_convergence_round": int(conv.max()),
+        }
+    return out
 
 
 def run(nodes=16, objects=96, slots=32, rounds=40, ops_per_node=6,
@@ -109,20 +104,26 @@ def run(nodes=16, objects=96, slots=32, rounds=40, ops_per_node=6,
     t0 = time.time()
     if full:
         nodes, objects, slots, rounds, ops_per_node = 50, 1500, 64, 100, 10
-    topo = topology.partial_mesh(nodes, 4)
+    topo = C.topo_of("mesh", nodes)
     out = {}
+    ref_at_1 = {}            # zipf=1.0 reference runs, reused by the
+                             # fused-engine bit-identity check
     for zipf in ZIPFS:
         row = {}
         for algo in ("classic", "bprr"):
-            tx, mem, cpu = run_one(algo, topo, zipf, rounds, objects, slots,
-                                   ops_per_node)
+            res = run_one(algo, topo, zipf, rounds, objects, slots,
+                          ops_per_node)
+            if zipf == 1.0:
+                ref_at_1[algo] = res
+            tx = res.store_tx_bytes                     # [T] engine bytes
+            mem = res.store_mem_bytes
             half = len(tx) // 2
             row[algo] = {
                 "tx_mb_node_h1": float(tx[:half].sum() / nodes / 1e6),
                 "tx_mb_node_h2": float(tx[half:].sum() / nodes / 1e6),
                 "mem_mb_node_h1": float(mem[:half].mean() / nodes / 1e6),
                 "mem_mb_node_h2": float(mem[half:].mean() / nodes / 1e6),
-                "cpu": float(cpu.sum()),
+                "cpu": float(res.store_cpu.sum()),
             }
         row["tx_ratio_h2"] = row["classic"]["tx_mb_node_h2"] / max(
             row["bprr"]["tx_mb_node_h2"], 1e-9)
@@ -134,8 +135,18 @@ def run(nodes=16, objects=96, slots=32, rounds=40, ops_per_node=6,
                   f"bprr h2 {row['bprr']['tx_mb_node_h2']:9.2f} MB/node, "
                   f"tx_ratio={row['tx_ratio_h2']:6.2f}  "
                   f"cpu_overhead={row['cpu_overhead']:5.2f}x")
+    out["engines_bit_identical"] = engines_identical(
+        ref_at_1, topo, 1.0, rounds, objects, slots, ops_per_node)
+    out["resync"] = resync_block(topo, 1.0, rounds, objects, slots,
+                                 ops_per_node)
+    if verbose:
+        print(f"engines bit-identical: {out['engines_bit_identical']}")
+        for algo, r in out["resync"].items():
+            print(f"  resync {algo:14s} tx {r['tx_mb_node']:8.2f} MB/node, "
+                  f"store converged={r['all_objects_converged']}")
+    # cells: 2 algos × |ZIPFS| + 2 fused engine-check runs + 2 resync runs
     C.save_result("fig11_retwis", out,
-                  harness=C.harness_meta(t0, 2 * len(ZIPFS)))
+                  harness=C.harness_meta(t0, 2 * len(ZIPFS) + 4))
     return out
 
 
@@ -150,6 +161,10 @@ def validate(out):
         ("high contention: classic blows up", hi > 1.4 * lo and hi > 2.0),
         ("cpu overhead grows with contention",
          out["zipf_1.5"]["cpu_overhead"] > out["zipf_0.5"]["cpu_overhead"]),
+        ("store runs both engines bit-identically",
+         out["engines_bit_identical"]),
+        ("resync modes converge the whole store",
+         all(r["all_objects_converged"] for r in out["resync"].values())),
     ]
 
 

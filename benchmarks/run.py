@@ -98,6 +98,12 @@ def _sec_sweep(args):
     return bench_sweep.validate(bench_sweep.run(smoke=args.smoke))
 
 
+def _sec_store(args):
+    from benchmarks import bench_store
+    return bench_store.validate(
+        bench_store.run(smoke=args.smoke, full=args.full))
+
+
 def _sec_engine(args):
     from benchmarks import bench_engine
     return bench_engine.validate(bench_engine.run(full=args.full))
@@ -123,6 +129,8 @@ REGISTRY = {
                "(DESIGN.md §14)", _sec_digest),
     "sweep": ("Sweep engine A/B — one-program batched grid vs per-cell loop",
               _sec_sweep),
+    "store": ("Store engine A/B — one-program object store vs per-object "
+              "loop (DESIGN.md §15)", _sec_store),
     "engine": ("Engine A/B — fused Pallas vs reference jnp sync round",
                _sec_engine),
     "kernels": ("CRDT Pallas kernels (interpret-mode correctness sweep)",
@@ -139,7 +147,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale Retwis (50 nodes / 1500 objects)")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized fault/digest/sweep sections")
+                    help="CI-sized fault/digest/sweep/store sections")
     ap.add_argument("--section", default="", choices=("",) + SECTIONS,
                     help="run exactly one section")
     ap.add_argument("--skip", default="", help="comma list of sections")

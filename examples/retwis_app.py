@@ -1,69 +1,64 @@
-"""Retwis application demo (paper §V-D at example scale).
+"""Retwis application demo on the keyed object-store engine (paper §V-D
+at example scale, DESIGN.md §15).
 
     PYTHONPATH=src python examples/retwis_app.py
 
-A Twitter-clone data model on CRDTs: followers (GSet), walls and timelines
-(LWW maps keyed by slot). Two replicas diverge under concurrent updates and
-reconcile with *optimal deltas* — transmitted element counts are shown next
-to what full-state sync would have cost.
+A Twitter-clone data model on a *store* of independent CRDT objects:
+follower sets, walls, and timelines cycle through the object axis, each
+synchronized per-object by BP+RR over an 8-node mesh while a Zipf
+workload (paper Table II op mix: 15% follow / 35% post / 50% read)
+concentrates contention on the popular objects. The whole store — every
+object's δ-buffers, inflation checks, and metrics — runs as ONE jitted
+scan, and the paper's byte sizes (20 B user ids, 301 B wall entries,
+39 B timeline entries) ride the engine as per-object element weights.
 """
 
-import jax.numpy as jnp
+import numpy as np
 
-from repro.core import GSet, LWWMap
+from repro.core.lattice import MapLattice
+from repro.core import value_lattices as vl
+from repro.sync import StoreSpec, simulate_store, topology
+from repro.sync import workloads as W
 
 
 def main():
-    users, slots = 8, 16
-    followers = GSet(universe=users * users)     # (a follows b) edge set
-    wall = LWWMap(num_keys=users * slots)
+    objects, nodes, slots, rounds = 24, 8, 16, 30
+    topo = topology.partial_mesh(nodes, 4)
+    lat = MapLattice(slots, vl.max_int(), "retwis").build()
 
-    fa, fb = followers.lattice, wall.lattice
-    # replica 1 (datacenter A) and replica 2 (datacenter B)
-    f1, f2 = fa.bottom(), fa.bottom()
-    w1, w2 = fb.bottom(), fb.bottom()
+    # Zipf-contended Retwis schedule (seed-deterministic), compiled to the
+    # store's batched op stream; per-object byte weights by object class.
+    wl = W.retwis(objects, nodes, rounds, ops_per_node=4, zipf=1.2, seed=7)
+    spec = StoreSpec(objects=objects,
+                     op_fn=W.versioned_slot_op(wl.update_counts(), slots),
+                     weights=W.retwis_weights(objects))
 
-    def follow(state, a, b):
-        return followers.add(state, a * users + b)
+    res = simulate_store("bprr", lat, topo, spec, active_rounds=rounds,
+                         quiet_rounds=8, track_convergence=True)
 
-    def post(state, user, slot, ts, tweet_id):
-        return wall.put(state, user * slots + slot, ts, tweet_id)
+    classes = ("followers", "wall", "timeline")
+    print(f"retwis store: {objects} objects × {nodes} nodes, "
+          f"{rounds} rounds (+8 drain)")
+    print(f"  transmitted {res.total_tx_bytes / 1e3:8.1f} KB total "
+          f"({res.total_tx_bytes / nodes / 1e3:.1f} KB/node)")
+    conv = res.convergence_round()
+    assert (conv >= 0).all(), "every object must converge after the drain"
+    print(f"  all {objects} objects converged by round {int(conv.max())}")
 
-    # concurrent activity on both replicas
-    f1 = follow(f1, 1, 2)
-    f1 = follow(f1, 3, 2)
-    w1 = post(w1, 2, 0, ts=10, tweet_id=100)
-    f2 = follow(f2, 4, 2)
-    w2 = post(w2, 2, 1, ts=11, tweet_id=101)
-    w2 = post(w2, 2, 0, ts=12, tweet_id=102)   # newer edit of slot 0
+    # per-object views: the hottest and coldest objects of each class
+    tx_totals = res.tx_bytes.sum(axis=1)                   # [B]
+    for cls in range(3):
+        ids = np.arange(cls, objects, 3)
+        hot = ids[np.argmax(tx_totals[ids])]
+        obj = res.object_result(int(hot))
+        print(f"  hottest {classes[cls]:9s} object #{hot:2d}: "
+              f"{tx_totals[hot] / 1e3:7.1f} KB sent, "
+              f"{int(obj.tx.sum())} elements, "
+              f"converged at round {int(conv[hot])}")
 
-    # reconcile with optimal deltas (Δ both directions)
-    d_f12 = fa.delta(f1, f2)
-    d_f21 = fa.delta(f2, f1)
-    d_w12 = fb.delta(w1, w2)
-    d_w21 = fb.delta(w2, w1)
-
-    print("followers: replica1 has", int(fa.size(f1)), "edges; replica2 has",
-          int(fa.size(f2)))
-    print(f"  Δ(1→2)={int(fa.size(d_f12))} elements, "
-          f"Δ(2→1)={int(fa.size(d_f21))} elements "
-          f"(full state would be {int(fa.size(f1))} and {int(fa.size(f2))})")
-
-    f1 = fa.join(f1, d_f21)
-    f2 = fa.join(f2, d_f12)
-    w1 = fb.join(w1, d_w21)
-    w2 = fb.join(w2, d_w12)
-
-    assert bool(fa.leq(f1, f2)) and bool(fa.leq(f2, f1))
-    assert bool(fb.leq(w1, w2)) and bool(fb.leq(w2, w1))
-
-    # LWW semantics: the newer edit of wall slot 0 wins everywhere
-    ts, vals = w1
-    print("user 2 wall slot 0 -> tweet", int(vals[2 * slots + 0]),
-          f"(ts={int(ts[2 * slots + 0])}; concurrent edit resolved LWW)")
-    print("user 2 followers:",
-          sorted(int(i) // users for i in jnp.nonzero(f1)[0]
-                 if int(i) % users == 2))
+    # weighted footprint straight from the engine (Lattice.wsize)
+    mb = res.final_state_bytes.sum() / 1e3
+    print(f"  final store footprint {mb:.1f} KB across the cluster")
     print("retwis_app OK")
 
 

@@ -65,6 +65,13 @@ class Lattice:
     #   "max"   — pointwise max order (ℕ-max entries; bool-or as 0/1 max)
     #   "bitor" — bit-packed sets, one irreducible per bit
     kernel_kind: str | None = None
+    # Weighted element accounting (DESIGN.md §15): wsize(x, w) sums ``w``
+    # over x's non-bottom irreducibles instead of counting them — ``w``
+    # broadcasts against the universe axis (per-slot weights) or against
+    # leading batch axes (e.g. per-object byte weights in the keyed
+    # object store, where every element of object b weighs w[b] bytes).
+    # ``wsize(x, 1) == size(x)`` by construction.
+    wsize: Callable[[State, Array], Array] = None
 
 
 def leq_from_join(join, equal):
@@ -126,6 +133,9 @@ class MapLattice:
         def size(a):
             return jnp.sum(irreducible_mask(a), axis=-1)
 
+        def wsize(a, w):
+            return jnp.sum(irreducible_mask(a) * w, axis=-1)
+
         def leq(a, b):
             return jnp.all(v.leq(a, b), axis=-1)
 
@@ -147,6 +157,7 @@ class MapLattice:
             irreducible_mask=irreducible_mask,
             novel_mask=novel_mask,
             kernel_kind=kind,
+            wsize=wsize,
         )
 
 
@@ -178,6 +189,11 @@ def product(name: str, parts: Sequence[Lattice]) -> Lattice:
     def size(a):
         return sum(p.size(x) for p, x in zip(parts, a))
 
+    def wsize(a, w):
+        # Weight broadcasts per component — irreducibles of A × B live in
+        # exactly one component, so weighted sizes add like sizes do.
+        return sum(p.wsize(x, w) for p, x in zip(parts, a))
+
     def is_bottom(a):
         out = None
         for p, x in zip(parts, a):
@@ -195,6 +211,7 @@ def product(name: str, parts: Sequence[Lattice]) -> Lattice:
         name=name, bottom=bottom, join=join, leq=leq, delta=delta,
         size=size, is_bottom=is_bottom,
         irreducible_mask=irreducible_mask, novel_mask=novel_mask,
+        wsize=wsize,
     )
 
 
@@ -315,6 +332,10 @@ def linear_sum(name: str, low: Lattice, high: Lattice,
         tx, ax, bx = x
         return jnp.where(tx == 0, low.size(ax), high.size(bx))
 
+    def wsize(x, w):
+        tx, ax, bx = x
+        return jnp.where(tx == 0, low.wsize(ax, w), high.wsize(bx, w))
+
     def is_bottom(x):
         tx, ax, bx = x
         return jnp.logical_and(tx == 0, low.is_bottom(ax))
@@ -326,4 +347,5 @@ def linear_sum(name: str, low: Lattice, high: Lattice,
                                     high.irreducible_mask(x[2])),
         novel_mask=lambda a, b: (low.novel_mask(a[1], b[1]),
                                  high.novel_mask(a[2], b[2])),
+        wsize=wsize,
     )

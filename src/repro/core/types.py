@@ -152,6 +152,11 @@ class BitGSet:
             return jnp.sum(jax.lax.population_count(a).astype(jnp.int32),
                            axis=-1)
 
+        def wsize(a, wt):
+            # per-word weights (bits of one word share a weight)
+            return jnp.sum(jax.lax.population_count(a).astype(jnp.int32) * wt,
+                           axis=-1)
+
         def leq(a, b):
             return jnp.all(delta(a, b) == 0, axis=-1)
 
@@ -175,6 +180,7 @@ class BitGSet:
             irreducible_mask=irreducible_mask,
             novel_mask=novel_mask,
             kernel_kind="bitor",
+            wsize=wsize,
         )
 
     def add_mask(self, s, mask_words):

@@ -64,19 +64,25 @@ def lex_join_delta(a, b, *, block=DEFAULT_BLOCK, interpret=None):
 
 
 def buffer_fold(buf, *, kind: str = "max", block=FOLD_BLOCK, interpret=None,
-                batched: bool = False):
+                batched: bool = False, layout: str = "grid"):
     """Per-neighbor BP sends from an origin-indexed buffer [K, ...U] ->
     [K-1, ...U] leave-one-out joins.
 
     ``batched=True`` treats axis 1 as a sweep config axis (buf
     [K, B, ...U], DESIGN.md §13): each config is tiled separately under a
     leading batch grid dimension, so per-config results are bit-identical
-    to folding that config alone.
+    to folding that config alone. ``layout="rows"`` (store engine,
+    DESIGN.md §15) instead folds the config axis into the flattened tile
+    row space — the fold is elementwise across slots, so results are
+    bit-identical either way, but B small objects become one large launch
+    instead of B grid steps.
     """
     interpret = interpret_default() if interpret is None else interpret
     k = buf.shape[0]
     bm, bn = block
     cols = bn
+    if batched and layout == "rows":
+        batched = False                 # flat path tiles [K, B·N·U] rows
     if batched:
         bcfg = buf.shape[1]
         flat = buf.reshape(k, bcfg, -1)
@@ -101,7 +107,7 @@ def buffer_fold(buf, *, kind: str = "max", block=FOLD_BLOCK, interpret=None,
 
 
 def round_recv(d_stack, x, *, kind: str = "max", block=None, interpret=None,
-               emit_stored: bool = True, active=None):
+               emit_stored: bool = True, active=None, layout: str = "grid"):
     """Fused one-pass sync-round receive (DESIGN.md §11).
 
     ``d_stack``: [P, B, U] gathered per-slot δ-groups, ``x``: [B, U]
@@ -119,10 +125,32 @@ def round_recv(d_stack, x, *, kind: str = "max", block=None, interpret=None,
     dispatches to the kernel's leading batch grid dimension; counts come
     back [C, B, P]. Per-cell results are bit-identical to unbatched calls.
 
+    ``layout="rows"`` (store engine, DESIGN.md §15) flattens a rank-3
+    batch into the tile row axis instead — ([C·B, U] rows with a taller
+    tile), the right shape for millions of small objects: one launch with
+    large tiles instead of C tiny grid steps. Every per-row computation
+    is independent, so both layouts are bit-identical.
+
     Boolean states are viewed as uint8 {0, 1} for the kernel (max ≡ or, and
     TPU tiles have no bool layout) and cast back — bit-identical.
     """
     interpret = interpret_default() if interpret is None else interpret
+    if x.ndim == 3 and layout == "rows":
+        p, c, b, u = d_stack.shape
+        rows = c * b
+        if block is None:
+            # Tall tiles amortize grid steps over the flattened
+            # (object, node) rows; short universes stay lane-aligned.
+            bm = 128 if rows >= 128 else ROUND_BLOCK[0]
+            block = (bm, min(ROUND_BLOCK[1], -(-u // LANE) * LANE))
+        xo, s, cnt, dsz = round_recv(
+            d_stack.reshape(p, rows, u), x.reshape(rows, u), kind=kind,
+            block=block, interpret=interpret, emit_stored=emit_stored,
+            active=None if active is None else active.reshape(rows, p))
+        xo = xo.reshape(c, b, u)
+        if s is not None:
+            s = s.reshape(p, c, b, u)
+        return xo, s, cnt.reshape(c, b, p), dsz.reshape(c, b, p)
     batched = x.ndim == 3
     if batched:
         p, c, b, u = d_stack.shape
@@ -183,16 +211,23 @@ def _digest_tile(u: int, be: int):
 
 
 def digest_blocks(x, *, block_elems: int, kind: str = "max", interpret=None,
-                  batched: bool = False):
+                  batched: bool = False, layout: str = "grid"):
     """Blockwise digest of dense states x [(B,) N, U] -> uint32
     [(B,) N, nB, 3] with channels [hash, count, agg] — bit-identical to
     ``sync.digest.digest_state`` on single-array states (same mixing
     constants; all arithmetic is order-independent mod 2^32).
 
     ``batched=True`` declares the leading config axis B (DESIGN.md §13),
-    which becomes the kernel's leading batch grid dimension.
+    which becomes the kernel's leading batch grid dimension — or folds
+    into the tile row axis with ``layout="rows"`` (store engine, §15);
+    per-row digests are independent, so both layouts are bit-identical.
     """
     interpret = interpret_default() if interpret is None else interpret
+    if batched and layout == "rows":
+        b, n, u = x.shape
+        out = digest_blocks(x.reshape(b * n, u), block_elems=block_elems,
+                            kind=kind, interpret=interpret)
+        return out.reshape((b, n) + out.shape[1:])
     m, u = x.shape[-2], x.shape[-1]
     nb = -(-u // block_elems)
     block = _digest_tile(u, block_elems)
@@ -209,12 +244,21 @@ def digest_blocks(x, *, block_elems: int, kind: str = "max", interpret=None,
 
 
 def masked_extract(x, block_masks, *, block_elems: int, interpret=None,
-                   batched: bool = False):
+                   batched: bool = False, layout: str = "grid"):
     """Per-slot Δ(state, block_mask): x [(B,) N, U] restricted to each
     slot's masked blocks. ``block_masks`` bool [(B,) N, P, nB]; returns
     [(B,) N, P, U] in x's dtype with the x tile read once for all P slots.
+    ``layout="rows"`` folds a batched config axis into the tile rows
+    (store engine, DESIGN.md §15) — bit-identical to the batch grid.
     """
     interpret = interpret_default() if interpret is None else interpret
+    if batched and layout == "rows":
+        b, n, u = x.shape
+        out = masked_extract(
+            x.reshape(b * n, u),
+            block_masks.reshape((b * n,) + block_masks.shape[2:]),
+            block_elems=block_elems, interpret=interpret)
+        return out.reshape((b, n) + out.shape[1:])
     m, u = x.shape[-2], x.shape[-1]
     p = block_masks.shape[-2]
     nb = -(-u // block_elems)

@@ -56,36 +56,37 @@ def _shard_map():
     return fn
 
 
-def shard_sweep_scan(run, batch: int, mesh=None):
-    """Shard the config axis of a sweep scan across devices via
-    ``shard_map``.
+def _shard_axis_scan(run, batch: int, mesh, axis: str, what: str,
+                     xs_batched: bool):
+    """Shard the leading batch axis of a scan callable across ``mesh``.
 
-    ``run(carry0, xs)`` must be the sweep engine's scan callable
-    (DESIGN.md §13): every carry/output-carry leaf has the config axis at
-    0, scan ys (stacked metrics) are time-major with the config axis at 1,
-    and ``xs`` is either the round-index array (replicated) or a tuple
-    ``(t, *masks)`` whose mask tails are time-major config-batched.
-    Configs never communicate, so the mapped body needs no collectives —
-    each device just scans its own block of cells.
+    ``run(carry0, xs)``: every carry/output-carry leaf has the batch axis
+    at 0, scan ys (stacked metrics) are time-major with the batch axis at
+    1, and ``xs`` is either the round-index array (replicated) or a tuple
+    ``(t, *masks)``. ``xs_batched`` says whether the mask tails carry the
+    batch axis at 1 (the sweep's per-cell [T, B, N, P] stacks) or are
+    shared by every batch entry and replicate (the store's [T, 1, N, P]
+    broadcast views, DESIGN.md §15). Batch entries never communicate, so
+    the mapped body needs no collectives — each device just scans its own
+    block.
 
     Returns ``run`` unchanged on a single-device mesh (nothing to shard).
     """
-    if mesh is None:
-        mesh = sweep_mesh()
     ndev = int(np.prod(mesh.devices.shape))
     if ndev == 1:
         return run
     if batch % ndev:
         raise ValueError(
-            f"sweep batch {batch} is not divisible by the {ndev}-device "
-            f"config mesh — pad the SweepSpec or pass a smaller mesh")
+            f"{what} {batch} is not divisible by the {ndev}-device "
+            f"{axis!r} mesh — pad the batch or pass a smaller mesh")
     P = jax.sharding.PartitionSpec
-    cfg0, cfg1, rep = P(SWEEP_AXIS), P(None, SWEEP_AXIS), P()
+    cfg0, cfg1, rep = P(axis), P(None, axis), P()
 
     def wrapped(carry0, xs):
         carry_spec = jax.tree.map(lambda _: cfg0, carry0)
         if isinstance(xs, tuple):
-            xs_spec = (rep,) + tuple(cfg1 for _ in xs[1:])
+            tail = cfg1 if xs_batched else rep
+            xs_spec = (rep,) + tuple(tail for _ in xs[1:])
         else:
             xs_spec = rep
         out_carry, out_ys = jax.eval_shape(run, carry0, xs)
@@ -96,3 +97,38 @@ def shard_sweep_scan(run, batch: int, mesh=None):
             out_specs=out_specs, check_rep=False)(carry0, xs)
 
     return wrapped
+
+
+def shard_sweep_scan(run, batch: int, mesh=None):
+    """Shard the config axis of a sweep scan across devices via
+    ``shard_map`` (DESIGN.md §13). Per-cell fault masks shard with their
+    cells ([T, B, N, P] at axis 1)."""
+    if mesh is None:
+        mesh = sweep_mesh()
+    return _shard_axis_scan(run, batch, mesh, SWEEP_AXIS, "sweep batch",
+                            xs_batched=True)
+
+
+# -- store-engine object-axis sharding (DESIGN.md §15) ------------------------
+
+STORE_AXIS = "object"
+
+
+def store_mesh(num_devices: int | None = None):
+    """1-D mesh over the object axis of a keyed store: objects are
+    independent CRDTs sharing only the (replicated) topology and fault
+    masks, so each device runs its own block of objects with no
+    cross-device collectives."""
+    n = len(jax.devices()) if num_devices is None else num_devices
+    return jax.make_mesh((n,), (STORE_AXIS,), **_axis_type_kwargs(1))
+
+
+def shard_store_scan(run, objects: int, mesh=None):
+    """Shard the object axis of a store scan across devices via
+    ``shard_map`` (DESIGN.md §15). Unlike sweeps, the fault-mask xs are
+    store-wide [T, 1, N, P] views shared by every object — they replicate
+    instead of sharding."""
+    if mesh is None:
+        mesh = store_mesh()
+    return _shard_axis_scan(run, objects, mesh, STORE_AXIS, "store objects",
+                            xs_batched=False)

@@ -5,9 +5,10 @@ from repro.sync.digest import DigestSpec
 from repro.sync.engine import ENGINES
 from repro.sync.faults import FaultSchedule, RoundFaults
 from repro.sync.simulator import SimResult, cluster_uniform, converged, simulate
+from repro.sync.store import StoreResult, StoreSpec, simulate_store
 from repro.sync.sweep import SweepSpec, simulate_sweep
 from repro.sync.topology import Topology, by_name, full, partial_mesh, ring, tree
-from repro.sync import digest, engine, faults, scuttlebutt
+from repro.sync import digest, engine, faults, scuttlebutt, workloads
 
 __all__ = [
     "ALGORITHMS",
@@ -16,15 +17,19 @@ __all__ = [
     "ENGINES",
     "FaultSchedule",
     "RoundFaults",
+    "StoreResult",
+    "StoreSpec",
     "SweepSpec",
     "SyncAlgorithm",
     "digest",
     "engine",
     "faults",
+    "workloads",
     "SimResult",
     "cluster_uniform",
     "converged",
     "simulate",
+    "simulate_store",
     "simulate_sweep",
     "Topology",
     "by_name",

@@ -40,7 +40,10 @@ carry leaf ([B, N, ...U] states, [B, N, P+1, ...U] buffers) and makes
 the shared topology in one program; metrics come back per-config ([B]
 instead of scalar). Every cell is bit-identical to the corresponding
 unbatched run — all per-cell arithmetic is elementwise or reduces over the
-same axes in the same order.
+same axes in the same order. The keyed object store (DESIGN.md §15) rides
+the same axis with B = objects; ``batch_layout`` picks how the fused
+kernels tile it ("grid" per-config grid dim for a few big configs,
+"rows" flattened into tile rows for many small objects — bit-identical).
 
 Anti-entropy resync (DESIGN.md §14): the delta flavors above only ship
 δ-groups born from δ-mutations — a replica whose *state* diverged (fresh
@@ -119,6 +122,11 @@ class SyncAlgorithm:
                                  # (sweep engine, DESIGN.md §13)
     digest: Optional[DigestSpec] = None  # digest geometry for
                                          # "digest_driven" (None = default)
+    batch_layout: str = "grid"   # fused-kernel tiling of the batch axis:
+                                 # "grid" = per-config batch grid dim
+                                 # (sweeps, §13); "rows" = flatten
+                                 # (batch, node) into the tile row axis
+                                 # (object stores, §15). Bit-identical.
 
     @property
     def resolved_engine(self) -> str:
@@ -204,7 +212,8 @@ class SyncAlgorithm:
         if self.resolved_engine == "fused":
             # one buffer_fold kernel pass over [P+1, (B·)N·U] (DESIGN.md §11)
             return engine_mod.fused_loo_sends(buf, kind=lat.kernel_kind,
-                                              batched=self.batched)
+                                              batched=self.batched,
+                                              layout=self.batch_layout)
         slots = [T.slot(buf, k, axis=ax) for k in range(p + 1)]
         if self.loo == "naive":
             outs = []
@@ -398,7 +407,8 @@ class SyncAlgorithm:
             u = dgst.state_universe(lat.bottom())
             if self.resolved_engine == "fused":
                 local_dig = engine_mod.fused_digest(
-                    x, spec, kind, batched=self.batched)
+                    x, spec, kind, batched=self.batched,
+                    layout=self.batch_layout)
             else:
                 local_dig = dgst.digest_state(x, spec, kind)  # [.., N, nB, 3]
             local_exp = local_dig[..., None, :, :]            # slot bcast
@@ -406,7 +416,8 @@ class SyncAlgorithm:
                 & dvalid[..., None]                           # [.., N, P, nB]
             if self.resolved_engine == "fused":
                 d_all = engine_mod.fused_extract(
-                    x, blocks, spec, batched=self.batched)
+                    x, blocks, spec, batched=self.batched,
+                    layout=self.batch_layout)
             else:
                 em = dgst.block_mask_to_elems(blocks, u, spec)
                 d_all = dgst.extract_blocks(self._bcast_sends(x), em)

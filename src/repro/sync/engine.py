@@ -106,14 +106,17 @@ def fused_receive(algo, x, buf, buf_elems, cpu, d_all, acc_dtype,
     sax = algo.slot_axis                                 # 1, or 2 batched
 
     active = topo.mask if faults is None else topo.mask & faults.recv_ok
-    if algo.batched and active.ndim == 2:
-        # Lift to the traced config extent (shard-local under shard_map —
-        # never algo.batch, which is the global sweep width).
-        active = jnp.broadcast_to(active, x.shape[:1] + active.shape)
+    if algo.batched and active.shape != x.shape[:-1] + (p,):
+        # Lift [N, P] (no faults), [1, N, P] (store-shared schedule,
+        # DESIGN.md §15), or any broadcastable shape to the traced config
+        # extent (shard-local under shard_map — never algo.batch, which
+        # is the global sweep/store width).
+        active = jnp.broadcast_to(active, x.shape[:-1] + (p,))
     inbox = gather_inbox(d_all, topo, batched=algo.batched)  # [(B,) N, P, U]
     d_stack = jnp.moveaxis(inbox, sax, 0)                # [P, (B,) N, U]
     x, stored, cnt, dsz = kops.round_recv(
-        d_stack, x, kind=kind, emit_stored=algo.has_buffer, active=active)
+        d_stack, x, kind=kind, emit_stored=algo.has_buffer, active=active,
+        layout=algo.batch_layout)
 
     cpu = cpu + algo._msum(dsz, acc_dtype)
     if not algo.has_buffer:                              # state-based
@@ -155,36 +158,41 @@ def fused_join_inbox(algo, x, inbox):
     engines consume identical operands by construction)."""
     d_stack = jnp.moveaxis(inbox, algo.slot_axis, 0)     # [P, (B,) N, U]
     xo, _, _, _ = kops.round_recv(
-        d_stack, x, kind=algo.lattice.kernel_kind, emit_stored=False)
+        d_stack, x, kind=algo.lattice.kernel_kind, emit_stored=False,
+        layout=algo.batch_layout)
     return xo
 
 
-def fused_digest(x, spec, kind: str, batched: bool = False):
+def fused_digest(x, spec, kind: str, batched: bool = False,
+                 layout: str = "grid"):
     """Blockwise digest of the dense state in one ``kernels.digest`` pass;
     bit-identical to ``sync.digest.digest_state`` (shared mixing constants,
     order-independent mod-2^32 arithmetic)."""
     return kops.digest_blocks(x, block_elems=spec.block_elems, kind=kind,
-                              batched=batched)
+                              batched=batched, layout=layout)
 
 
-def fused_extract(x, block_masks, spec, batched: bool = False):
+def fused_extract(x, block_masks, spec, batched: bool = False,
+                  layout: str = "grid"):
     """Δ(state, block_mask) for all P neighbor slots in one kernel pass
     (the state tile is read once; a jnp composition would stream it from
     HBM P times). Returns [(B,) N, P, U]."""
     return kops.masked_extract(x, block_masks, block_elems=spec.block_elems,
-                               batched=batched)
+                               batched=batched, layout=layout)
 
 
-def fused_loo_sends(buf, kind: str, batched: bool = False):
+def fused_loo_sends(buf, kind: str, batched: bool = False,
+                    layout: str = "grid"):
     """All P leave-one-out sends from the origin-indexed buffer
     [(B,) N, P+1, U] in one ``buffer_fold`` kernel pass (node axis folded
     into the tile space; the config axis of a sweep becomes the kernel's
-    leading batch grid dimension). Returns [(B,) N, P, U]."""
+    leading batch grid dimension, or folds into the tile rows under the
+    store engine's ``rows`` layout). Returns [(B,) N, P, U]."""
     orig_dtype = buf.dtype
     if orig_dtype == jnp.bool_:
         buf = buf.astype(jnp.uint8)                      # max ≡ or on {0, 1}
     sax = 2 if batched else 1
     stack = jnp.moveaxis(buf, sax, 0)                    # [P+1, (B,) N, U]
-    sends = kops.buffer_fold(stack, kind=kind,
-                             batched=batched)            # [P, (B,) N, U]
+    sends = kops.buffer_fold(stack, kind=kind, batched=batched,
+                             layout=layout)              # [P, (B,) N, U]
     return jnp.moveaxis(sends, 0, sax).astype(orig_dtype)

@@ -1,0 +1,282 @@
+"""Keyed object-store engine: B independent CRDT objects as ONE program
+(DESIGN.md §15).
+
+The paper's flagship macro-benchmark (§V-D Retwis, Figs 11–12) is a
+*store*: many independent CRDT objects — follower GSets, wall/timeline
+maps — each synchronized per-object under Zipf contention. Every object
+is its own little simulation (own δ-buffers, own inflation checks, own
+digest state), but they all share one lattice shape, one algorithm, and
+one cluster topology — which is exactly the shape the sweep engine's
+config axis (DESIGN.md §13) batches. This module rides that machinery
+with **B = number of objects**:
+
+* states stack to [B, N, ...U], origin buffers to [B, N, P+1, ...U],
+  digest aux to [B, N, P, nB, 3]; the scan body is the same
+  ``build_round_step`` program ``simulate`` runs, so **every store cell
+  is bit-identical (states and all metrics) to a standalone per-object
+  ``simulate()``** on both engines (``tests/test_store.py``);
+* unlike a sweep, the *network* is shared: one optional
+  ``FaultSchedule`` applies to every object simultaneously (a partition
+  partitions the whole store). Its masks ride the scan as [T, 1, N, P]
+  views — a singleton object axis that broadcasts, instead of the
+  sweep's per-cell [T, B, N, P] stacks (O(T·N·P) memory, not O(T·B·N·P));
+* metrics come back per-object ([B, T]) with store-level aggregates and
+  **weighted element accounting**: per-object byte weights (Retwis's
+  31 B ids / 270 B tweets / 20 B user ids) turn element counts into byte
+  metrics inside the engine instead of benchmark-side numpy math;
+* the fused engine runs the object axis in the kernels' ``rows`` layout
+  (object × node flattened into the tile row axis) — millions of small
+  objects tile into a few large kernel launches instead of B tiny grid
+  steps — and the object axis shards across devices via
+  ``launch.mesh.shard_store_scan`` (an ("object",) mesh; objects never
+  communicate).
+
+Workload generators for the store live in ``sync/workloads.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lattice import Lattice
+from repro.sync.algorithms import SyncAlgorithm
+from repro.sync.digest import DigestSpec
+from repro.sync.faults import FaultSchedule, FaultViews
+from repro.sync.simulator import (
+    SimResult,
+    build_round_step,
+    collect_result,
+    run_scan,
+)
+from repro.sync.topology import Topology
+
+LAYOUTS = ("rows", "grid")
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreSpec:
+    """The ingredients of one store run.
+
+    ``op_fn(x, t) -> deltas`` sees the stacked states ([B, N, ...U]; the
+    object axis leads) and returns stacked deltas — per-object op streams
+    live in the object axis (see ``workloads.versioned_slot_op``).
+
+    ``weights``: optional per-object element byte weights [B] — every
+    non-⊥ irreducible of object b is priced at ``weights[b]`` bytes in
+    the ``*_bytes`` views of :class:`StoreResult`.
+
+    ``x0``: optional stacked initial states [B, N, ...U] (None = all-⊥).
+
+    ``faults``: one optional schedule for the WHOLE store — objects share
+    the network, so a lost message, partition window, or down node hits
+    every object in that round identically.
+    """
+
+    objects: int
+    op_fn: Callable[[Any, jnp.ndarray], Any]
+    weights: Optional[np.ndarray] = None
+    x0: Any = None
+    faults: Optional[FaultSchedule] = None
+
+    def __post_init__(self):
+        if self.objects < 1:
+            raise ValueError(f"objects must be >= 1, got {self.objects}")
+        if self.weights is not None:
+            w = np.asarray(self.weights, np.float64)
+            if w.shape != (self.objects,):
+                raise ValueError(
+                    f"weights must be [objects]=[{self.objects}], got "
+                    f"shape {w.shape}")
+            object.__setattr__(self, "weights", w)
+
+    def shared_views(self, topo: Topology,
+                     total_rounds: int) -> Optional[FaultViews]:
+        """Compile the store-wide schedule into scan xs with a singleton
+        object axis: [T, 1, N, P] masks that broadcast over every object
+        (vs the sweep's per-cell [T, B, N, P] stacks)."""
+        if self.faults is None:
+            return None
+        if not self.faults.same_topology(topo):
+            raise ValueError(
+                f"StoreSpec.faults was built for topology "
+                f"{self.faults.topo.name!r}, not {topo.name!r}")
+        v = self.faults.views(total_rounds)
+        return FaultViews(*(jnp.expand_dims(a, 1) for a in v))
+
+
+class StoreResult(NamedTuple):
+    """Per-object metrics plus store-level (optionally byte-weighted)
+    aggregates. ``sim`` is the batched engine result: [B, T] metrics,
+    [B, N, ...U] final states."""
+
+    sim: SimResult
+    weights: Optional[np.ndarray] = None          # [B] bytes per element
+    final_state_bytes: Optional[np.ndarray] = None  # [B, N] weighted elems
+
+    # -- per-object views ----------------------------------------------------
+
+    @property
+    def objects(self) -> int:
+        return self.sim.batch
+
+    @property
+    def tx(self) -> np.ndarray:          # [B, T]
+        return self.sim.tx
+
+    @property
+    def mem(self) -> np.ndarray:
+        return self.sim.mem
+
+    @property
+    def cpu(self) -> np.ndarray:
+        return self.sim.cpu
+
+    @property
+    def max_mem_node(self) -> np.ndarray:
+        return self.sim.max_mem_node
+
+    @property
+    def uniform(self):
+        return self.sim.uniform
+
+    @property
+    def final_x(self):
+        return self.sim.final_x
+
+    def object_result(self, b: int) -> SimResult:
+        """Object b as a single-run SimResult — the view the store
+        bit-identity invariant is stated over."""
+        return self.sim.cell(b)
+
+    def convergence_round(self):
+        """Per-object first round after which all nodes stayed identical
+        ([B] int, −1 = never; needs ``track_convergence``)."""
+        return self.sim.convergence_round()
+
+    # -- store-level aggregates ----------------------------------------------
+
+    @property
+    def store_tx(self) -> np.ndarray:    # [T] elements, all objects
+        return self.tx.sum(axis=0)
+
+    @property
+    def store_mem(self) -> np.ndarray:
+        return self.mem.sum(axis=0)
+
+    @property
+    def store_cpu(self) -> np.ndarray:
+        return self.cpu.sum(axis=0)
+
+    @property
+    def total_cpu(self) -> int:
+        return int(self.cpu.sum())
+
+    # -- weighted (byte) accounting ------------------------------------------
+
+    def _w(self) -> np.ndarray:
+        if self.weights is None:
+            raise ValueError(
+                "no per-object weights — pass StoreSpec(weights=...)")
+        return self.weights
+
+    @property
+    def tx_bytes(self) -> np.ndarray:    # [B, T]
+        return np.asarray(self.tx, np.float64) * self._w()[:, None]
+
+    @property
+    def mem_bytes(self) -> np.ndarray:
+        return np.asarray(self.mem, np.float64) * self._w()[:, None]
+
+    @property
+    def store_tx_bytes(self) -> np.ndarray:   # [T]
+        return self.tx_bytes.sum(axis=0)
+
+    @property
+    def store_mem_bytes(self) -> np.ndarray:
+        return self.mem_bytes.sum(axis=0)
+
+    @property
+    def total_tx_bytes(self) -> float:
+        return float(self.store_tx_bytes.sum())
+
+
+def simulate_store(
+    algo: str,
+    lattice: Lattice,
+    topo: Topology,
+    spec: StoreSpec,
+    active_rounds: int,
+    quiet_rounds: int = 0,
+    loo: str = "prefix",
+    jit: bool = True,
+    engine: str = "reference",
+    wide_metrics: bool = True,
+    track_convergence: Optional[bool] = None,
+    shard: bool = False,
+    digest: Optional[DigestSpec] = None,
+    layout: str = "rows",
+) -> StoreResult:
+    """Run ``spec.objects`` independent CRDT objects of one
+    ``algo`` × ``lattice`` × ``topo`` as one jitted scan.
+
+    Semantics are ``simulate`` per object: ``res.object_result(b)`` is
+    bit-identical to the single run with object b's op stream / initial
+    state, under the store-shared fault schedule, on either ``engine``.
+
+    ``layout`` picks the fused-engine kernel tiling for the object axis
+    (DESIGN.md §15): ``"rows"`` flattens (object, node) into the tile row
+    axis — the right shape for many small objects — while ``"grid"`` is
+    the sweep engine's per-config batch grid dimension. Both are
+    bit-identical; the reference engine ignores it.
+
+    ``track_convergence`` defaults on exactly when a fault schedule is
+    given. ``shard=True`` splits the object axis across local devices
+    (requires ``objects`` divisible by the device count).
+    """
+    if layout not in LAYOUTS:
+        raise ValueError(f"unknown layout {layout!r}; one of {LAYOUTS}")
+    alg = SyncAlgorithm(name=algo, lattice=lattice, topo=topo, loo=loo,
+                        engine=engine, batch=spec.objects, digest=digest,
+                        batch_layout=layout)
+    carry0 = alg.init(spec.x0)
+    total = active_rounds + quiet_rounds
+    views = spec.shared_views(topo, total)
+    if track_convergence is None:
+        track_convergence = views is not None
+
+    step = build_round_step(alg, spec.op_fn, active_rounds, views,
+                            track_convergence)
+    if views is None:
+        xs = jnp.arange(total)
+    else:
+        xs = (jnp.arange(total), views.recv_ok, views.send_ok, views.up)
+
+    wrap = None
+    if shard:
+        from repro.launch import mesh as launch_mesh
+
+        def wrap(run):
+            return launch_mesh.shard_store_scan(run, spec.objects)
+
+    carry, (metrics, uniform) = run_scan(step, carry0, xs, jit, wide_metrics,
+                                         wrap=wrap)
+    sim = collect_result(carry, metrics, uniform, track_convergence,
+                         batched=True)
+
+    fsb = None
+    if spec.weights is not None:
+        # Weighted final-state footprint [B, N]: every irreducible of
+        # object b priced at weights[b] bytes (core's weighted size).
+        w = jnp.asarray(spec.weights)
+        # [B] -> [B, 1, ...1]: one singleton for the node axis plus the
+        # deepest universe rank, so w broadcasts leftmost against every
+        # [B, N, ...U] irreducible mask.
+        urank = max(jnp.ndim(l) for l in jax.tree.leaves(lattice.bottom()))
+        wexp = w.reshape((spec.objects,) + (1,) * (urank + 1))
+        fsb = np.asarray(lattice.wsize(sim.final_x, wexp), np.float64)
+    return StoreResult(sim=sim, weights=spec.weights, final_state_bytes=fsb)

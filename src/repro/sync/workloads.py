@@ -1,0 +1,317 @@
+"""Reproducible workload generators for stores and micro-benchmarks
+(DESIGN.md §15).
+
+Two families of op-stream builders used to live scattered across
+``benchmarks/``:
+
+* **Keyed store workloads** — the paper's Retwis macro-benchmark (§V-D,
+  Table II) targets *objects* of a store via a Zipf distribution and
+  draws op kinds (follow / post / read) from a fixed mix.
+  ``WorkloadSpec`` captures that shape declaratively: an object-targeting
+  distribution (``zipf`` / ``uniform`` / ``hotset``), an op-kind mix with
+  per-kind update counts, and a seed. It compiles to dense per-round
+  update-count tables ``[T, N, B]`` and to the batched op streams the
+  store engine (``sync/store.py``) and ``simulate_sweep`` consume.
+  Streams are seed-deterministic: the same spec and seed always produce
+  the same schedule (one ``np.random.default_rng(seed)`` drawn in a fixed
+  call order), which is what lets ``benchmarks/fig11_retwis.py`` on the
+  store API reproduce its pre-store numbers exactly.
+
+* **Table I micro-benchmark streams** — the unique-element GSet adds,
+  per-replica GCounter increments, and disjoint GMap key blocks that the
+  Fig 7–10 harnesses share (``benchmarks/common.py`` re-exports these).
+  The seed-permutation scheme of the sweep variants (seed 0 = identity =
+  the paper-canonical stream) lives here too.
+
+Everything host-side is plain numpy (built once, shipped to the device as
+scan constants); op_fns close over jnp tables only.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+# Retwis byte sizes (paper §V-D): tweet ids, tweet content, node/user ids.
+ID_B, CONTENT_B, USER_B = 31, 270, 20
+FOLLOW_B = USER_B                 # follower entry: one user id
+WALL_B = ID_B + CONTENT_B         # wall entry: tweet id + content
+TL_B = ID_B + 8                   # timeline entry: tweet id + timestamp
+
+DISTS = ("zipf", "uniform", "hotset")
+
+
+@dataclasses.dataclass(frozen=True)
+class OpKind:
+    """One op kind of a mix: drawn with probability ``prob``; each drawn op
+    updates ``updates`` elements of its target object (0 = pure read)."""
+
+    name: str
+    prob: float
+    updates: int = 1
+
+
+# Paper Table II: 15% follow (1 update), 35% post (1 update on the target
+# wall/timeline object), 50% timeline read (no updates).
+RETWIS_MIX = (OpKind("follow", 0.15, 1),
+              OpKind("post", 0.35, 1),
+              OpKind("read", 0.50, 0))
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """A keyed-store workload: B objects targeted per (round, node, op)
+    by ``dist``, op kinds drawn from ``mix``.
+
+    ``zipf`` is the contention coefficient (rank-probability ∝ rank^-zipf);
+    ``hotset`` puts ``hot_mass`` of the probability uniformly on the first
+    ``ceil(hot_frac · B)`` objects. All draws come from ONE
+    ``np.random.default_rng(seed)`` in a fixed order, so streams are fully
+    reproducible from (spec, seed).
+    """
+
+    objects: int
+    nodes: int
+    rounds: int
+    ops_per_node: int = 1
+    dist: str = "zipf"
+    zipf: float = 1.0
+    hot_frac: float = 0.1
+    hot_mass: float = 0.9
+    mix: Tuple[OpKind, ...] = RETWIS_MIX
+    seed: int = 0
+
+    def __post_init__(self):
+        if min(self.objects, self.nodes, self.rounds, self.ops_per_node) < 1:
+            raise ValueError("objects/nodes/rounds/ops_per_node must be >= 1")
+        if self.dist not in DISTS:
+            raise ValueError(f"unknown dist {self.dist!r}; one of {DISTS}")
+        if self.dist == "hotset" and not (0 < self.hot_frac <= 1
+                                          and 0 <= self.hot_mass <= 1):
+            raise ValueError("hotset needs 0 < hot_frac <= 1, "
+                             "0 <= hot_mass <= 1")
+        if not self.mix or any(k.prob < 0 for k in self.mix):
+            raise ValueError("mix must be non-empty with prob >= 0")
+        if sum(k.prob for k in self.mix) <= 0:
+            raise ValueError("mix probabilities must not all be zero")
+
+    # -- distributions -------------------------------------------------------
+
+    def object_probs(self) -> np.ndarray:
+        """Per-object targeting probabilities [B], float64, sums to 1."""
+        b = self.objects
+        if self.dist == "zipf":
+            ranks = np.arange(1, b + 1, dtype=np.float64)
+            probs = ranks ** -self.zipf
+        elif self.dist == "uniform":
+            probs = np.ones(b, np.float64)
+        else:                                            # hotset
+            hot = max(int(np.ceil(self.hot_frac * b)), 1)
+            probs = np.full(b, (1.0 - self.hot_mass) / max(b - hot, 1),
+                            np.float64)
+            probs[:hot] = self.hot_mass / hot
+            if hot == b:                                 # all hot
+                probs[:] = 1.0 / b
+        return probs / probs.sum()
+
+    def kind_probs(self) -> np.ndarray:
+        p = np.asarray([k.prob for k in self.mix], np.float64)
+        s = p.sum()
+        # Renormalizing an already-normalized vector would perturb the
+        # sampling cdf by ULPs and (with vanishing probability) change a
+        # seeded draw — reproducibility of historical streams beats
+        # cosmetic exactness, so only fix genuinely unnormalized mixes.
+        return p if abs(s - 1.0) <= 1e-9 else p / s
+
+    # -- streams -------------------------------------------------------------
+
+    def streams(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Draw the raw schedule: ``(targets, kinds)``, both [T, N, K].
+
+        Call order is part of the contract (targets first, then kinds, one
+        rng) — changing it would silently change every seeded benchmark.
+        """
+        rng = np.random.default_rng(self.seed)
+        shape = (self.rounds, self.nodes, self.ops_per_node)
+        targets = rng.choice(self.objects, size=shape, p=self.object_probs())
+        kinds = rng.choice(len(self.mix), size=shape, p=self.kind_probs())
+        return targets, kinds
+
+    def update_counts(self) -> np.ndarray:
+        """Dense update-count table [T, N, B] int32: how many updates node
+        n applies to object b in round t (reads contribute nothing)."""
+        targets, kinds = self.streams()
+        upd = np.zeros((self.rounds, self.nodes, self.objects), np.int32)
+        per_kind = np.asarray([k.updates for k in self.mix], np.int32)
+        tt, nn, _ = np.indices(targets.shape)
+        np.add.at(upd, (tt, nn, targets), per_kind[kinds])
+        return upd
+
+
+def retwis(objects: int, nodes: int, rounds: int, ops_per_node: int,
+           zipf: float, seed: int = 0) -> WorkloadSpec:
+    """The paper's Retwis macro-benchmark shape (§V-D, Table II)."""
+    return WorkloadSpec(objects=objects, nodes=nodes, rounds=rounds,
+                        ops_per_node=ops_per_node, dist="zipf", zipf=zipf,
+                        mix=RETWIS_MIX, seed=seed)
+
+
+def retwis_weights(objects: int) -> np.ndarray:
+    """Per-object element byte weights [B]: object classes cycle
+    follower-set / wall / timeline (paper sizes 20B / 301B / 39B)."""
+    return np.asarray([FOLLOW_B, WALL_B, TL_B], np.float64)[
+        np.arange(objects) % 3]
+
+
+def versioned_slot_op(counts: np.ndarray, slots: int) -> Callable:
+    """Store op stream over versioned-slot objects (the Retwis model: each
+    object is a ``MapLattice(slots, max_int)``).
+
+    ``counts`` [T, N, B]: per-(round, node, object) update counts. Each
+    node bumps ``cnt`` slots of the object starting at a rotating index
+    derived from the object's current version — concurrent updates from
+    different nodes hit overlapping slots, which is exactly the contention
+    the paper's Zipf workload creates. Returns an op_fn over stacked
+    states [B, N, slots] for ``simulate_store`` / ``simulate_sweep``.
+
+    The count table is indexed by the GLOBAL object axis, so device-local
+    blocks (``simulate_store(shard=True)``) are not supported here — a
+    sharded store needs an op_fn whose per-object data shards with ``x``
+    (same contract as :func:`gset_unique_sweep_op`).
+    """
+    upd = jnp.asarray(np.transpose(np.asarray(counts), (0, 2, 1)))  # [T,B,N]
+
+    def op_fn(x, t):
+        assert x.shape[0] == upd.shape[1], (
+            f"count table built for {upd.shape[1]} objects cannot serve "
+            f"{x.shape[0]} object rows — under shard=True the op sees "
+            "device-local blocks; use a shard-aware op_fn")
+        cnt = upd[t]                                   # [B, N]
+        ver = jnp.max(x, axis=-1, keepdims=True)       # [B, N, 1]
+        idx = (ver % slots).astype(jnp.int32)
+        sel = (jnp.arange(slots)[None, None, :] - idx) % slots \
+            < cnt[..., None]
+        return jnp.where(sel, x + 1, 0)
+
+    return op_fn
+
+
+def versioned_slot_cell_op(counts: np.ndarray, obj: int,
+                           slots: int) -> Callable:
+    """Single-object equivalent of :func:`versioned_slot_op` cell ``obj``
+    (an op_fn over [N, slots] states for per-object ``simulate()`` runs —
+    the store bit-identity baseline and the per-object-loop benchmark)."""
+    upd = jnp.asarray(np.asarray(counts)[:, :, obj])       # [T, N]
+
+    def op_fn(x, t):
+        cnt = upd[t]                                       # [N]
+        ver = jnp.max(x, axis=-1, keepdims=True)
+        idx = (ver % slots).astype(jnp.int32)
+        sel = (jnp.arange(slots)[None, :] - idx) % slots < cnt[:, None]
+        return jnp.where(sel, x + 1, 0)
+
+    return op_fn
+
+
+# ---------------------------------------------------------------------------
+# Table I micro-benchmark streams (Fig 7–10 harnesses, benchmarks/common.py)
+# ---------------------------------------------------------------------------
+
+def seed_perm(events: int, seed: int) -> np.ndarray:
+    """The sweep-engine seed convention: seed 0 is the identity permutation
+    (the paper-canonical stream); other seeds permute which unique element
+    lands each round."""
+    if seed == 0:
+        return np.arange(events)
+    return np.random.default_rng(seed).permutation(events)
+
+
+def gset_unique_op(nodes: int, events: int, seed: int = 0) -> Callable:
+    """Table I GSet: addition of a globally unique element per node/tick,
+    in ``seed``'s permuted order. Single-run op_fn over [N, N·events]."""
+    perm = jnp.asarray(seed_perm(events, seed), jnp.int32)
+
+    def op_fn(x, t):
+        ids = jnp.arange(nodes) * events + perm[jnp.minimum(t, events - 1)]
+        d = jnp.zeros((nodes, nodes * events), jnp.bool_)
+        return d.at[jnp.arange(nodes), ids].set(True)
+
+    return op_fn
+
+
+def gset_unique_sweep_op(nodes: int, events: int,
+                         seeds: Sequence[int]) -> Callable:
+    """Batched variant: cell b runs ``seeds[b]``'s permutation. The seed
+    table is indexed by the GLOBAL batch (exact match, or a single seed
+    broadcast to every cell) — device-local blocks (``shard=True``) need a
+    natively sharded op_fn instead."""
+    perms = jnp.asarray(np.stack([seed_perm(events, s) for s in seeds]),
+                        jnp.int32)                      # [S, T]
+
+    def op_fn(x, t):
+        b = x.shape[0]
+        assert b == len(seeds) or len(seeds) == 1, (
+            f"op stream built for {len(seeds)} seeds cannot serve a "
+            f"batch of {b} cells — pass exactly one seed (broadcast) or "
+            "one per cell")
+        tab = perms if len(seeds) == b \
+            else jnp.broadcast_to(perms, (b,) + perms.shape[1:])
+        tc = jnp.minimum(t, events - 1)
+        ids = jnp.arange(nodes)[None, :] * events \
+            + tab[:, tc][:, None]                      # [B, N]
+        d = jnp.zeros((b, nodes, nodes * events), jnp.bool_)
+        return d.at[jnp.arange(b)[:, None], jnp.arange(nodes)[None, :],
+                    ids].set(True)
+
+    return op_fn
+
+
+def gcounter_op(nodes: int) -> Callable:
+    """Table I GCounter: one increment per node/tick."""
+
+    def op_fn(x, t):
+        idx = jnp.arange(nodes)
+        d = jnp.zeros((nodes, nodes), jnp.int32)
+        return d.at[idx, idx].set(x[idx, idx] + 1)
+
+    return op_fn
+
+
+def gcounter_sweep_op(nodes: int) -> Callable:
+    """Batched GCounter increments (deterministic — every cell identical)."""
+
+    def op_fn(x, t):
+        b = x.shape[0]
+        idx = jnp.arange(nodes)
+        d = jnp.zeros((b, nodes, nodes), jnp.int32)
+        return d.at[:, idx, idx].set(x[:, idx, idx] + 1)
+
+    return op_fn
+
+
+def gmap_key_blocks(nodes: int, keys: int, k_pct: int) -> np.ndarray:
+    """Table I GMap K%: disjoint per-node key blocks such that K% of all
+    keys change per interval; block widths are clamped to the per-node
+    span so rounding never makes them overlap (an overlap would create
+    cross-node version contention the paper's benchmark doesn't have).
+    Returns bool [N, keys]."""
+    span = keys // nodes
+    per_node = min(max(int(round(keys * k_pct / 100.0 / nodes)), 1), span)
+    blocks = np.zeros((nodes, keys), bool)
+    for i in range(nodes):
+        start = i * span
+        blocks[i, start:start + per_node] = True
+    return blocks
+
+
+def gmap_block_op(nodes: int, keys: int, k_pct: int) -> Callable:
+    """Table I GMap K%: each node bumps the versions of its key block."""
+    blocks = jnp.asarray(gmap_key_blocks(nodes, keys, k_pct))
+
+    def op_fn(x, t):
+        return jnp.where(blocks, x + 1, 0).astype(x.dtype)
+
+    return op_fn

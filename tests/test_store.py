@@ -1,0 +1,379 @@
+"""Store-engine invariant (DESIGN.md §15): every cell of a
+``simulate_store`` run is bit-identical — final states AND all metrics —
+to a standalone per-object ``simulate()``, for every algorithm, on both
+engines, with and without a store-shared fault schedule.
+
+Plus: weighted element accounting (per-object byte weights as engine
+metrics, ``Lattice.wsize``), the fused kernels' ``rows`` vs ``grid``
+batch layouts, object-axis sharding, StoreSpec validation, and
+property-based tests for ``sync/workloads.py`` (probabilities normalize,
+streams are seed-deterministic, op-mix marginals match the spec,
+vectorized update counts match the reference loop).
+"""
+
+import subprocess
+import sys
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from conftest import subprocess_env
+from test_sweep import (
+    SEEDS,
+    assert_cell_identical,
+    bitgset_sweep_ops,
+    gset_cell_op,
+    gset_sweep_op,
+)
+
+from repro.core import BitGSet, GCounter, GSet
+from repro.core.lattice import MapLattice
+from repro.core import value_lattices as vl
+from repro.sync import (
+    ALGORITHMS,
+    FaultSchedule,
+    StoreSpec,
+    simulate,
+    simulate_store,
+    topology,
+)
+from repro.sync import workloads as W
+
+N, T, Q, B = 7, 5, 8, 3
+
+
+def store_schedule(topo):
+    """One composite store-wide schedule: loss ∘ partition ∘ churn, with a
+    fault-free drain tail so convergence can be asserted."""
+    n = topo.num_nodes
+    return FaultSchedule.bernoulli(topo, T, 0.2, seed=2).compose(
+        FaultSchedule.partition(
+            topo, T, start=1, stop=T - 1,
+            groups=(np.arange(n) >= n // 2).astype(np.int32))).compose(
+        FaultSchedule.churn(topo, T, [(n // 2, 1, T - 1)]))
+
+
+# -- the bit-identity invariant ----------------------------------------------
+
+@pytest.mark.parametrize("engine", ["reference", "fused"])
+@pytest.mark.parametrize("algo", ALGORITHMS)
+def test_store_cells_bit_identical_fault_free(algo, engine):
+    topo = topology.partial_mesh(N, 4)
+    lat = GSet(universe=N * T).lattice
+    spec = StoreSpec(objects=B, op_fn=gset_sweep_op(SEEDS))
+    res = simulate_store(algo, lat, topo, spec, active_rounds=T,
+                         quiet_rounds=Q, engine=engine)
+    assert res.objects == B
+    for b, seed in enumerate(SEEDS):
+        single = simulate(algo, lat, topo, gset_cell_op(seed),
+                          active_rounds=T, quiet_rounds=Q, engine=engine)
+        assert_cell_identical(res.object_result(b), single,
+                              f"store/{algo}/{engine}/obj{b}")
+
+
+@pytest.mark.parametrize("engine", ["reference", "fused"])
+@pytest.mark.parametrize("algo", ALGORITHMS)
+def test_store_cells_bit_identical_shared_faults(algo, engine):
+    """Unlike a sweep, ONE schedule hits every object — per-object runs
+    with that same schedule must match each store cell bit-for-bit, and
+    the drain tail must converge every object."""
+    topo = topology.partial_mesh(N, 4)
+    lat = GSet(universe=N * T).lattice
+    sched = store_schedule(topo)
+    spec = StoreSpec(objects=B, op_fn=gset_sweep_op(SEEDS), faults=sched)
+    res = simulate_store(algo, lat, topo, spec, active_rounds=T,
+                         quiet_rounds=Q, engine=engine)
+    convs = res.convergence_round()
+    assert convs.shape == (B,)
+    for b, seed in enumerate(SEEDS):
+        single = simulate(algo, lat, topo, gset_cell_op(seed),
+                          active_rounds=T, quiet_rounds=Q, engine=engine,
+                          faults=sched, track_convergence=True)
+        assert_cell_identical(res.object_result(b), single,
+                              f"store/{algo}/{engine}/faulted/obj{b}")
+        assert int(convs[b]) == single.convergence_round()
+        assert int(convs[b]) >= 0
+
+
+@pytest.mark.parametrize("layout", ["rows", "grid"])
+def test_store_layouts_bit_identical_bitor(layout):
+    """The packed bitor kernel kind through both object-axis layouts."""
+    lat, cell_op, sweep_op = bitgset_sweep_ops()
+    topo = topology.tree(N)
+    res = simulate_store("bprr", lat, topo,
+                         StoreSpec(objects=2, op_fn=sweep_op),
+                         active_rounds=T, quiet_rounds=Q, engine="fused",
+                         layout=layout)
+    single = simulate("bprr", lat, topo, cell_op, active_rounds=T,
+                      quiet_rounds=Q, engine="fused")
+    for b in range(2):
+        assert_cell_identical(res.object_result(b), single,
+                              f"bitgset/{layout}/{b}")
+
+
+def test_store_digest_rows_layout():
+    """digest_driven through the fused rows layout: the digest + extract
+    kernels fold the object axis into tile rows (aux carries the object
+    axis)."""
+    topo = topology.ring(N)
+    lat = GSet(universe=N * T).lattice
+    spec = StoreSpec(objects=B, op_fn=gset_sweep_op(SEEDS))
+    rows = simulate_store("digest_driven", lat, topo, spec, active_rounds=T,
+                          quiet_rounds=Q, engine="fused", layout="rows")
+    grid = simulate_store("digest_driven", lat, topo, spec, active_rounds=T,
+                          quiet_rounds=Q, engine="fused", layout="grid")
+    ref = simulate_store("digest_driven", lat, topo, spec, active_rounds=T,
+                         quiet_rounds=Q, engine="reference")
+    for b in range(B):
+        assert_cell_identical(rows.object_result(b), grid.object_result(b),
+                              f"digest-rows-vs-grid/{b}")
+        assert_cell_identical(rows.object_result(b), ref.object_result(b),
+                              f"digest-rows-vs-ref/{b}")
+
+
+# -- weighted element accounting ---------------------------------------------
+
+def test_weighted_accounting_matches_manual():
+    topo = topology.partial_mesh(N, 4)
+    lat = GSet(universe=N * T).lattice
+    w = np.asarray([20.0, 301.0, 39.0])
+    spec = StoreSpec(objects=B, op_fn=gset_sweep_op(SEEDS), weights=w)
+    res = simulate_store("bprr", lat, topo, spec, active_rounds=T,
+                         quiet_rounds=Q)
+    tx = np.asarray(res.tx, np.float64)
+    np.testing.assert_array_equal(res.tx_bytes, tx * w[:, None])
+    np.testing.assert_array_equal(res.store_tx_bytes,
+                                  (tx * w[:, None]).sum(axis=0))
+    assert res.total_tx_bytes == float((tx * w[:, None]).sum())
+    # weighted final-state footprint: every object converged to the full
+    # N*T universe, so bytes/node = universe × weight
+    np.testing.assert_array_equal(
+        res.final_state_bytes,
+        np.broadcast_to(w[:, None] * (N * T), (B, N)))
+
+
+def test_wsize_reduces_to_size():
+    """wsize(x, 1) == size(x) across lattice constructions."""
+    for lat, x in [
+        (GSet(universe=12).lattice,
+         jnp.arange(24).reshape(2, 12) % 3 == 0),
+        (GCounter(6).lattice, jnp.arange(12).reshape(2, 6)),
+        (BitGSet(universe=40).lattice,
+         jnp.arange(4, dtype=jnp.uint32).reshape(2, 2)),
+    ]:
+        np.testing.assert_array_equal(np.asarray(lat.wsize(x, 1)),
+                                      np.asarray(lat.size(x)))
+
+
+def test_wsize_per_slot_weights():
+    lat = GSet(universe=4).lattice
+    x = jnp.asarray([[True, False, True, True]])
+    w = jnp.asarray([1.0, 10.0, 100.0, 1000.0])
+    np.testing.assert_array_equal(np.asarray(lat.wsize(x, w)), [1101.0])
+
+
+# -- spec validation ----------------------------------------------------------
+
+def test_store_spec_validation():
+    topo = topology.partial_mesh(N, 4)
+    other = topology.tree(N)
+    lat = GSet(universe=N * T).lattice
+    with pytest.raises(ValueError):
+        StoreSpec(objects=0, op_fn=lambda x, t: x)
+    with pytest.raises(ValueError):
+        StoreSpec(objects=3, op_fn=lambda x, t: x, weights=np.ones(2))
+    spec = StoreSpec(objects=B, op_fn=gset_sweep_op(SEEDS),
+                     faults=FaultSchedule.none(other, T))
+    with pytest.raises(ValueError):        # schedule bound to another topo
+        simulate_store("bprr", lat, topo, spec, active_rounds=T)
+    with pytest.raises(ValueError):        # unknown layout
+        simulate_store("bprr", lat, topo,
+                       StoreSpec(objects=B, op_fn=gset_sweep_op(SEEDS)),
+                       active_rounds=T, layout="diagonal")
+
+
+# -- sharding -----------------------------------------------------------------
+
+def test_store_shard_single_device_noop():
+    topo = topology.partial_mesh(N, 4)
+    lat = GSet(universe=N * T).lattice
+    spec = StoreSpec(objects=B, op_fn=gset_sweep_op(SEEDS))
+    a = simulate_store("bprr", lat, topo, spec, active_rounds=T,
+                       quiet_rounds=Q, shard=False)
+    b = simulate_store("bprr", lat, topo, spec, active_rounds=T,
+                       quiet_rounds=Q, shard=True)
+    for f in ("tx", "mem", "cpu", "max_mem_node"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+    np.testing.assert_array_equal(np.asarray(a.final_x),
+                                  np.asarray(b.final_x))
+
+
+SHARD_SCRIPT = r"""
+import jax, jax.numpy as jnp, numpy as np
+assert len(jax.devices()) == 4, jax.devices()
+from repro.core import GSet
+from repro.sync import FaultSchedule, StoreSpec, simulate_store, topology
+
+N, T, Q, B = 7, 5, 8, 8
+topo = topology.partial_mesh(N, 4)
+lat = GSet(universe=N * T).lattice
+
+def op_b(x, t):
+    b = x.shape[0]
+    ids = jnp.arange(N) * T + jnp.minimum(t, T - 1)
+    d = jnp.zeros((b, N, N * T), jnp.bool_)
+    return d.at[:, jnp.arange(N), ids].set(True)
+
+sched = FaultSchedule.bernoulli(topo, T, 0.3, seed=5)
+spec = StoreSpec(objects=B, op_fn=op_b, faults=sched,
+                 weights=np.arange(1.0, B + 1))
+a = simulate_store("bprr", lat, topo, spec, active_rounds=T,
+                   quiet_rounds=Q, shard=False)
+b = simulate_store("bprr", lat, topo, spec, active_rounds=T,
+                   quiet_rounds=Q, shard=True)
+for f in ("tx", "mem", "cpu", "max_mem_node", "uniform"):
+    np.testing.assert_array_equal(getattr(a, f), getattr(b, f), err_msg=f)
+np.testing.assert_array_equal(np.asarray(a.final_x), np.asarray(b.final_x))
+np.testing.assert_array_equal(a.final_state_bytes, b.final_state_bytes)
+print("STORE_SHARD_OK")
+"""
+
+
+def test_store_shard_map_multi_device_subprocess():
+    """Object-axis shard_map equivalence on 4 forced host devices: the
+    store's fault masks replicate (shared network) while carries shard.
+    Subprocess because XLA device count is locked at jax import."""
+    proc = subprocess.run(
+        [sys.executable, "-c", SHARD_SCRIPT],
+        env=subprocess_env(4), capture_output=True, text=True, timeout=420,
+        cwd=str(Path(__file__).resolve().parents[1]))
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "STORE_SHARD_OK" in proc.stdout
+
+
+# -- workloads.py properties --------------------------------------------------
+
+def _specs(draw):
+    objects = draw(st.integers(1, 40))
+    nodes = draw(st.integers(1, 6))
+    rounds = draw(st.integers(1, 8))
+    ops = draw(st.integers(1, 5))
+    dist = draw(st.sampled_from(W.DISTS))
+    return W.WorkloadSpec(
+        objects=objects, nodes=nodes, rounds=rounds, ops_per_node=ops,
+        dist=dist,
+        zipf=draw(st.floats(0.0, 3.0, allow_nan=False)),
+        hot_frac=draw(st.floats(0.05, 1.0, allow_nan=False)),
+        hot_mass=draw(st.floats(0.0, 1.0, allow_nan=False)),
+        seed=draw(st.integers(0, 2 ** 16)))
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_object_probs_normalize(data):
+    spec = _specs(data.draw)
+    p = spec.object_probs()
+    assert p.shape == (spec.objects,)
+    assert (p >= 0).all()
+    assert abs(p.sum() - 1.0) < 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_streams_seed_deterministic(data):
+    spec = _specs(data.draw)
+    t1, k1 = spec.streams()
+    t2, k2 = spec.streams()
+    np.testing.assert_array_equal(t1, t2)
+    np.testing.assert_array_equal(k1, k2)
+    np.testing.assert_array_equal(spec.update_counts(), spec.update_counts())
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_update_counts_match_reference_loop(data):
+    """The vectorized np.add.at table equals the naive python loop (the
+    pre-store fig11 implementation)."""
+    spec = _specs(data.draw)
+    targets, kinds = spec.streams()
+    per_kind = np.asarray([k.updates for k in spec.mix])
+    ref = np.zeros((spec.rounds, spec.nodes, spec.objects), np.int32)
+    for t in range(spec.rounds):
+        for n in range(spec.nodes):
+            for o, k in zip(targets[t, n], kinds[t, n]):
+                ref[t, n, o] += per_kind[k]
+    np.testing.assert_array_equal(spec.update_counts(), ref)
+
+
+def test_op_mix_marginals_match_spec():
+    """Empirical op-kind frequencies converge to the mix probabilities
+    (4σ binomial bound on a 48k-op stream)."""
+    spec = W.retwis(objects=50, nodes=40, rounds=40, ops_per_node=30,
+                    zipf=1.0, seed=3)
+    _, kinds = spec.streams()
+    n = kinds.size
+    for i, k in enumerate(spec.mix):
+        freq = (kinds == i).mean()
+        tol = 4 * np.sqrt(k.prob * (1 - k.prob) / n)
+        assert abs(freq - k.prob) < tol, (k.name, freq, k.prob)
+
+
+def test_zipf_contention_orders_objects():
+    """Higher zipf ⇒ more probability mass on low-rank objects."""
+    lo = W.retwis(100, 4, 4, 4, zipf=0.5).object_probs()
+    hi = W.retwis(100, 4, 4, 4, zipf=1.5).object_probs()
+    assert hi[0] > lo[0]
+    assert hi[:10].sum() > lo[:10].sum()
+    assert (np.diff(hi) <= 0).all()           # monotone in rank
+
+
+def test_hotset_distribution():
+    spec = W.WorkloadSpec(objects=100, nodes=2, rounds=2, dist="hotset",
+                          hot_frac=0.1, hot_mass=0.9)
+    p = spec.object_probs()
+    assert abs(p[:10].sum() - 0.9) < 1e-9
+    assert abs(p.sum() - 1.0) < 1e-9
+
+
+def test_workload_spec_validation():
+    with pytest.raises(ValueError):
+        W.WorkloadSpec(objects=0, nodes=1, rounds=1)
+    with pytest.raises(ValueError):
+        W.WorkloadSpec(objects=1, nodes=1, rounds=1, dist="pareto")
+    with pytest.raises(ValueError):
+        W.WorkloadSpec(objects=1, nodes=1, rounds=1,
+                       mix=(W.OpKind("bad", -0.5),))
+
+
+def test_versioned_slot_cell_op_matches_batched():
+    """The per-object loop baseline op is cell b of the batched store op."""
+    slots = 8
+    spec = W.retwis(objects=5, nodes=4, rounds=6, ops_per_node=3, zipf=1.0)
+    counts = spec.update_counts()
+    batched = W.versioned_slot_op(counts, slots)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, 4, size=(5, 4, slots)), jnp.int32)
+    for t in range(spec.rounds):
+        d = batched(x, jnp.asarray(t))
+        for b in range(5):
+            db = W.versioned_slot_cell_op(counts, b, slots)(
+                x[b], jnp.asarray(t))
+            np.testing.assert_array_equal(np.asarray(d[b]), np.asarray(db))
+
+
+def test_table1_builders_match_legacy_streams():
+    """common.py's Table I workloads delegate here — the streams must be
+    the canonical ones (seed 0 = identity permutation)."""
+    op = W.gset_unique_op(4, 3)
+    d0 = np.asarray(op(None, jnp.asarray(1)))
+    assert d0.sum() == 4 and d0[2, 2 * 3 + 1]
+    sweep = W.gset_unique_sweep_op(4, 3, (0,))
+    ds = np.asarray(sweep(jnp.zeros((2, 4, 12), bool), jnp.asarray(1)))
+    np.testing.assert_array_equal(ds[0], d0)
+    np.testing.assert_array_equal(ds[1], d0)
+    blocks = W.gmap_key_blocks(3, 30, 10)
+    assert blocks.sum(axis=1).tolist() == [1, 1, 1]
+    assert not (blocks.sum(axis=0) > 1).any()          # disjoint
