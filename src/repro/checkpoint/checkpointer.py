@@ -75,16 +75,70 @@ class Checkpointer:
         return manifest["digest"]
 
     def restore(self, step: int, like: Any) -> Any:
+        """Restore the step's bundle into the structure of ``like``.
+
+        The bundle is VERIFIED before anything is returned — a truncated
+        or bit-flipped ``arrays.npz``, a manifest from a different tree,
+        or a ``like`` whose leaves moved/reshaped since the save would
+        otherwise silently restore garbage into a type-correct pytree:
+
+        * the content digest is recomputed over the loaded arrays and
+          compared to the manifest's;
+        * the manifest's leaf paths are matched against ``like``'s,
+          leaf by leaf (a reordered/renamed tree fails loudly);
+        * every loaded array's shape is checked against both the
+          manifest and the corresponding ``like`` leaf.
+        """
         path = self.dir / f"step_{step:08d}"
         manifest = json.loads((path / "manifest.json").read_text())
-        data = np.load(path / "arrays.npz")
-        leaves_like, treedef = jax.tree_util.tree_flatten(like)
-        arrays = [
-            jnp.asarray(_from_savable(data[f"a{i}"], manifest["dtypes"][i]))
-            for i in range(len(leaves_like))
-        ]
-        assert len(arrays) == len(manifest["paths"]), "tree structure changed"
+        try:
+            data = np.load(path / "arrays.npz")
+            loaded = [data[f"a{i}"] for i in range(len(manifest["paths"]))]
+        except Exception as e:
+            raise ValueError(
+                f"checkpoint bundle {path / 'arrays.npz'} is unreadable or "
+                f"truncated: {e}") from e
+        digest = hashlib.sha256()
+        for a in loaded:
+            digest.update(a.tobytes())
+        if digest.hexdigest()[:16] != manifest["digest"]:
+            raise ValueError(
+                f"checkpoint {path} failed digest verification "
+                f"(manifest {manifest['digest']}, recomputed "
+                f"{digest.hexdigest()[:16]}) — the bundle is corrupted")
+        leaves_like, treedef = _flatten_with_paths(like)
+        if len(leaves_like) != len(manifest["paths"]):
+            raise ValueError(
+                f"checkpoint {path} holds {len(manifest['paths'])} leaves "
+                f"but the restore template has {len(leaves_like)} — the "
+                f"tree structure changed since the save")
+        arrays = []
+        for i, (lp, leaf) in enumerate(leaves_like):
+            mp = manifest["paths"][i]
+            if lp != mp:
+                raise ValueError(
+                    f"checkpoint {path} leaf {i} is {mp!r} but the restore "
+                    f"template has {lp!r} at that position — tree paths "
+                    f"were reordered or renamed since the save")
+            a = _from_savable(loaded[i], manifest["dtypes"][i])
+            want = tuple(manifest["shapes"][i])
+            if a.shape != want:
+                raise ValueError(
+                    f"checkpoint {path} leaf {mp!r} has shape {a.shape} but "
+                    f"the manifest recorded {want} — the bundle and manifest "
+                    f"disagree")
+            if tuple(np.shape(leaf)) != want:
+                raise ValueError(
+                    f"checkpoint {path} leaf {mp!r} was saved with shape "
+                    f"{want} but the restore template expects "
+                    f"{tuple(np.shape(leaf))}")
+            arrays.append(jnp.asarray(a))
         return jax.tree_util.tree_unflatten(treedef, arrays)
+
+    def manifest(self, step: int) -> dict:
+        """The step's manifest (metadata only — no array loads)."""
+        path = self.dir / f"step_{step:08d}" / "manifest.json"
+        return json.loads(path.read_text())
 
     def available_steps(self):
         return sorted(

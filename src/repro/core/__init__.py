@@ -4,8 +4,10 @@ Paper: "Efficient Synchronization of State-based CRDTs" (Enes et al., 2018).
 """
 
 from repro.core.lattice import (
+    BatchWeights,
     Lattice,
     MapLattice,
+    align_weights,
     decompose_dense,
     join_all,
     leq_from_join,
@@ -23,8 +25,10 @@ from repro.core.types import (
 from repro.core import value_lattices
 
 __all__ = [
+    "BatchWeights",
     "Lattice",
     "MapLattice",
+    "align_weights",
     "decompose_dense",
     "join_all",
     "leq_from_join",

@@ -67,11 +67,53 @@ class Lattice:
     kernel_kind: str | None = None
     # Weighted element accounting (DESIGN.md §15): wsize(x, w) sums ``w``
     # over x's non-bottom irreducibles instead of counting them — ``w``
-    # broadcasts against the universe axis (per-slot weights) or against
-    # leading batch axes (e.g. per-object byte weights in the keyed
-    # object store, where every element of object b weighs w[b] bytes).
-    # ``wsize(x, 1) == size(x)`` by construction.
+    # broadcasts against the universe axis (per-slot weights, plain
+    # right-aligned numpy broadcasting) or, wrapped in
+    # :class:`BatchWeights`, against leading batch axes (e.g. per-object
+    # byte weights in the keyed object store, where every element of
+    # object b weighs w[b] bytes). Alignment happens per LEAF via
+    # :func:`align_weights`: each leaf grows exactly the trailing
+    # singleton axes its own rank needs, so product lattices whose
+    # components carry different universe ranks (mixed-rank leaves)
+    # broadcast correctly — a single caller-side reshape to one global
+    # rank cannot serve them all. ``wsize(x, 1) == size(x)``.
     wsize: Callable[[State, Array], Array] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchWeights:
+    """Weights for :attr:`Lattice.wsize` aligned to the LEADING (batch)
+    axes of every state leaf.
+
+    Plain-array weights broadcast right-aligned (against the universe
+    axis — per-slot pricing). Per-batch pricing instead needs ``w`` to
+    align left: each leaf right-pads ``w`` with singleton axes up to its
+    own irreducible-mask rank (:func:`align_weights`). Doing this per
+    leaf — not once at the caller with a single max-rank reshape — is
+    what makes weighted accounting correct for mixed-rank lattices,
+    where one product component's mask is [B, N, U] and another's is
+    [B, N] (rank-0 universe): one global reshape either crashes or
+    silently broadcasts ``w`` onto the wrong axis of the smaller leaf.
+    """
+
+    w: Any
+
+
+def align_weights(w, mask):
+    """Resolve a wsize weight operand against one leaf's irreducible
+    mask: :class:`BatchWeights` are left-aligned (right-padded with
+    singletons to the mask's rank), plain arrays pass through to
+    ordinary right-aligned broadcasting."""
+    if not isinstance(w, BatchWeights):
+        return w
+    wa = jnp.asarray(w.w)
+    pad = jnp.ndim(mask) - wa.ndim
+    if pad < 0:
+        raise ValueError(
+            f"BatchWeights rank {wa.ndim} exceeds the leaf mask rank "
+            f"{jnp.ndim(mask)} — batch weights must index leading axes "
+            f"of every leaf")
+    return wa.reshape(wa.shape + (1,) * pad)
 
 
 def leq_from_join(join, equal):
@@ -134,7 +176,8 @@ class MapLattice:
             return jnp.sum(irreducible_mask(a), axis=-1)
 
         def wsize(a, w):
-            return jnp.sum(irreducible_mask(a) * w, axis=-1)
+            m = irreducible_mask(a)
+            return jnp.sum(m * align_weights(w, m), axis=-1)
 
         def leq(a, b):
             return jnp.all(v.leq(a, b), axis=-1)

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import value_lattices as vl
-from repro.core.lattice import Lattice, MapLattice, product
+from repro.core.lattice import Lattice, MapLattice, align_weights, product
 
 
 # ---------------------------------------------------------------------------
@@ -154,8 +154,8 @@ class BitGSet:
 
         def wsize(a, wt):
             # per-word weights (bits of one word share a weight)
-            return jnp.sum(jax.lax.population_count(a).astype(jnp.int32) * wt,
-                           axis=-1)
+            pc = jax.lax.population_count(a).astype(jnp.int32)
+            return jnp.sum(pc * align_weights(wt, pc), axis=-1)
 
         def leq(a, b):
             return jnp.all(delta(a, b) == 0, axis=-1)

@@ -8,7 +8,6 @@ setting the device count.
 from __future__ import annotations
 
 import jax
-import numpy as np
 
 
 def _axis_type_kwargs(n: int) -> dict:
@@ -56,6 +55,19 @@ def _shard_map():
     return fn
 
 
+def axis_shards(mesh, axis: str) -> int:
+    """Number of shards the named mesh axis splits a batch into (1 when
+    the axis is absent — e.g. a 1-D sweep mesh asked about "object")."""
+    return int(dict(mesh.shape).get(axis, 1))
+
+
+def padded_size(batch: int, shards: int) -> int:
+    """Smallest multiple of ``shards`` that holds ``batch`` entries —
+    the object-axis padding rule (DESIGN.md §16): arbitrary batch sizes
+    shard by padding up to the device multiple instead of erroring."""
+    return batch + (-batch) % shards
+
+
 def _shard_axis_scan(run, batch: int, mesh, axis: str, what: str,
                      xs_batched: bool):
     """Shard the leading batch axis of a scan callable across ``mesh``.
@@ -70,15 +82,22 @@ def _shard_axis_scan(run, batch: int, mesh, axis: str, what: str,
     the mapped body needs no collectives — each device just scans its own
     block.
 
-    Returns ``run`` unchanged on a single-device mesh (nothing to shard).
+    ``mesh`` may carry more axes than ``axis`` (the 2-D
+    ("object", "config") store mesh, DESIGN.md §16): the batch shards
+    over ``axis`` only and replicates over the rest.
+
+    Returns ``run`` unchanged when ``axis`` spans a single device
+    (nothing to shard).
     """
-    ndev = int(np.prod(mesh.devices.shape))
+    ndev = axis_shards(mesh, axis)
     if ndev == 1:
         return run
     if batch % ndev:
         raise ValueError(
-            f"{what} {batch} is not divisible by the {ndev}-device "
-            f"{axis!r} mesh — pad the batch or pass a smaller mesh")
+            f"{what} {batch} is not divisible by the {ndev}-shard "
+            f"{axis!r} mesh axis — pad the batch to "
+            f"{padded_size(batch, ndev)} (simulate_store pads "
+            f"automatically) or pass a smaller mesh")
     P = jax.sharding.PartitionSpec
     cfg0, cfg1, rep = P(axis), P(None, axis), P()
 
@@ -109,25 +128,42 @@ def shard_sweep_scan(run, batch: int, mesh=None):
                             xs_batched=True)
 
 
-# -- store-engine object-axis sharding (DESIGN.md §15) ------------------------
+# -- store-engine object-axis sharding (DESIGN.md §15/§16) --------------------
 
 STORE_AXIS = "object"
 
 
-def store_mesh(num_devices: int | None = None):
-    """1-D mesh over the object axis of a keyed store: objects are
-    independent CRDTs sharing only the (replicated) topology and fault
-    masks, so each device runs its own block of objects with no
-    cross-device collectives."""
-    n = len(jax.devices()) if num_devices is None else num_devices
-    return jax.make_mesh((n,), (STORE_AXIS,), **_axis_type_kwargs(1))
+def store_mesh(num_devices: int | None = None, config_devices: int = 1):
+    """2-D ("object", "config") mesh for the keyed store (DESIGN.md §16).
+
+    Objects are independent CRDTs sharing only the (replicated) topology
+    and fault masks, so each device runs its own block of objects with no
+    cross-device collectives. ``config_devices`` reserves a second mesh
+    axis for config-batched store runs (store sweeps): store carries
+    shard over "object" and replicate over "config", so a store scan and
+    a config-axis consumer can share one device grid. The default
+    ``config_devices=1`` degenerates to pure object sharding over every
+    device.
+    """
+    total = len(jax.devices()) if num_devices is None else num_devices
+    if total % config_devices:
+        raise ValueError(
+            f"{total} devices do not factor into config_devices="
+            f"{config_devices} columns")
+    shape = (total // config_devices, config_devices)
+    return jax.make_mesh(shape, (STORE_AXIS, SWEEP_AXIS),
+                         **_axis_type_kwargs(2))
 
 
 def shard_store_scan(run, objects: int, mesh=None):
     """Shard the object axis of a store scan across devices via
     ``shard_map`` (DESIGN.md §15). Unlike sweeps, the fault-mask xs are
     store-wide [T, 1, N, P] views shared by every object — they replicate
-    instead of sharding."""
+    instead of sharding. With a 2-D ("object", "config") mesh the carries
+    shard over "object" and replicate over "config". ``objects`` must be
+    a multiple of the object-axis shard count — ``simulate_store`` pads
+    arbitrary object counts up to it (``padded_size``) and masks the pad
+    back out of the results."""
     if mesh is None:
         mesh = store_mesh()
     return _shard_axis_scan(run, objects, mesh, STORE_AXIS, "store objects",

@@ -5,7 +5,12 @@ from repro.sync.digest import DigestSpec
 from repro.sync.engine import ENGINES
 from repro.sync.faults import FaultSchedule, RoundFaults
 from repro.sync.simulator import SimResult, cluster_uniform, converged, simulate
-from repro.sync.store import StoreResult, StoreSpec, simulate_store
+from repro.sync.store import (
+    StoreResult,
+    StoreSpec,
+    resume_store,
+    simulate_store,
+)
 from repro.sync.sweep import SweepSpec, simulate_sweep
 from repro.sync.topology import Topology, by_name, full, partial_mesh, ring, tree
 from repro.sync import digest, engine, faults, scuttlebutt, workloads
@@ -28,6 +33,7 @@ __all__ = [
     "SimResult",
     "cluster_uniform",
     "converged",
+    "resume_store",
     "simulate",
     "simulate_store",
     "simulate_sweep",

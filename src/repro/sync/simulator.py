@@ -92,10 +92,18 @@ class SimResult(NamedTuple):
             raise ValueError(
                 "per-round convergence was not tracked; pass "
                 "simulate(track_convergence=True)")
-        uni = np.asarray(self.uniform, bool)
-        stay = np.flip(np.logical_and.accumulate(np.flip(uni, -1), -1), -1)
-        out = np.where(uni[..., -1], stay.argmax(-1), -1)
-        return int(out) if out.ndim == 0 else out
+        return first_stable_round(self.uniform)
+
+
+def first_stable_round(uniform):
+    """First round t such that every round ≥ t has ``uniform`` true
+    (−1 if never), computed over the trailing (time) axis — shared by
+    ``SimResult.convergence_round`` and the store's store-level
+    convergence view."""
+    uni = np.asarray(uniform, bool)
+    stay = np.flip(np.logical_and.accumulate(np.flip(uni, -1), -1), -1)
+    out = np.where(uni[..., -1], stay.argmax(-1), -1)
+    return int(out) if out.ndim == 0 else out
 
 
 def cluster_uniform(lattice: Lattice, x, batched: bool = False):
@@ -182,6 +190,75 @@ def run_scan(step, carry0, xs, jit: bool, wide_metrics: bool,
         with jax.experimental.enable_x64():
             return run(carry0, xs)
     return run(carry0, xs)
+
+
+def run_scan_chunked(step, carry0, xs, jit: bool, wide_metrics: bool,
+                     chunk: int, wrap: Optional[Callable] = None,
+                     on_chunk: Optional[Callable] = None, start: int = 0,
+                     ys_prefix=None):
+    """Memory-bounded scan driver (DESIGN.md §16): run the scan in time
+    chunks of ``chunk`` rounds with the carry DONATED between chunks and
+    per-chunk ys (stacked metrics) offloaded to host.
+
+    A single ``lax.scan`` over T rounds materializes its stacked ys on
+    device — O(batch × T) for a batched store — and XLA cannot reuse the
+    input carry's buffers across the program boundary. Chunking bounds
+    the device-resident ys to O(batch × chunk), and
+    ``jax.jit(..., donate_argnums=0)`` hands each chunk's input carry
+    buffers back to XLA for the output carry, so peak device memory is
+    O(carry + chunk), independent of T. The per-round program is the
+    same ``step`` a monolithic scan would run and the carry threads
+    through unchanged, so the result is bit-identical to ``run_scan``
+    (states and all metrics) — asserted by ``tests/test_store.py``.
+
+    ``on_chunk(rounds_done, carry, ys_host)`` fires after every chunk
+    with the device carry (safe to fetch: the NEXT chunk call is what
+    donates it) and the host-stacked ys so far — the store's
+    checkpoint hook (DESIGN.md §16). ``start``/``ys_prefix`` resume a
+    partially-completed scan: rounds ``[0, start)`` are skipped and
+    ``ys_prefix`` (their host ys) is prepended to the output.
+
+    Returns ``(carry, ys)`` with ys as host numpy arrays stacked over
+    the full time axis.
+    """
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    total = int(jax.tree.leaves(xs)[0].shape[0])
+
+    def run(c0, xs_):
+        return jax.lax.scan(step, c0, xs_)
+
+    if wrap is not None:
+        run = wrap(run)
+    if jit:
+        run = jax.jit(run, donate_argnums=0)
+
+    chunks = [] if ys_prefix is None else [ys_prefix]
+    carry = carry0
+
+    def drive():
+        nonlocal carry
+        for t0 in range(start, total, chunk):
+            xs_c = jax.tree.map(lambda a: a[t0:t0 + chunk], xs)
+            carry, ys = run(carry, xs_c)
+            chunks.append(jax.device_get(ys))       # offload to host
+            if on_chunk is not None:
+                on_chunk(min(t0 + chunk, total), carry,
+                         _cat_chunks(chunks) if len(chunks) > 1 else
+                         chunks[0])
+
+    if wide_metrics:
+        with jax.experimental.enable_x64():
+            drive()
+    else:
+        drive()
+    if not chunks:
+        raise ValueError(f"nothing to run: start={start} >= total={total}")
+    return carry, _cat_chunks(chunks) if len(chunks) > 1 else chunks[0]
+
+
+def _cat_chunks(chunks):
+    return jax.tree.map(lambda *cs: np.concatenate(cs, axis=0), *chunks)
 
 
 def collect_result(carry, metrics, uniform, track_convergence: bool,

@@ -1,5 +1,5 @@
 """Keyed object-store engine: B independent CRDT objects as ONE program
-(DESIGN.md §15).
+(DESIGN.md §15, §16).
 
 The paper's flagship macro-benchmark (§V-D Retwis, Figs 11–12) is a
 *store*: many independent CRDT objects — follower GSets, wall/timeline
@@ -28,8 +28,27 @@ with **B = number of objects**:
   (object × node flattened into the tile row axis) — millions of small
   objects tile into a few large kernel launches instead of B tiny grid
   steps — and the object axis shards across devices via
-  ``launch.mesh.shard_store_scan`` (an ("object",) mesh; objects never
-  communicate).
+  ``launch.mesh.shard_store_scan`` (the ("object", "config") store
+  mesh; objects never communicate).
+
+Memory-bounded scale-out (DESIGN.md §16) stacks three independent knobs
+on top:
+
+* ``chunk_rounds=k`` runs the scan in time chunks with the carry
+  DONATED between chunks and per-chunk metrics offloaded to host, so
+  peak device memory is O(store shard + chunk) instead of O(store × T);
+* ``object_metrics=False`` reduces the per-object [B] round metrics to
+  per-shard partial sums INSIDE the scan body (exact — the accumulators
+  are integers), shrinking the metric ys from O(B·T) to O(T);
+* ``checkpoint=...`` wires ``checkpoint/checkpointer.py`` into the
+  chunk boundaries — carry + metrics-so-far are saved every chunk, and
+  ``resume_store`` restores a bundle and continues **bit-identically**
+  (same final states, same metrics as the uninterrupted run).
+
+Arbitrary object counts shard by padding: the object axis is padded to
+the device multiple with ⊥-state objects that receive no ops, and the
+pad is masked out of every result (sliced off per-object views, masked
+out of in-scan reductions).
 
 Workload generators for the store live in ``sync/workloads.py``.
 """
@@ -37,21 +56,25 @@ Workload generators for the store live in ``sync/workloads.py``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from pathlib import Path
+from typing import Any, Callable, NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.lattice import Lattice
-from repro.sync.algorithms import SyncAlgorithm
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core.lattice import BatchWeights, Lattice
+from repro.sync.algorithms import RoundMetrics, SyncAlgorithm
 from repro.sync.digest import DigestSpec
 from repro.sync.faults import FaultSchedule, FaultViews
 from repro.sync.simulator import (
     SimResult,
     build_round_step,
     collect_result,
+    first_stable_round,
     run_scan,
+    run_scan_chunked,
 )
 from repro.sync.topology import Topology
 
@@ -64,13 +87,21 @@ class StoreSpec:
 
     ``op_fn(x, t) -> deltas`` sees the stacked states ([B, N, ...U]; the
     object axis leads) and returns stacked deltas — per-object op streams
-    live in the object axis (see ``workloads.versioned_slot_op``).
+    live in the object axis (see ``workloads.versioned_slot_op``). Under
+    object-axis padding on an unsplit axis the op_fn sees exactly the
+    unpadded [objects, ...] states (the engine slices the pad off before
+    calling and joins ⊥ rows back on); on a multi-device sharded axis it
+    must be shard-agnostic — derive the object extent from ``x`` — and
+    the engine masks the pad out of the results instead.
 
     ``weights``: optional per-object element byte weights [B] — every
     non-⊥ irreducible of object b is priced at ``weights[b]`` bytes in
     the ``*_bytes`` views of :class:`StoreResult`.
 
     ``x0``: optional stacked initial states [B, N, ...U] (None = all-⊥).
+    The leading (object) axis of every leaf is validated eagerly here;
+    the full [B, N, ...U] shape — and the op_fn's output structure — are
+    validated by ``simulate_store`` before anything runs.
 
     ``faults``: one optional schedule for the WHOLE store — objects share
     the network, so a lost message, partition window, or down node hits
@@ -93,6 +124,16 @@ class StoreSpec:
                     f"weights must be [objects]=[{self.objects}], got "
                     f"shape {w.shape}")
             object.__setattr__(self, "weights", w)
+        if self.x0 is not None:
+            for leaf in jax.tree.leaves(self.x0):
+                shape = tuple(np.shape(leaf))
+                if len(shape) < 1 or shape[0] != self.objects:
+                    raise ValueError(
+                        f"StoreSpec.x0 must stack objects on the leading "
+                        f"axis of every leaf: expected leading extent "
+                        f"objects={self.objects}, got leaf shape {shape} — "
+                        f"build x0 as [objects, nodes, ...universe] (e.g. "
+                        f"jnp.stack of per-object [N, ...U] states)")
 
     def shared_views(self, topo: Topology,
                      total_rounds: int) -> Optional[FaultViews]:
@@ -112,36 +153,60 @@ class StoreSpec:
 class StoreResult(NamedTuple):
     """Per-object metrics plus store-level (optionally byte-weighted)
     aggregates. ``sim`` is the batched engine result: [B, T] metrics,
-    [B, N, ...U] final states."""
+    [B, N, ...U] final states.
+
+    With ``object_metrics=False`` the engine reduced the object axis
+    inside the scan: ``sim`` holds per-shard partial sums ([S, T] with
+    S = shard count) instead of per-object rows, the ``store_*``
+    aggregates are exact (integer partial sums commute bit-for-bit with
+    the host reduction), and the per-object views raise.
+    """
 
     sim: SimResult
     weights: Optional[np.ndarray] = None          # [B] bytes per element
     final_state_bytes: Optional[np.ndarray] = None  # [B, N] weighted elems
+    object_metrics: bool = True
+    num_objects: Optional[int] = None
 
     # -- per-object views ----------------------------------------------------
 
+    def _per_object(self, what: str):
+        if not self.object_metrics:
+            raise ValueError(
+                f"{what} is a per-object view, but this run reduced the "
+                f"object axis in-scan (object_metrics=False) — only the "
+                f"store_* aggregates and final states are available; rerun "
+                f"with object_metrics=True for per-object metrics")
+
     @property
     def objects(self) -> int:
+        if self.num_objects is not None:
+            return self.num_objects
         return self.sim.batch
 
     @property
     def tx(self) -> np.ndarray:          # [B, T]
+        self._per_object("tx")
         return self.sim.tx
 
     @property
     def mem(self) -> np.ndarray:
+        self._per_object("mem")
         return self.sim.mem
 
     @property
     def cpu(self) -> np.ndarray:
+        self._per_object("cpu")
         return self.sim.cpu
 
     @property
     def max_mem_node(self) -> np.ndarray:
+        self._per_object("max_mem_node")
         return self.sim.max_mem_node
 
     @property
     def uniform(self):
+        self._per_object("uniform")
         return self.sim.uniform
 
     @property
@@ -151,30 +216,56 @@ class StoreResult(NamedTuple):
     def object_result(self, b: int) -> SimResult:
         """Object b as a single-run SimResult — the view the store
         bit-identity invariant is stated over."""
+        self._per_object("object_result")
         return self.sim.cell(b)
 
     def convergence_round(self):
         """Per-object first round after which all nodes stayed identical
         ([B] int, −1 = never; needs ``track_convergence``)."""
+        self._per_object("convergence_round")
         return self.sim.convergence_round()
 
     # -- store-level aggregates ----------------------------------------------
+    # Work in both metric modes: summing per-object rows and summing the
+    # in-scan per-shard partial sums are the same integer total.
 
     @property
     def store_tx(self) -> np.ndarray:    # [T] elements, all objects
-        return self.tx.sum(axis=0)
+        return self.sim.tx.sum(axis=0)
 
     @property
     def store_mem(self) -> np.ndarray:
-        return self.mem.sum(axis=0)
+        return self.sim.mem.sum(axis=0)
 
     @property
     def store_cpu(self) -> np.ndarray:
-        return self.cpu.sum(axis=0)
+        return self.sim.cpu.sum(axis=0)
+
+    @property
+    def store_max_mem_node(self) -> np.ndarray:  # [T] worst node anywhere
+        return self.sim.max_mem_node.max(axis=0)
 
     @property
     def total_cpu(self) -> int:
-        return int(self.cpu.sum())
+        return int(self.sim.cpu.sum())
+
+    @property
+    def store_uniform(self) -> Optional[np.ndarray]:
+        """[T] bool: every object's cluster agreed at round end (None
+        when convergence was not tracked)."""
+        if self.sim.uniform is None:
+            return None
+        return np.all(np.asarray(self.sim.uniform, bool), axis=0)
+
+    def store_convergence_round(self) -> int:
+        """First round after which EVERY object's cluster stayed
+        identical (−1 = never; needs ``track_convergence``). Available
+        in both metric modes."""
+        if self.sim.uniform is None:
+            raise ValueError(
+                "per-round convergence was not tracked; pass "
+                "simulate_store(track_convergence=True)")
+        return int(first_stable_round(self.store_uniform))
 
     # -- weighted (byte) accounting ------------------------------------------
 
@@ -186,11 +277,13 @@ class StoreResult(NamedTuple):
 
     @property
     def tx_bytes(self) -> np.ndarray:    # [B, T]
-        return np.asarray(self.tx, np.float64) * self._w()[:, None]
+        self._per_object("tx_bytes")
+        return np.asarray(self.sim.tx, np.float64) * self._w()[:, None]
 
     @property
     def mem_bytes(self) -> np.ndarray:
-        return np.asarray(self.mem, np.float64) * self._w()[:, None]
+        self._per_object("mem_bytes")
+        return np.asarray(self.sim.mem, np.float64) * self._w()[:, None]
 
     @property
     def store_tx_bytes(self) -> np.ndarray:   # [T]
@@ -203,6 +296,134 @@ class StoreResult(NamedTuple):
     @property
     def total_tx_bytes(self) -> float:
         return float(self.store_tx_bytes.sum())
+
+
+def _as_checkpointer(checkpoint) -> Optional[Checkpointer]:
+    if checkpoint is None or isinstance(checkpoint, Checkpointer):
+        return checkpoint
+    return Checkpointer(checkpoint)
+
+
+def _pad_tree(tree, bot, pad: int, lead_shape) -> Any:
+    """Append ``pad`` ⊥ rows on the leading (object) axis of every leaf.
+    ``lead_shape`` are the axes between object and universe (e.g. (N,))."""
+
+    def f(leaf, b):
+        leaf = jnp.asarray(leaf)
+        row = jnp.broadcast_to(jnp.asarray(b),
+                               (pad,) + tuple(lead_shape) + jnp.shape(b))
+        return jnp.concatenate([leaf, row.astype(leaf.dtype)], axis=0)
+
+    return jax.tree.map(f, tree, bot)
+
+
+def _validate_x0(x0, lattice: Lattice, n: int, objects: int):
+    """Full [B, N, ...U] shape check of a stacked initial state."""
+    bot = lattice.bottom()
+    s_x0 = jax.tree.structure(x0)
+    s_bot = jax.tree.structure(bot)
+    if s_x0 != s_bot:
+        raise ValueError(
+            f"StoreSpec.x0 tree structure {s_x0} does not match the "
+            f"lattice state structure {s_bot}")
+    for leaf, b in zip(jax.tree.leaves(x0), jax.tree.leaves(bot)):
+        want = (objects, n) + tuple(np.shape(b))
+        got = tuple(np.shape(leaf))
+        if got != want:
+            raise ValueError(
+                f"StoreSpec.x0 leaf has shape {got} but this "
+                f"{lattice.name!r} store over {n} nodes needs "
+                f"[objects, nodes, ...universe] = {want}")
+
+
+def _validate_op_fn(op_fn, x0, lattice: Lattice, n: int, objects: int):
+    """Shape-trace op_fn against the stacked state BEFORE the scan runs:
+    a mis-shaped delta would otherwise surface as an opaque scan/jit
+    shape error (or worse, broadcast into wrong semantics)."""
+    if x0 is not None:
+        tmpl = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(np.shape(a),
+                                           jnp.asarray(a).dtype), x0)
+    else:
+        tmpl = jax.tree.map(
+            lambda b: jax.ShapeDtypeStruct(
+                (objects, n) + tuple(np.shape(b)), jnp.asarray(b).dtype),
+            lattice.bottom())
+    t = jax.ShapeDtypeStruct((), jnp.int32)
+    try:
+        out = jax.eval_shape(op_fn, tmpl, t)
+    except Exception as e:
+        raise ValueError(
+            f"StoreSpec.op_fn failed shape tracing against the stacked "
+            f"state [objects={objects}, nodes={n}, ...universe]: {e}") from e
+    if jax.tree.structure(out) != jax.tree.structure(tmpl):
+        raise ValueError(
+            f"StoreSpec.op_fn returned tree structure "
+            f"{jax.tree.structure(out)} but the stacked state is "
+            f"{jax.tree.structure(tmpl)} — op_fn must return one delta "
+            f"leaf per state leaf")
+    for o, x in zip(jax.tree.leaves(out), jax.tree.leaves(tmpl)):
+        if tuple(o.shape) != tuple(x.shape):
+            raise ValueError(
+                f"StoreSpec.op_fn returned a delta leaf of shape "
+                f"{tuple(o.shape)} for a state leaf of shape "
+                f"{tuple(x.shape)} — deltas must match the stacked "
+                f"[objects, nodes, ...universe] state exactly (per-object "
+                f"op streams live in the leading object axis)")
+
+
+def _validate_block_op_fn(op_fn, lattice: Lattice, n: int, block: int,
+                          nshard: int):
+    """Shape-trace op_fn against one DEVICE block of the sharded object
+    axis: under ``shard_map`` the op stream runs per device, so it must
+    derive the object extent from ``x`` (e.g. ``x.shape[0]``) instead of
+    closing over global [B]-shaped tables."""
+    tmpl = jax.tree.map(
+        lambda bl: jax.ShapeDtypeStruct(
+            (block, n) + tuple(np.shape(bl)), jnp.asarray(bl).dtype),
+        lattice.bottom())
+    try:
+        out = jax.eval_shape(op_fn, tmpl, jax.ShapeDtypeStruct((), jnp.int32))
+        ok = all(tuple(o.shape) == tuple(x.shape) for o, x in
+                 zip(jax.tree.leaves(out), jax.tree.leaves(tmpl)))
+        err = None
+    except Exception as e:
+        ok, err = False, e
+    if not ok:
+        raise ValueError(
+            f"StoreSpec.op_fn cannot run on a sharded object axis: each "
+            f"of the {nshard} devices scans its own block of {block} "
+            f"objects, so op_fn must derive the object extent from "
+            f"x (e.g. x.shape[0]) rather than closing over global "
+            f"[objects]-shaped op tables"
+            + (f" (block-shape trace failed with: {err})" if err else ""))
+
+
+def _reduce_step(step):
+    """Wrap the round step to reduce the per-object metrics to ONE
+    partial sum inside the scan body (DESIGN.md §16). ``omask`` rides the
+    CARRY — never the closure — so under ``shard_map`` each device holds
+    its own [B_pad/S] block of the mask and emits its own [1] partials
+    (gathered to [S]); integer sums/maxes make the host-side total
+    bit-identical to the per-object reduction. Padded objects are masked
+    out here (a padded digest_driven object still pays the Merkle floor,
+    so dropping rows after the fact would not be enough)."""
+
+    def wrapped(carry, xs):
+        om, inner = carry
+        inner, (m, uni) = step(inner, xs)
+
+        def red(v):
+            return jnp.sum(jnp.where(om, v, 0), keepdims=True)
+
+        metrics = RoundMetrics(
+            tx=red(m.tx), mem=red(m.mem), cpu=red(m.cpu),
+            max_mem_node=jnp.max(jnp.where(om, m.max_mem_node, 0),
+                                 keepdims=True))
+        uni = jnp.all(uni | ~om, keepdims=True)
+        return (om, inner), (metrics, uni)
+
+    return wrapped
 
 
 def simulate_store(
@@ -220,6 +441,10 @@ def simulate_store(
     shard: bool = False,
     digest: Optional[DigestSpec] = None,
     layout: str = "rows",
+    chunk_rounds: Optional[int] = None,
+    checkpoint: Union[Checkpointer, str, Path, None] = None,
+    object_metrics: bool = True,
+    pad_to: Optional[int] = None,
 ) -> StoreResult:
     """Run ``spec.objects`` independent CRDT objects of one
     ``algo`` × ``lattice`` × ``topo`` as one jitted scan.
@@ -235,22 +460,175 @@ def simulate_store(
     bit-identical; the reference engine ignores it.
 
     ``track_convergence`` defaults on exactly when a fault schedule is
-    given. ``shard=True`` splits the object axis across local devices
-    (requires ``objects`` divisible by the device count).
+    given.
+
+    Scale knobs (DESIGN.md §16; all bit-identical to the plain run):
+
+    * ``shard=True`` splits the object axis across the local device mesh
+      (``launch.mesh.store_mesh``). Arbitrary object counts are padded
+      to the shard multiple with ⊥ objects and the pad is masked out of
+      every result. ``pad_to`` forces a specific pad multiple (mostly a
+      test knob; must be compatible with the shard count).
+    * ``chunk_rounds=k`` drives the scan in k-round chunks with the
+      carry donated between chunks and metrics offloaded to host —
+      peak device memory O(store + chunk) instead of O(store × T).
+    * ``checkpoint=`` a ``Checkpointer`` (or directory path) saves
+      carry + metrics-so-far at every chunk boundary (requires
+      ``chunk_rounds``); ``resume_store`` continues bit-identically.
+    * ``object_metrics=False`` reduces round metrics to per-shard
+      partial sums inside the scan — O(T) metric memory instead of
+      O(B·T); ``StoreResult.store_*`` aggregates stay exact, per-object
+      views raise.
     """
+    return _simulate_store(
+        algo, lattice, topo, spec, active_rounds, quiet_rounds, loo=loo,
+        jit=jit, engine=engine, wide_metrics=wide_metrics,
+        track_convergence=track_convergence, shard=shard, digest=digest,
+        layout=layout, chunk_rounds=chunk_rounds, checkpoint=checkpoint,
+        object_metrics=object_metrics, pad_to=pad_to, resume=None)
+
+
+def resume_store(
+    algo: str,
+    lattice: Lattice,
+    topo: Topology,
+    spec: StoreSpec,
+    active_rounds: int,
+    quiet_rounds: int = 0,
+    *,
+    checkpoint: Union[Checkpointer, str, Path],
+    step: Optional[int] = None,
+    chunk_rounds: Optional[int] = None,
+    loo: str = "prefix",
+    jit: bool = True,
+    engine: str = "reference",
+    wide_metrics: bool = True,
+    track_convergence: Optional[bool] = None,
+    shard: bool = False,
+    digest: Optional[DigestSpec] = None,
+    layout: str = "rows",
+    object_metrics: bool = True,
+    pad_to: Optional[int] = None,
+) -> StoreResult:
+    """Restore a chunk-boundary checkpoint and run the REMAINING rounds.
+
+    Pass the same ``spec`` / config the interrupted ``simulate_store``
+    ran with (the manifest's run fingerprint is verified and a mismatch
+    raises before anything is restored — see ``Checkpointer.restore``
+    for the bundle-integrity checks). ``step`` picks a specific saved
+    round boundary (default: the newest); ``chunk_rounds`` defaults to
+    the value recorded in the manifest. The completed result is
+    bit-identical to the uninterrupted run — same final states, same
+    metrics (``tests/test_store.py``). Checkpointing continues from the
+    restored boundary, so a resumed run can itself be resumed.
+    """
+    ckpt = _as_checkpointer(checkpoint)
+    steps = ckpt.available_steps()
+    if not steps:
+        raise ValueError(f"no checkpoints under {ckpt.dir}")
+    if step is None:
+        step = steps[-1]
+    if step not in steps:
+        raise ValueError(
+            f"no checkpoint for round {step} under {ckpt.dir} — "
+            f"available: {steps}")
+    extra = ckpt.manifest(step).get("extra", {})
+    if chunk_rounds is None:
+        chunk_rounds = extra.get("chunk_rounds")
+        if chunk_rounds is None:
+            raise ValueError(
+                f"checkpoint step {step} under {ckpt.dir} records no "
+                f"chunk_rounds — pass chunk_rounds= explicitly")
+    return _simulate_store(
+        algo, lattice, topo, spec, active_rounds, quiet_rounds, loo=loo,
+        jit=jit, engine=engine, wide_metrics=wide_metrics,
+        track_convergence=track_convergence, shard=shard, digest=digest,
+        layout=layout, chunk_rounds=chunk_rounds, checkpoint=ckpt,
+        object_metrics=object_metrics, pad_to=pad_to,
+        resume=(ckpt, step, extra))
+
+
+def _simulate_store(algo, lattice, topo, spec, active_rounds, quiet_rounds,
+                    *, loo, jit, engine, wide_metrics, track_convergence,
+                    shard, digest, layout, chunk_rounds, checkpoint,
+                    object_metrics, pad_to, resume) -> StoreResult:
     if layout not in LAYOUTS:
         raise ValueError(f"unknown layout {layout!r}; one of {LAYOUTS}")
+    if chunk_rounds is not None and chunk_rounds < 1:
+        raise ValueError(f"chunk_rounds must be >= 1, got {chunk_rounds}")
+    ckpt = _as_checkpointer(checkpoint)
+    if ckpt is not None and chunk_rounds is None:
+        raise ValueError(
+            "checkpoint= requires chunk_rounds: bundles are written at "
+            "chunk boundaries (DESIGN.md §16)")
+    b = spec.objects
+    n = topo.num_nodes
+
+    # -- eager validation (before any compile/alloc) -------------------------
+    if spec.x0 is not None:
+        _validate_x0(spec.x0, lattice, n, b)
+    _validate_op_fn(spec.op_fn, spec.x0, lattice, n, b)
+
+    # -- object-axis padding geometry ----------------------------------------
+    nshard = 1
+    launch_mesh = None
+    if shard:
+        from repro.launch import mesh as launch_mesh
+        nshard = launch_mesh.axis_shards(launch_mesh.store_mesh(),
+                                         launch_mesh.STORE_AXIS)
+    mult = nshard if pad_to is None else pad_to
+    if mult < 1:
+        raise ValueError(f"pad_to must be >= 1, got {pad_to}")
+    b_pad = b + (-b) % mult                      # launch.mesh.padded_size
+    if b_pad % nshard:
+        raise ValueError(
+            f"pad_to={pad_to} pads {b} objects to {b_pad}, which the "
+            f"{nshard}-shard object mesh cannot split — use a multiple "
+            f"of {nshard} (or drop pad_to and let the engine pad)")
+    pad = b_pad - b
+
+    if nshard > 1:
+        # Sharded op_fns must derive the object extent from x itself
+        # (shard_map hands them per-device blocks of b_pad/nshard
+        # objects); a closure over global [B]-shaped op tables would
+        # fail deep inside the mapped scan — catch it here instead.
+        _validate_block_op_fn(spec.op_fn, lattice, n, b_pad // nshard,
+                              nshard)
+
+    bot = lattice.bottom()
+    op_fn = spec.op_fn
+    x0 = spec.x0
+    if pad:
+        x0 = None if x0 is None else _pad_tree(x0, bot, pad, (n,))
+    if pad and nshard == 1:
+        # Unsplit object axis: slice the pad off so op streams (which
+        # may close over [B]-shaped tables) see exactly the unpadded
+        # objects; ⊥ deltas keep the pad rows at bottom forever. When
+        # the axis IS split this wrapper cannot exist (each device holds
+        # a block, not a prefix) — there the shard-agnostic op_fn drives
+        # the pad rows like real objects and the results mask them out
+        # (objects never interact, so evolved pad rows are inert).
+
+        def op_fn(x, t, _inner=spec.op_fn):
+            d = _inner(jax.tree.map(lambda a: a[:b], x), t)
+            return _pad_tree(d, bot, pad, (n,))
+
     alg = SyncAlgorithm(name=algo, lattice=lattice, topo=topo, loo=loo,
-                        engine=engine, batch=spec.objects, digest=digest,
+                        engine=engine, batch=b_pad, digest=digest,
                         batch_layout=layout)
-    carry0 = alg.init(spec.x0)
+    carry0 = alg.init(x0)
     total = active_rounds + quiet_rounds
     views = spec.shared_views(topo, total)
     if track_convergence is None:
         track_convergence = views is not None
 
-    step = build_round_step(alg, spec.op_fn, active_rounds, views,
+    step = build_round_step(alg, op_fn, active_rounds, views,
                             track_convergence)
+    if not object_metrics:
+        # The pad mask rides the carry (not the closure) so it shards
+        # with P("object") like every other carry leaf.
+        step = _reduce_step(step)
+        carry0 = (jnp.arange(b_pad) < b, carry0)
     if views is None:
         xs = jnp.arange(total)
     else:
@@ -258,25 +636,118 @@ def simulate_store(
 
     wrap = None
     if shard:
-        from repro.launch import mesh as launch_mesh
-
         def wrap(run):
-            return launch_mesh.shard_store_scan(run, spec.objects)
+            return launch_mesh.shard_store_scan(run, b_pad)
 
-    carry, (metrics, uniform) = run_scan(step, carry0, xs, jit, wide_metrics,
-                                         wrap=wrap)
+    # -- resume: restore carry + metric prefix from the bundle ---------------
+    start, ys_prefix = 0, None
+    if resume is not None:
+        ckpt_r, at, extra = resume
+        expect = _run_fingerprint(
+            algo, engine, lattice, topo, layout, loo, b, b_pad, total,
+            chunk_rounds, object_metrics, track_convergence, wide_metrics,
+            shard, digest)
+        bad = [k for k, v in expect.items() if extra.get(k) != v]
+        if bad:
+            detail = ", ".join(
+                f"{k}: saved {extra.get(k)!r} vs requested {expect[k]!r}"
+                for k in bad)
+            raise ValueError(
+                f"checkpoint round {at} under {ckpt_r.dir} was written by "
+                f"a different store run — {detail}")
+        if at > total:
+            raise ValueError(
+                f"checkpoint round {at} is past total rounds {total}")
+        mdt = np.int64 if wide_metrics else np.int32
+        sdim = b_pad if object_metrics else nshard
+        ys_like = (RoundMetrics(tx=np.zeros((at, sdim), mdt),
+                                mem=np.zeros((at, sdim), mdt),
+                                cpu=np.zeros((at, sdim), mdt),
+                                max_mem_node=np.zeros((at, sdim), mdt)),
+                   np.zeros((at, sdim), bool))
+        like = {"carry": carry0, "ys": ys_like}
+        if wide_metrics:
+            # int64 metric prefixes would silently downcast to int32
+            # outside the x64 context (jnp.asarray in restore).
+            with jax.experimental.enable_x64():
+                bundle = ckpt_r.restore(at, like)
+        else:
+            bundle = ckpt_r.restore(at, like)
+        carry0 = bundle["carry"]
+        ys_prefix = jax.device_get(bundle["ys"])
+        start = at
+
+    # -- run -----------------------------------------------------------------
+    if chunk_rounds is None:
+        carry, (metrics, uniform) = run_scan(step, carry0, xs, jit,
+                                             wide_metrics, wrap=wrap)
+    else:
+        on_chunk = None
+        if ckpt is not None:
+            fp = _run_fingerprint(
+                algo, engine, lattice, topo, layout, loo, b, b_pad, total,
+                chunk_rounds, object_metrics, track_convergence,
+                wide_metrics, shard, digest)
+
+            def on_chunk(rounds_done, carry, ys_host):
+                ckpt.save(rounds_done,
+                          {"carry": jax.device_get(carry), "ys": ys_host},
+                          extra=fp)
+
+        carry, (metrics, uniform) = run_scan_chunked(
+            step, carry0, xs, jit, wide_metrics, chunk_rounds, wrap=wrap,
+            on_chunk=on_chunk, start=start, ys_prefix=ys_prefix)
+    if not object_metrics:
+        _, carry = carry
     sim = collect_result(carry, metrics, uniform, track_convergence,
                          batched=True)
+
+    # -- mask the pad back out ------------------------------------------------
+    if pad:
+        fx = jax.tree.map(lambda a: a[:b], sim.final_x)
+        if object_metrics:
+            sim = sim._replace(
+                tx=sim.tx[:b], mem=sim.mem[:b], cpu=sim.cpu[:b],
+                max_mem_node=sim.max_mem_node[:b], final_x=fx,
+                uniform=None if sim.uniform is None else sim.uniform[:b])
+        else:
+            sim = sim._replace(final_x=fx)   # metrics already pad-masked
 
     fsb = None
     if spec.weights is not None:
         # Weighted final-state footprint [B, N]: every irreducible of
-        # object b priced at weights[b] bytes (core's weighted size).
-        w = jnp.asarray(spec.weights)
-        # [B] -> [B, 1, ...1]: one singleton for the node axis plus the
-        # deepest universe rank, so w broadcasts leftmost against every
-        # [B, N, ...U] irreducible mask.
-        urank = max(jnp.ndim(l) for l in jax.tree.leaves(lattice.bottom()))
-        wexp = w.reshape((spec.objects,) + (1,) * (urank + 1))
-        fsb = np.asarray(lattice.wsize(sim.final_x, wexp), np.float64)
-    return StoreResult(sim=sim, weights=spec.weights, final_state_bytes=fsb)
+        # object b priced at weights[b] bytes. BatchWeights aligns the
+        # [B] vector against each leaf's own rank (mixed-rank lattices
+        # broadcast per leaf — a single stacked reshape would not).
+        fsb = np.asarray(
+            lattice.wsize(sim.final_x, BatchWeights(jnp.asarray(spec.weights))),
+            np.float64)
+    return StoreResult(sim=sim, weights=spec.weights, final_state_bytes=fsb,
+                       object_metrics=object_metrics, num_objects=b)
+
+
+def _run_fingerprint(algo, engine, lattice, topo, layout, loo, objects,
+                     padded, total_rounds, chunk_rounds, object_metrics,
+                     track_convergence, wide_metrics, shard, digest) -> dict:
+    """JSON-safe identity of a store run, written into every chunk
+    checkpoint's manifest and verified on resume — restoring a bundle
+    into a differently-configured run would type-check (same carry
+    shapes for many configs) but break bit-identity silently."""
+    return {
+        "kind": "store",
+        "algo": algo,
+        "engine": engine,
+        "lattice": lattice.name,
+        "topology": topo.name,
+        "layout": layout,
+        "loo": loo,
+        "objects": objects,
+        "padded": padded,
+        "total_rounds": total_rounds,
+        "chunk_rounds": chunk_rounds,
+        "object_metrics": bool(object_metrics),
+        "track_convergence": bool(track_convergence),
+        "wide_metrics": bool(wide_metrics),
+        "shard": bool(shard),
+        "digest": digest is not None,
+    }

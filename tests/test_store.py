@@ -29,13 +29,15 @@ from test_sweep import (
     gset_sweep_op,
 )
 
-from repro.core import BitGSet, GCounter, GSet
-from repro.core.lattice import MapLattice
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core import BatchWeights, BitGSet, GCounter, GSet, product
+from repro.core.lattice import Lattice, MapLattice, align_weights
 from repro.core import value_lattices as vl
 from repro.sync import (
     ALGORITHMS,
     FaultSchedule,
     StoreSpec,
+    resume_store,
     simulate,
     simulate_store,
     topology,
@@ -212,16 +214,25 @@ def test_store_shard_single_device_noop():
 
 
 SHARD_SCRIPT = r"""
+import tempfile
 import jax, jax.numpy as jnp, numpy as np
 assert len(jax.devices()) == 4, jax.devices()
 from repro.core import GSet
-from repro.sync import FaultSchedule, StoreSpec, simulate_store, topology
+from repro.launch import mesh as launch_mesh
+from repro.sync import (FaultSchedule, StoreSpec, resume_store,
+                        simulate_store, topology)
 
-N, T, Q, B = 7, 5, 8, 8
+# 2-D ("object", "config") store mesh geometry (DESIGN.md SS16)
+assert dict(launch_mesh.store_mesh().shape) == {"object": 4, "config": 1}
+assert dict(launch_mesh.store_mesh(config_devices=2).shape) == \
+    {"object": 2, "config": 2}
+
+N, T, Q, B = 7, 5, 8, 7        # B=7: auto-pads to 8 across 4 devices
 topo = topology.partial_mesh(N, 4)
 lat = GSet(universe=N * T).lattice
 
 def op_b(x, t):
+    # shard-agnostic: the object extent comes from x, never a closure
     b = x.shape[0]
     ids = jnp.arange(N) * T + jnp.minimum(t, T - 1)
     d = jnp.zeros((b, N, N * T), jnp.bool_)
@@ -238,6 +249,25 @@ for f in ("tx", "mem", "cpu", "max_mem_node", "uniform"):
     np.testing.assert_array_equal(getattr(a, f), getattr(b, f), err_msg=f)
 np.testing.assert_array_equal(np.asarray(a.final_x), np.asarray(b.final_x))
 np.testing.assert_array_equal(a.final_state_bytes, b.final_state_bytes)
+
+# chunked + in-scan reduced metrics + checkpoint/resume, all sharded
+with tempfile.TemporaryDirectory() as d:
+    c = simulate_store("bprr", lat, topo, spec, active_rounds=T,
+                       quiet_rounds=Q, shard=True, chunk_rounds=4,
+                       object_metrics=False, checkpoint=d)
+    assert c.sim.tx.shape[0] == 4, c.sim.tx.shape   # per-shard partials
+    np.testing.assert_array_equal(a.store_tx, c.store_tx)
+    np.testing.assert_array_equal(a.store_mem, c.store_mem)
+    np.testing.assert_array_equal(a.store_cpu, c.store_cpu)
+    np.testing.assert_array_equal(a.store_max_mem_node, c.store_max_mem_node)
+    assert a.store_convergence_round() == c.store_convergence_round()
+    r = resume_store("bprr", lat, topo, spec, active_rounds=T,
+                     quiet_rounds=Q, shard=True, object_metrics=False,
+                     checkpoint=d, step=4)
+    np.testing.assert_array_equal(c.sim.tx, r.sim.tx)
+    np.testing.assert_array_equal(c.sim.uniform, r.sim.uniform)
+    np.testing.assert_array_equal(np.asarray(c.final_x),
+                                  np.asarray(r.final_x))
 print("STORE_SHARD_OK")
 """
 
@@ -252,6 +282,262 @@ def test_store_shard_map_multi_device_subprocess():
         cwd=str(Path(__file__).resolve().parents[1]))
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "STORE_SHARD_OK" in proc.stdout
+
+
+# -- memory-bounded scale-out (DESIGN.md §16) ---------------------------------
+
+def _scale_fixture():
+    topo = topology.partial_mesh(N, 4)
+    lat = GSet(universe=N * T).lattice
+    spec = StoreSpec(objects=B, op_fn=gset_sweep_op(SEEDS),
+                     weights=np.arange(1.0, B + 1),
+                     faults=store_schedule(topo))
+    return topo, lat, spec
+
+
+def _assert_store_identical(a, b):
+    for f in ("tx", "mem", "cpu", "max_mem_node", "uniform"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f),
+                                      err_msg=f)
+        assert getattr(a, f).dtype == getattr(b, f).dtype, f
+    np.testing.assert_array_equal(np.asarray(a.final_x),
+                                  np.asarray(b.final_x))
+    np.testing.assert_array_equal(a.final_state_bytes, b.final_state_bytes)
+
+
+def test_store_chunked_bit_identical():
+    """Chunked scan (donated carry, host-offloaded metrics) ==
+    monolithic scan, bit for bit, including an uneven tail chunk."""
+    topo, lat, spec = _scale_fixture()
+    mono = simulate_store("bprr", lat, topo, spec, active_rounds=T,
+                          quiet_rounds=Q)
+    for chunk in (1, 4, 5, T + Q, T + Q + 9):
+        chunked = simulate_store("bprr", lat, topo, spec, active_rounds=T,
+                                 quiet_rounds=Q, chunk_rounds=chunk)
+        _assert_store_identical(mono, chunked)
+
+
+class _KilledAfterSaves(Checkpointer):
+    """Checkpointer that dies right after its Nth successful save —
+    simulates a job killed at a chunk boundary."""
+
+    def __init__(self, directory, die_after: int):
+        super().__init__(directory)
+        self.die_after = die_after
+
+    def save(self, step, state, extra=None):
+        out = super().save(step, state, extra)
+        self.die_after -= 1
+        if self.die_after <= 0:
+            raise KeyboardInterrupt("killed after checkpoint save")
+        return out
+
+
+def test_store_resume_after_kill_bit_identical(tmp_path):
+    """Kill the run right after chunk 1's checkpoint lands, resume from
+    the bundle, and get the uninterrupted run's exact result."""
+    topo, lat, spec = _scale_fixture()
+    chunk = 4
+    full = simulate_store("bprr", lat, topo, spec, active_rounds=T,
+                          quiet_rounds=Q, chunk_rounds=chunk)
+    with pytest.raises(KeyboardInterrupt):
+        simulate_store("bprr", lat, topo, spec, active_rounds=T,
+                       quiet_rounds=Q, chunk_rounds=chunk,
+                       checkpoint=_KilledAfterSaves(tmp_path, die_after=1))
+    ck = Checkpointer(tmp_path)
+    assert ck.available_steps() == [chunk]       # only chunk 1 survived
+    res = resume_store("bprr", lat, topo, spec, active_rounds=T,
+                       quiet_rounds=Q, checkpoint=ck)
+    _assert_store_identical(full, res)
+    # ...and the resumed run kept checkpointing from where it restarted
+    assert ck.available_steps()[-1] == T + Q
+
+
+def test_store_resume_every_boundary_bit_identical(tmp_path):
+    topo, lat, spec = _scale_fixture()
+    chunk = 4
+    full = simulate_store("bprr", lat, topo, spec, active_rounds=T,
+                          quiet_rounds=Q, chunk_rounds=chunk,
+                          checkpoint=tmp_path)
+    ck = Checkpointer(tmp_path)
+    assert ck.available_steps() == [4, 8, 12, T + Q]
+    for step in ck.available_steps():
+        res = resume_store("bprr", lat, topo, spec, active_rounds=T,
+                           quiet_rounds=Q, checkpoint=tmp_path, step=step)
+        _assert_store_identical(full, res)
+
+
+def test_store_resume_rejects_mismatched_run(tmp_path):
+    topo, lat, spec = _scale_fixture()
+    simulate_store("bprr", lat, topo, spec, active_rounds=T,
+                   quiet_rounds=Q, chunk_rounds=4, checkpoint=tmp_path)
+    with pytest.raises(ValueError, match="different store run"):
+        resume_store("state", lat, topo, spec, active_rounds=T,
+                     quiet_rounds=Q, checkpoint=tmp_path)
+    with pytest.raises(ValueError, match="different store run"):
+        resume_store("bprr", lat, topo, spec, active_rounds=T + 1,
+                     quiet_rounds=Q, checkpoint=tmp_path)
+    with pytest.raises(ValueError, match="no checkpoint for round"):
+        resume_store("bprr", lat, topo, spec, active_rounds=T,
+                     quiet_rounds=Q, checkpoint=tmp_path, step=3)
+
+
+def test_store_checkpoint_requires_chunking(tmp_path):
+    topo, lat, spec = _scale_fixture()
+    with pytest.raises(ValueError, match="chunk_rounds"):
+        simulate_store("bprr", lat, topo, spec, active_rounds=T,
+                       checkpoint=tmp_path)
+
+
+def test_store_reduced_metrics_exact_aggregates():
+    """object_metrics=False reduces inside the scan; the store-level
+    sums/maxes are bit-identical (integer partials) and per-object
+    views raise with a pointer at the knob."""
+    topo, lat, spec = _scale_fixture()
+    full = simulate_store("bprr", lat, topo, spec, active_rounds=T,
+                          quiet_rounds=Q)
+    red = simulate_store("bprr", lat, topo, spec, active_rounds=T,
+                         quiet_rounds=Q, object_metrics=False,
+                         chunk_rounds=4)
+    assert red.objects == B
+    np.testing.assert_array_equal(full.store_tx, red.store_tx)
+    np.testing.assert_array_equal(full.store_mem, red.store_mem)
+    np.testing.assert_array_equal(full.store_cpu, red.store_cpu)
+    np.testing.assert_array_equal(full.store_max_mem_node,
+                                  red.store_max_mem_node)
+    np.testing.assert_array_equal(full.store_uniform, red.store_uniform)
+    assert full.store_convergence_round() == red.store_convergence_round()
+    np.testing.assert_array_equal(np.asarray(full.final_x),
+                                  np.asarray(red.final_x))
+    np.testing.assert_array_equal(full.final_state_bytes,
+                                  red.final_state_bytes)
+    for view in ("tx", "mem", "cpu", "max_mem_node", "uniform", "tx_bytes"):
+        with pytest.raises(ValueError, match="object_metrics"):
+            getattr(red, view)
+    with pytest.raises(ValueError, match="object_metrics"):
+        red.object_result(0)
+
+
+def test_store_pad_to_bit_identical():
+    """Object-axis padding (⊥ pad objects, masked out of results) is
+    invisible: B=3 padded to any multiple matches the unpadded run."""
+    topo, lat, spec = _scale_fixture()
+    base = simulate_store("bprr", lat, topo, spec, active_rounds=T,
+                          quiet_rounds=Q)
+    for mult in (2, 4, 5):
+        padded = simulate_store("bprr", lat, topo, spec, active_rounds=T,
+                                quiet_rounds=Q, pad_to=mult)
+        assert padded.objects == B
+        _assert_store_identical(base, padded)
+
+
+def test_store_eager_validation():
+    topo = topology.partial_mesh(N, 4)
+    lat = GSet(universe=N * T).lattice
+    # x0 leading axis != objects: rejected at StoreSpec construction
+    with pytest.raises(ValueError, match="leading"):
+        StoreSpec(objects=B, op_fn=gset_sweep_op(SEEDS),
+                  x0=jnp.zeros((B + 1, N, N * T), jnp.bool_))
+    # x0 with the right leading axis but wrong node/universe extents:
+    # rejected by simulate_store before anything compiles
+    spec = StoreSpec(objects=B, op_fn=gset_sweep_op(SEEDS),
+                     x0=jnp.zeros((B, N + 1, N * T), jnp.bool_))
+    with pytest.raises(ValueError, match=r"nodes"):
+        simulate_store("bprr", lat, topo, spec, active_rounds=T)
+    # op_fn emitting wrongly-shaped deltas: caught by eval_shape with an
+    # actionable message, not a deep scan trace error
+    bad_shape = StoreSpec(objects=B, op_fn=lambda x, t: x[:, :1])
+    with pytest.raises(ValueError, match="op_fn"):
+        simulate_store("bprr", lat, topo, bad_shape, active_rounds=T)
+    # op_fn emitting the wrong tree structure
+    bad_tree = StoreSpec(objects=B, op_fn=lambda x, t: (x, x))
+    with pytest.raises(ValueError, match="op_fn"):
+        simulate_store("bprr", lat, topo, bad_tree, active_rounds=T)
+    with pytest.raises(ValueError, match="chunk_rounds"):
+        simulate_store("bprr", lat, topo,
+                       StoreSpec(objects=B, op_fn=gset_sweep_op(SEEDS)),
+                       active_rounds=T, chunk_rounds=0)
+
+
+# -- mixed-rank weighted accounting -------------------------------------------
+
+def _scalar_max_lattice() -> Lattice:
+    """Rank-0 max-register: its irreducible mask has NO universe axis, so
+    in a product with a map lattice the wsize weights must broadcast per
+    leaf (a single max-rank reshape would misalign here)."""
+
+    def wsize(a, w):
+        m = a > 0
+        return m * align_weights(w, m)
+
+    return Lattice(
+        name="maxreg",
+        bottom=lambda: jnp.zeros((), jnp.int32),
+        join=jnp.maximum,
+        leq=lambda a, b: a <= b,
+        delta=lambda a, b: jnp.where(a > b, a, jnp.zeros_like(a)),
+        size=lambda a: (a > 0).astype(jnp.int32),
+        is_bottom=lambda a: a == 0,
+        irreducible_mask=lambda a: a > 0,
+        novel_mask=lambda a, b: (a > 0) & (a > b),
+        wsize=wsize,
+    )
+
+
+def test_wsize_mixed_rank_batch_weights():
+    """Per-object BatchWeights on a product of a [U]-map and a rank-0
+    register: every leaf aligns the [B] weights against its own rank."""
+    lat = product("mixed", (GSet(universe=4).lattice, _scalar_max_lattice()))
+    x = (jnp.asarray([[True, False, True, True],
+                      [False, False, True, False]]),
+         jnp.asarray([5, 0]))
+    got = np.asarray(lat.wsize(x, BatchWeights(jnp.asarray([2.0, 7.0]))))
+    # object 0: 3 set slots + 1 register = 4 irreducibles at 2.0 each
+    # object 1: 1 set slot + bottom register = 1 irreducible at 7.0
+    np.testing.assert_array_equal(got, [8.0, 7.0])
+
+
+def test_wsize_mixed_rank_laws():
+    lat = product("mixed", (GSet(universe=4).lattice, _scalar_max_lattice()))
+    x = (jnp.asarray([[True, True, False, True],
+                      [False, False, False, False]]),
+         jnp.asarray([3, 9]))
+    # unit weights reduce to size, batched or plain
+    np.testing.assert_array_equal(
+        np.asarray(lat.wsize(x, BatchWeights(jnp.ones(2)))),
+        np.asarray(lat.size(x)))
+    np.testing.assert_array_equal(np.asarray(lat.wsize(x, 1)),
+                                  np.asarray(lat.size(x)))
+    # batch weights above the leaf rank are rejected, not broadcast wrong
+    with pytest.raises(ValueError, match="rank"):
+        lat.wsize(x, BatchWeights(jnp.ones((2, 1, 1))))
+
+
+def test_store_mixed_rank_weighted_accounting():
+    """End-to-end: a store over a mixed-rank product lattice prices its
+    weighted final-state bytes per object (the single-reshape approach
+    crashes here — the register leaf has no universe axis)."""
+    topo = topology.ring(3)
+    lat = product("mixed", (GSet(universe=6).lattice,
+                            _scalar_max_lattice()))
+
+    def op_fn(x, t):
+        s, r = x
+        b = s.shape[0]
+        ds = jnp.zeros_like(s).at[:, 0, 2].set(~s[:, 0, 2])
+        dr = jnp.where(t == 0,
+                       jnp.arange(1, b + 1, dtype=r.dtype)[:, None] *
+                       jnp.ones_like(r[:1]), jnp.zeros_like(r))
+        return (ds, dr)
+
+    w = np.asarray([10.0, 100.0])
+    spec = StoreSpec(objects=2, op_fn=op_fn, weights=w)
+    res = simulate_store("bprr", lat, topo, spec, active_rounds=2,
+                         quiet_rounds=4)
+    # each object converged to: 1 set element + 1 non-bottom register on
+    # every node => 2 irreducibles priced at w[b]
+    np.testing.assert_array_equal(res.final_state_bytes,
+                                  np.broadcast_to(w[:, None] * 2, (2, 3)))
 
 
 # -- workloads.py properties --------------------------------------------------
