@@ -110,12 +110,14 @@ def _sec_engine(args):
 
 
 def _sec_roofline(args):
+    from benchmarks import roofline_report
+    checks = roofline_report.validate_kernel_report(
+        roofline_report.kernel_report(full=args.full))
     try:
-        from benchmarks import roofline_report
         roofline_report.table("pod16x16")
     except Exception as e:  # noqa: BLE001
         print(f"  (no dry-run results: {e})")
-    return None
+    return checks
 
 
 REGISTRY = {
@@ -131,12 +133,12 @@ REGISTRY = {
               _sec_sweep),
     "store": ("Store engine A/B — one-program object store vs per-object "
               "loop (DESIGN.md §15)", _sec_store),
-    "engine": ("Engine A/B — fused Pallas vs reference jnp sync round",
-               _sec_engine),
+    "engine": ("Engine A/B/C — reference jnp vs fused chain vs megakernel "
+               "(DESIGN.md §17)", _sec_engine),
     "kernels": ("CRDT Pallas kernels (interpret-mode correctness sweep)",
                 bench_kernels),
-    "roofline": ("Roofline table (from dry-run artifacts, if present)",
-                 _sec_roofline),
+    "roofline": ("Roofline — per-kernel measured HLO cost vs pass model, "
+                 "plus dry-run table", _sec_roofline),
 }
 
 SECTIONS = tuple(REGISTRY)

@@ -12,7 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import common, ref
 from repro.kernels.buffer_fold import FOLD_BLOCK, buffer_fold_2d
 from repro.kernels.common import (
     DEFAULT_BLOCK,
@@ -20,47 +20,57 @@ from repro.kernels.common import (
     pad_to_2d,
     unpad_from_2d,
 )
-from repro.kernels.common import LANE
+from repro.kernels.common import LANE, SUBLANE
 from repro.kernels.delta_extract import delta_extract_2d
 from repro.kernels.digest import DIGEST_BLOCK, digest_blocks_2d, masked_extract_2d
 from repro.kernels.join import join_2d
 from repro.kernels.lex_join import lex_join_delta_2d
 from repro.kernels.round_recv import ROUND_BLOCK, round_recv_2d
+from repro.kernels.round_step import round_step_2d
+
+
+def _tiled_2d(kernel_2d, operands, *, block, interpret, **kw):
+    """Shared elementwise-kernel prolog: flatten/⊥-pad every operand to the
+    same [M, N] tiling, invoke the 2D entry point, unpad array outputs.
+
+    Scalar outputs (counts) pass through untouched; array outputs are
+    unpadded back to the first operand's shape. Deduplicates the prologs of
+    ``join``/``delta_extract``/``lex_join_delta`` (DESIGN.md §17).
+    """
+    interpret = interpret_default() if interpret is None else interpret
+    shape = n = None
+    padded = []
+    for a in operands:
+        a2, s, ln = pad_to_2d(a, block)
+        if shape is None:
+            shape, n = s, ln
+        padded.append(a2)
+    outs = kernel_2d(*padded, block=block, interpret=interpret, **kw)
+    one = not isinstance(outs, (tuple, list))
+    outs = (outs,) if one else outs
+    unp = [unpad_from_2d(o, shape, n) if getattr(o, "ndim", 0) == 2 else o
+           for o in outs]
+    return unp[0] if one else tuple(unp)
 
 
 def join(a, b, *, kind: str = "max", block=DEFAULT_BLOCK, interpret=None):
     """Lattice join a ⊔ b over arbitrary-shaped dense states."""
-    interpret = interpret_default() if interpret is None else interpret
-    a2, shape, n = pad_to_2d(a, block)
-    b2, _, _ = pad_to_2d(b, block)
-    out = join_2d(a2, b2, kind=kind, block=block, interpret=interpret)
-    return unpad_from_2d(out, shape, n)
+    return _tiled_2d(join_2d, (a, b), block=block, interpret=interpret,
+                     kind=kind)
 
 
 def delta_extract(d, x, *, kind: str = "max", block=DEFAULT_BLOCK, interpret=None):
     """Fused RR step: returns (Δ(d,x), x ⊔ d, |⇓Δ|)."""
-    interpret = interpret_default() if interpret is None else interpret
-    d2, shape, n = pad_to_2d(d, block)
-    x2, _, _ = pad_to_2d(x, block)
-    s, xj, cnt = delta_extract_2d(d2, x2, kind=kind, block=block, interpret=interpret)
-    return unpad_from_2d(s, shape, n), unpad_from_2d(xj, shape, n), cnt
+    return _tiled_2d(delta_extract_2d, (d, x), block=block,
+                     interpret=interpret, kind=kind)
 
 
 def lex_join_delta(a, b, *, block=DEFAULT_BLOCK, interpret=None):
     """Fused LWW-map step on lex-pair states a=(ta,va), b=(tb,vb):
     returns (a ⊔ b, Δ(b, a), |⇓Δ|)."""
-    interpret = interpret_default() if interpret is None else interpret
-    ta, va = a
-    tb, vb = b
-    ta2, shape, n = pad_to_2d(ta, block)
-    va2, _, _ = pad_to_2d(va, block)
-    tb2, _, _ = pad_to_2d(tb, block)
-    vb2, _, _ = pad_to_2d(vb, block)
-    t, v, dt, dv, cnt = lex_join_delta_2d(
-        ta2, va2, tb2, vb2, block=block, interpret=interpret
-    )
-    unp = functools.partial(unpad_from_2d, shape=shape, n=n)
-    return ((unp(t), unp(v)), (unp(dt), unp(dv)), cnt)
+    t, v, dt, dv, cnt = _tiled_2d(lex_join_delta_2d, (*a, *b), block=block,
+                                  interpret=interpret)
+    return ((t, v), (dt, dv), cnt)
 
 
 def buffer_fold(buf, *, kind: str = "max", block=FOLD_BLOCK, interpret=None,
@@ -196,6 +206,129 @@ def round_recv(d_stack, x, *, kind: str = "max", block=None, interpret=None,
     cnt = cnt.sum(axis=1).reshape(m_pad, p)[:b]
     dsz = dsz.sum(axis=1).reshape(m_pad, p)[:b]
     return xo, s, cnt, dsz
+
+
+# -- single-launch sync round (megakernel, DESIGN.md §17) ---------------------
+
+def _routes_for(nbrs, rev, np_: int):
+    """Static routing table for the megakernel: routes[q][n] =
+    (sender_slot, sender_node) realizing inbox[n, q] = d_all[nbrs[n, q],
+    rev[n, q]]. Node-axis padding rows route to (0, 0) — inert under the
+    kernel's active mask."""
+    import numpy as np
+
+    nbrs = np.asarray(nbrs)
+    rev = np.asarray(rev)
+    n, p = nbrs.shape
+    return tuple(
+        tuple((int(rev[i, q]), int(nbrs[i, q])) if i < n else (0, 0)
+              for i in range(np_))
+        for q in range(p))
+
+
+def sync_round_block(b: int, n: int, u: int, *, p: int, k: int,
+                     kind: str = "max", layout: str = "grid",
+                     interpret=None, tune_bench=None):
+    """Resolve the megakernel tile config (g, bn) for the given shapes —
+    autotuned (kernels.common.tuned_block) with a heuristic default.
+
+    ``b``: configs, ``n``: nodes, ``u``: flattened universe, ``p``: degree,
+    ``k``: buffer slots (0 = state-based). Returns ``((g, bn), source)``.
+    """
+    interpret = interpret_default() if interpret is None else interpret
+    np_ = -(-n // SUBLANE) * SUBLANE
+    full_u = -(-u // LANE) * LANE
+    bn_opts = sorted({min(v, full_u) for v in (128, 256, 512, 1024, 2048)})
+    if layout == "rows" and b > 1:
+        g_opts = sorted({min(b, g) for g in (1, max(1, 64 // np_),
+                                             max(1, 256 // np_))})
+        g_default = min(b, max(1, 64 // np_))
+    else:
+        g_opts, g_default = [1], 1
+    default = (g_default, min(1024, full_u))
+    cands = [default] + [(g, bn) for g in g_opts for bn in bn_opts
+                         if (g, bn) != default]
+    key = (common.backend_key(), kind, f"p{p}", f"k{k}", layout, f"n{np_}",
+           f"b{common.shape_bucket(b)}", f"u{common.shape_bucket(full_u)}")
+    return common.tuned_block("round_step", key, cands, tune_bench)
+
+
+def sync_round(delta, x, buf, active, delivered, *, nbrs, rev,
+               kind: str = "max", per_origin: bool = False,
+               extracts: bool = False, layout: str = "grid", block=None,
+               interpret=None):
+    """One full Algorithm 1/2 sync round in a single kernel launch
+    (DESIGN.md §17). Canonical operands:
+
+    * ``delta``/``x``: [B, N, U] (B=1 for unbatched runs)
+    * ``buf``: [K, B, N, U] slot-major origin buffer (K = P+1 per-origin,
+      1 flat) or None for state-based sync
+    * ``active``: [B, N, P] bool/int per-(node, slot) receive mask
+    * ``delivered``: [B, N] bool/int ack mask (buffer cleared where 1);
+      ignored without a buffer
+    * ``nbrs``/``rev``: the topology's static [N, P] routing tables
+
+    Returns ``(x', buf', inbox, dsz_op, xsz, ssend, cnt, dsz)``: states and
+    buffers in the input dtype; ``inbox`` [P, B, N, U] — the active-masked
+    received δ-groups, emitted only for the classic/bp flavors
+    (``buf is not None and not extracts``) whose keep-gate needs the global
+    count, else None; ``dsz_op``/``xsz`` int32 [B, N] (local-δ and final
+    state sizes); ``ssend``/``cnt``/``dsz`` int32 [B, N, P] (send sizes
+    before liveness masking, novel counts, received sizes).
+    """
+    interpret = interpret_default() if interpret is None else interpret
+    b, n, u = x.shape
+    p = nbrs.shape[-1]
+    has_buffer = buf is not None
+    k = buf.shape[0] if has_buffer else 0
+    emit_inbox = has_buffer and not extracts
+    if block is None:
+        block, _ = sync_round_block(b, n, u, p=p, k=k, kind=kind,
+                                    layout=layout, interpret=interpret)
+    g, bn = block
+    g = max(1, min(g, b))
+    np_ = -(-n // SUBLANE) * SUBLANE
+    b_pad = -(-b // g) * g
+    u_pad = -(-u // bn) * bn
+    routes = _routes_for(nbrs, rev, np_)
+
+    orig_dtype = x.dtype
+    cast = jnp.uint8 if orig_dtype == jnp.bool_ else orig_dtype
+
+    def pad3(a):
+        return jnp.pad(a.astype(cast),
+                       ((0, b_pad - b), (0, np_ - n), (0, u_pad - u)))
+
+    d2, x2 = pad3(delta), pad3(x)
+    if has_buffer:
+        b2 = jnp.pad(buf.astype(cast),
+                     ((0, 0), (0, b_pad - b), (0, np_ - n), (0, u_pad - u)))
+        dlv = jnp.pad(delivered.astype(jnp.int32),
+                      ((0, b_pad - b), (0, np_ - n)))
+    else:
+        b2, dlv = None, None
+    a2 = jnp.pad(active.astype(jnp.int32),
+                 ((0, b_pad - b), (0, np_ - n), (0, 0)))
+
+    xo, bo, ib, nodecnt, ssend, cnt, dsz = round_step_2d(
+        d2, x2, b2, a2, dlv, routes=routes, kind=kind,
+        per_origin=per_origin, emit_inbox=emit_inbox, block=(g, bn),
+        interpret=interpret)
+
+    xo = xo[:b, :n, :u].astype(orig_dtype)
+    if bo is not None:
+        bo = bo[:, :b, :n, :u].astype(orig_dtype)
+    if ib is not None:
+        ib = ib[:, :b, :n, :u].astype(orig_dtype)
+
+    def trim(c):
+        # [GB, GJ, g, Np, C] -> sum universe tiles -> [B, N, C]
+        t = c.sum(axis=1, dtype=jnp.int32)
+        return t.reshape((b_pad, np_) + t.shape[3:])[:b, :n]
+
+    nodecnt = trim(nodecnt)
+    return (xo, bo, ib, nodecnt[..., 0], nodecnt[..., 1],
+            trim(ssend), trim(cnt), trim(dsz))
 
 
 # -- digest subsystem (DESIGN.md §14) ----------------------------------------

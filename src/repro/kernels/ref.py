@@ -88,6 +88,73 @@ def masked_extract(x, block_masks, be: int):
     return jnp.where(em, x[..., None, :], jnp.zeros((), x.dtype))
 
 
+def sync_round(delta, x, buf, active, delivered, *, nbrs, rev,
+               kind: str = "max", per_origin: bool = False,
+               extracts: bool = False):
+    """Whole-round oracle for the megakernel (kernels/round_step.py), on the
+    same canonical operands as ``ops.sync_round``: delta/x [B, N, U], buf
+    [K, B, N, U] or None, active [B, N, P], delivered [B, N]. Deliberately
+    multi-pass: local join → sends (leave-one-out per-origin) → ack-gated
+    clear → routed slot-order receive."""
+    p = nbrs.shape[-1]
+    dsz_op = _size(delta, kind)
+    x = join(x, delta, kind)
+    if buf is not None:
+        k = buf.shape[0]
+        self_slot = k - 1 if per_origin else 0
+        buf = buf.at[self_slot].set(join(buf[self_slot], delta, kind))
+        if per_origin:
+            sends = [
+                _fold([buf[o] for o in range(k) if o != j], kind)
+                for j in range(p)]
+        else:
+            sends = [buf[0]] * p
+    else:
+        sends = [x] * p
+    ssend = jnp.stack([_size(s, kind) for s in sends], axis=-1)   # [B, N, P]
+    if buf is not None:
+        buf = jnp.where((delivered != 0)[None, :, :, None],
+                        jnp.zeros((), buf.dtype), buf)
+    inbox, cnts, dszs = [], [], []
+    for q in range(p):
+        d = jnp.stack([sends[int(rev[i, q])][:, int(nbrs[i, q])]
+                       for i in range(x.shape[1])], axis=1)
+        d = jnp.where((active[:, :, q] != 0)[..., None],
+                      d, jnp.zeros((), d.dtype))
+        if kind == "max":
+            novel = d > x
+            s = jnp.where(novel, d, jnp.zeros_like(d))
+            cnts.append(jnp.sum(novel, axis=-1).astype(jnp.int32))
+        else:
+            s = jnp.bitwise_and(d, jnp.bitwise_not(x))
+            cnts.append(_size(s, kind))
+        dszs.append(_size(d, kind))
+        inbox.append(d)
+        x = join(x, d, kind)
+        if buf is not None and extracts:
+            tgt = q if per_origin else 0
+            buf = buf.at[tgt].set(join(buf[tgt], s, kind))
+    xsz = _size(x, kind)
+    emit = buf is not None and not extracts
+    return (x, buf, jnp.stack(inbox, axis=0) if emit else None,
+            dsz_op, xsz, ssend,
+            jnp.stack(cnts, axis=-1), jnp.stack(dszs, axis=-1))
+
+
+def _size(v, kind: str):
+    if kind == "max":
+        return jnp.sum((v != 0).astype(jnp.int32), axis=-1, dtype=jnp.int32)
+    return jnp.sum(jax.lax.population_count(v).astype(jnp.int32), axis=-1,
+                   dtype=jnp.int32)
+
+
+def _fold(slots, kind: str):
+    acc = slots[0]
+    for s in slots[1:]:
+        acc = join(acc, s, kind)
+    return acc
+
+
 def buffer_fold(buf, kind: str = "max"):
     """buf [K, ...] -> sends [K-1, ...]: sends[j] = ⊔_{o≠j} buf[o]."""
     k = buf.shape[0]

@@ -117,7 +117,7 @@ class SyncAlgorithm:
     lattice: Lattice
     topo: Topology
     loo: str = "prefix"    # leave-one-out strategy for BP sends
-    engine: str = "reference"  # "reference" | "fused" (DESIGN.md §11)
+    engine: str = "reference"  # "reference" | "fused" | "mega" (§11/§17)
     batch: Optional[int] = None  # config-axis width B, None = single run
                                  # (sweep engine, DESIGN.md §13)
     digest: Optional[DigestSpec] = None  # digest geometry for
@@ -209,7 +209,7 @@ class SyncAlgorithm:
         lat = self.lattice
         p = self.topo.max_degree
         ax = self.slot_axis
-        if self.resolved_engine == "fused":
+        if self.resolved_engine in engine_mod.KERNEL_ENGINES:
             # one buffer_fold kernel pass over [P+1, (B·)N·U] (DESIGN.md §11)
             return engine_mod.fused_loo_sends(buf, kind=lat.kernel_kind,
                                               batched=self.batched,
@@ -259,6 +259,23 @@ class SyncAlgorithm:
         x, buf, buf_elems, _ = carry
 
         acc = metric_dtype()
+
+        if self.resolved_engine == "mega":
+            # Single-launch megakernel round (DESIGN.md §17): phases (1)-(4)
+            # execute inside one kernels.round_step pallas_call; the engine
+            # epilogue reuses the kernel's exact per-(node, slot) counts, so
+            # the metric arithmetic below is shared verbatim.
+            x, buf, buf_elems, tx, cpu, state_elems = engine_mod.mega_round(
+                self, x, buf, buf_elems, op_delta, acc, faults=faults)
+            node_mem = state_elems.astype(acc) + buf_elems.astype(acc)
+            metrics = RoundMetrics(
+                tx=tx,
+                mem=jnp.sum(node_mem, axis=-1),
+                cpu=cpu,
+                max_mem_node=jnp.max(node_mem, axis=-1),
+            )
+            return AlgoCarry(x=x, buf=buf, buf_elems=buf_elems), metrics
+
         cpu = jnp.zeros((), acc)
 
         # (1) local update: δ = mᵟ(xᵢ); store(δ, i)      [Alg 2, lines 6-8]
@@ -356,7 +373,7 @@ class SyncAlgorithm:
         """x ⊔ every (pre-masked) inbox slot — the kernel pass of the
         resync receive. The reference loop and the fused ``round_recv``
         fold are bit-identical (max/or joins are exact)."""
-        if self.resolved_engine == "fused":
+        if self.resolved_engine in engine_mod.KERNEL_ENGINES:
             return engine_mod.fused_join_inbox(self, x, inbox)
         for q in range(self.topo.max_degree):
             x = self.lattice.join(x, T.slot(inbox, q, axis=self.slot_axis))
@@ -405,7 +422,7 @@ class SyncAlgorithm:
             spec = self.digest_spec
             kind = lat.kernel_kind or "max"
             u = dgst.state_universe(lat.bottom())
-            if self.resolved_engine == "fused":
+            if self.resolved_engine in engine_mod.KERNEL_ENGINES:
                 local_dig = engine_mod.fused_digest(
                     x, spec, kind, batched=self.batched,
                     layout=self.batch_layout)
@@ -414,7 +431,7 @@ class SyncAlgorithm:
             local_exp = local_dig[..., None, :, :]            # slot bcast
             blocks = dgst.digest_diff(local_exp, dig) \
                 & dvalid[..., None]                           # [.., N, P, nB]
-            if self.resolved_engine == "fused":
+            if self.resolved_engine in engine_mod.KERNEL_ENGINES:
                 d_all = engine_mod.fused_extract(
                     x, blocks, spec, batched=self.batched,
                     layout=self.batch_layout)

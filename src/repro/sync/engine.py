@@ -1,6 +1,6 @@
 """Sync-round engine dispatch: reference jnp loop vs fused Pallas kernels.
 
-DESIGN.md §11. Two engines execute one synchronous round:
+DESIGN.md §11/§17. Three engines execute one synchronous round:
 
 * ``reference`` — the pure-jnp sequential slot loop in
   ``SyncAlgorithm.round_step`` (3+ HBM passes over the [N, U] state per
@@ -8,14 +8,20 @@ DESIGN.md §11. Two engines execute one synchronous round:
 * ``fused``     — the receive phase runs as ONE tiled pass via
   ``kernels.round_recv`` (state tile VMEM-resident across all P slots) and
   the BP leave-one-out sends fold through ``kernels.buffer_fold``.
+* ``mega``      — the ENTIRE delta-family round (local join, buffering,
+  leave-one-out sends, ack-gated clear, static routing, P-slot receive)
+  runs as a single ``kernels.round_step`` launch; the fused engine's
+  remaining inter-kernel HBM round trips (sends, gathered inbox, stored
+  extractions) become VMEM-resident values. The resync modes (state_driven/
+  digest_driven) take the fused per-phase kernels under ``mega``.
 
 Dispatch is by ``Lattice.kernel_kind``: lattices whose join/Δ have a dense
-single-array kernel ("max", "bitor") can run fused; everything else
+single-array kernel ("max", "bitor") can run fused/mega; everything else
 (lex pairs, products, linear sums) silently falls back to the reference
-engine, so ``engine="fused"`` is always safe to request.
+engine, so ``engine="fused"``/``"mega"`` is always safe to request.
 
-Both engines are bit-identical in final states, buffers, and metrics: max/or
-folds are exact and the fused kernel preserves Algorithm 2's slot-order
+All engines are bit-identical in final states, buffers, and metrics: max/or
+folds are exact and the kernels preserve Algorithm 2's slot-order
 semantics (Δ against the *running* state). The engine-equivalence test suite
 asserts this across every algorithm × lattice × topology combination.
 """
@@ -26,16 +32,19 @@ import jax.numpy as jnp
 
 from repro.kernels import ops as kops
 
-ENGINES = ("reference", "fused")
+ENGINES = ("reference", "fused", "mega")
 
-# Kernel kinds the fused engine implements end-to-end.
+# Engines that dispatch to the Pallas kernels (vs the pure-jnp reference).
+KERNEL_ENGINES = ("fused", "mega")
+
+# Kernel kinds the fused/mega engines implement end-to-end.
 FUSED_KINDS = ("max", "bitor")
 
 
 def supports_fused(lattice) -> bool:
-    """A lattice runs fused iff its state is one dense array with a kernel
-    kind — exactly when ``kernel_kind`` is set (MapLattice only sets it for
-    arity-1 value lattices)."""
+    """A lattice runs fused/mega iff its state is one dense array with a
+    kernel kind — exactly when ``kernel_kind`` is set (MapLattice only sets
+    it for arity-1 value lattices)."""
     return getattr(lattice, "kernel_kind", None) in FUSED_KINDS
 
 
@@ -44,7 +53,7 @@ def resolve(engine: str, lattice) -> str:
     if engine not in ENGINES:
         raise ValueError(
             f"unknown engine {engine!r}; expected one of {ENGINES}")
-    if engine == "fused" and not supports_fused(lattice):
+    if engine in KERNEL_ENGINES and not supports_fused(lattice):
         return "reference"
     return engine
 
@@ -148,6 +157,122 @@ def fused_receive(algo, x, buf, buf_elems, cpu, d_all, acc_dtype,
     cpu = cpu + algo._msum(ssz, acc_dtype)
     buf_elems = buf_elems + jnp.sum(ssz, axis=-1, dtype=jnp.int32)
     return x, buf, buf_elems, cpu
+
+
+def mega_round(algo, x, buf, buf_elems, op_delta, acc_dtype, faults=None):
+    """Execute Algorithm 1/2 phases (1)-(4) of one round through the
+    single-launch megakernel (``kernels.round_step``, DESIGN.md §17).
+
+    Returns ``(x, buf, buf_elems, tx, cpu, state_elems)`` bit-identical to
+    the reference phases: every count the metric arithmetic consumes
+    (|⇓δ|, send sizes, received/novel sizes, |⇓x'|) is emitted by the
+    kernel as exact int32 per-(node, slot) tallies, and the jnp epilogue
+    applies the identical accumulation order. The only per-algorithm work
+    left outside the kernel is the classic/bp keep-gated buffer merge,
+    whose inflation check ¬(d ⊑ x) reduces over the whole universe (all
+    kernel grid tiles) — it consumes the kernel-emitted masked inbox, like
+    the fused engine's epilogue.
+    """
+    lat, topo = algo.lattice, algo.topo
+    kind = lat.kernel_kind
+    p = topo.max_degree
+    n = topo.num_nodes
+    sax = algo.slot_axis
+    batched = algo.batched
+    nprefix = 2 if batched else 1
+    ushape = x.shape[nprefix:]
+
+    def flat3(a):                  # [.., N, *U] -> canonical [B, N, u]
+        a = a.reshape(a.shape[:nprefix] + (-1,))
+        return a if batched else a[None]
+
+    xv = flat3(x)
+    dv = flat3(op_delta)
+    bdim = xv.shape[0]
+    if algo.has_buffer:
+        if algo.per_origin:        # [(B,) N, K, *U] -> [K, B, N, u]
+            bv = buf.reshape(buf.shape[:sax + 1] + (-1,))
+            bv = jnp.moveaxis(bv, sax, 0)
+            bv = bv if batched else bv[:, None]
+        else:                      # flat buffer: K = 1
+            bv = flat3(buf)[None]
+    else:
+        bv = None
+
+    # Active mask: topology padding ∧ fault delivery, lifted to the traced
+    # config extent (shard-local — never algo.batch; cf. fused_receive).
+    active = topo.mask if faults is None else topo.mask & faults.recv_ok
+    active = jnp.broadcast_to(active, (bdim, n, p))
+    if algo.has_buffer:
+        if faults is None:
+            dlv_mask = None        # fault-free: unconditional clear
+            delivered = jnp.ones((bdim, n), jnp.int32)
+        else:
+            dlv_mask = jnp.all(faults.send_ok | ~topo.mask, axis=-1) \
+                & faults.up
+            delivered = jnp.broadcast_to(dlv_mask, (bdim, n))
+    else:
+        delivered = None
+
+    xo, bo, inbox, dsz_op, xsz, ssend, cnt, dsz = kops.sync_round(
+        dv, xv, bv, active, delivered, nbrs=topo.nbrs, rev=topo.rev,
+        kind=kind, per_origin=algo.per_origin, extracts=algo.extracts,
+        layout=algo.batch_layout)
+
+    def unb(a):
+        return a if batched else a[0]
+
+    dsz_op, xsz = unb(dsz_op), unb(xsz)          # [(B,) N]
+    ssend, cnt, dsz = unb(ssend), unb(cnt), unb(dsz)  # [(B,) N, P]
+
+    # -- metric arithmetic, in the reference round_step's exact order --------
+    # (1) local update
+    if algo.has_buffer:
+        buf_elems = buf_elems + dsz_op
+    cpu = algo._msum(dsz_op, acc_dtype)
+    # (2) sends: tx counts what an up sender puts on the wire (DESIGN.md §12)
+    send_live = topo.mask if faults is None \
+        else topo.mask & faults.up[..., None]
+    tx = algo._msum(ssend * send_live, acc_dtype)
+    cpu = cpu + tx
+    # (3) ack-gated clear (states/buffers cleared in-kernel)
+    if algo.has_buffer:
+        if faults is None:
+            buf_elems = jnp.zeros_like(buf_elems)
+        else:
+            buf_elems = jnp.where(dlv_mask, 0, buf_elems)
+    # (4) receive
+    cpu = cpu + algo._msum(dsz, acc_dtype)
+
+    x = unb(xo).reshape(x.shape)
+    if algo.has_buffer:
+        if algo.extracts:                        # rr / bprr: merged in-kernel
+            ssz = cnt
+        else:                                    # classic / bp: global keep
+            keep = cnt > 0                       # ¬(d ⊑ x_running)
+            ssz = dsz * keep
+        if algo.per_origin:
+            b_alg = jnp.moveaxis(bo if batched else bo[:, 0], 0, sax)
+        else:
+            b_alg = bo[0] if batched else bo[0, 0]
+        b_alg = b_alg.reshape(buf.shape)
+        if not algo.extracts:
+            ib = jnp.moveaxis(inbox if batched else inbox[:, 0], 0, sax)
+            ib = ib.reshape(x.shape[:nprefix] + (p,) + ushape)
+            keep_u = keep.reshape(keep.shape + (1,) * len(ushape))
+            slot_vals = jnp.where(keep_u, ib, jnp.zeros((), ib.dtype))
+            if algo.per_origin:                  # bp
+                nbr_slots = (slice(None),) * sax + (slice(None, p),)
+                b_alg = b_alg.at[nbr_slots].set(
+                    lat.join(b_alg[nbr_slots], slot_vals))
+            else:                                # classic
+                b_alg = lat.join(
+                    b_alg, _fold_slots(jnp.moveaxis(slot_vals, sax, 0), kind))
+        buf = b_alg
+        cpu = cpu + algo._msum(ssz, acc_dtype)
+        buf_elems = buf_elems + jnp.sum(ssz, axis=-1, dtype=jnp.int32)
+
+    return x, buf, buf_elems, tx, cpu, xsz
 
 
 def fused_join_inbox(algo, x, inbox):

@@ -1,0 +1,184 @@
+"""Block-size autotuner (kernels.common.tuned_block, DESIGN.md §17) and
+the REPRO_INTERPRET/REPRO_AUTOTUNE environment overrides.
+
+The tuner is exercised hermetically: fake timers (no real kernel timing),
+tmp_path cache files, and explicit modes — tests must stay deterministic
+and fast regardless of the host."""
+
+import json
+
+import pytest
+
+from repro.kernels import common
+
+
+@pytest.fixture(autouse=True)
+def _clean_memo():
+    """The process-level memo would leak winners between tests."""
+    common._TUNE_MEM.clear()
+    yield
+    common._TUNE_MEM.clear()
+
+
+def _fake_timer_for(costs):
+    """A perf_counter stand-in: each bench(config) call advances the clock
+    by costs[config], so the tuner's (stop - start) sees that 'duration'."""
+    state = {"t": 0.0, "current": None}
+
+    def bench(cfg):
+        state["current"] = tuple(cfg)
+
+    def timer():
+        cur = state["current"]
+        if cur is not None:
+            state["t"] += costs[cur]
+            state["current"] = None
+        return state["t"]
+
+    return timer, bench
+
+
+CANDS = [(1, 512), (1, 128), (1, 1024)]
+
+
+def test_off_mode_returns_default():
+    cfg, src = common.tuned_block("fam", ("k",), CANDS, mode="off")
+    assert (cfg, src) == (CANDS[0], "default")
+
+
+def test_single_candidate_short_circuits(tmp_path):
+    cfg, src = common.tuned_block("fam", ("k",), [(1, 256)], mode="tune",
+                                  cache_path=tmp_path / "c.json")
+    assert (cfg, src) == ((1, 256), "default")
+
+
+def test_cache_mode_without_entry_is_default(tmp_path):
+    cfg, src = common.tuned_block("fam", ("k",), CANDS, mode="cache",
+                                  cache_path=tmp_path / "c.json")
+    assert (cfg, src) == (CANDS[0], "default")
+
+
+def test_tune_persists_deterministic_winner(tmp_path):
+    path = tmp_path / "c.json"
+    costs = {(1, 512): 3.0, (1, 128): 1.0, (1, 1024): 2.0}
+    timer, bench = _fake_timer_for(costs)
+    cfg, src = common.tuned_block("fam", ("k",), CANDS, bench, mode="tune",
+                                  timer=timer, cache_path=path)
+    assert (cfg, src) == ((1, 128), "tuned")
+    saved = json.loads(path.read_text())
+    key = "fam|k"
+    assert saved[key]["config"] == [1, 128]
+    assert set(saved[key]["timings_s"]) == {str(list(c)) for c in CANDS}
+
+    # second resolution: memo hit, no bench calls needed
+    cfg2, src2 = common.tuned_block("fam", ("k",), CANDS, mode="cache",
+                                    cache_path=path)
+    assert (cfg2, src2) == ((1, 128), "cache")
+
+    # fresh process (memo cleared): the DISK cache resolves it
+    common._TUNE_MEM.clear()
+    cfg3, src3 = common.tuned_block("fam", ("k",), CANDS, mode="cache",
+                                    cache_path=path)
+    assert (cfg3, src3) == ((1, 128), "cache")
+
+
+def test_corrupt_cache_recovers(tmp_path):
+    path = tmp_path / "c.json"
+    path.write_text("{not json!!")
+    cfg, src = common.tuned_block("fam", ("k",), CANDS, mode="cache",
+                                  cache_path=path)
+    assert (cfg, src) == (CANDS[0], "default")
+    # corrupt ENTRY (wrong types / config not a candidate) also falls back
+    path.write_text(json.dumps({"fam|k": {"config": [9, 9]},
+                                "fam|k2": "garbage"}))
+    cfg, src = common.tuned_block("fam", ("k",), CANDS, mode="cache",
+                                  cache_path=path)
+    assert (cfg, src) == (CANDS[0], "default")
+    cfg, src = common.tuned_block("fam", ("k2",), CANDS, mode="cache",
+                                  cache_path=path)
+    assert (cfg, src) == (CANDS[0], "default")
+    # and tuning OVER a corrupt cache rewrites it cleanly
+    costs = {(1, 512): 2.0, (1, 128): 5.0, (1, 1024): 1.0}
+    timer, bench = _fake_timer_for(costs)
+    cfg, src = common.tuned_block("fam", ("k",), CANDS, bench, mode="tune",
+                                  timer=timer, cache_path=path)
+    assert (cfg, src) == ((1, 1024), "tuned")
+    assert json.loads(path.read_text())["fam|k"]["config"] == [1, 1024]
+
+
+def test_failing_candidate_skipped(tmp_path):
+    costs = {(1, 512): 2.0, (1, 1024): 3.0}
+
+    def bench(cfg):
+        if tuple(cfg) == (1, 128):
+            raise RuntimeError("tile too large for VMEM")
+        real_bench(cfg)
+
+    timer, real_bench = _fake_timer_for(costs)
+    cfg, src = common.tuned_block("fam", ("k",), CANDS, bench, mode="tune",
+                                  timer=timer,
+                                  cache_path=tmp_path / "c.json")
+    assert (cfg, src) == ((1, 512), "tuned")
+
+
+def test_tune_mode_without_bench_is_default(tmp_path):
+    cfg, src = common.tuned_block("fam", ("k",), CANDS, None, mode="tune",
+                                  cache_path=tmp_path / "c.json")
+    assert (cfg, src) == (CANDS[0], "default")
+
+
+def test_shape_bucket_pow2():
+    assert [common.shape_bucket(n) for n in (1, 2, 3, 128, 129, 1000)] == \
+        [1, 2, 4, 128, 256, 1024]
+
+
+def test_autotune_mode_env(monkeypatch):
+    monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
+    assert common.autotune_mode() == "cache"
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    assert common.autotune_mode() == "tune"
+    monkeypatch.setenv("REPRO_AUTOTUNE", "0")
+    assert common.autotune_mode() == "off"
+    monkeypatch.setenv("REPRO_AUTOTUNE", "tune")
+    assert common.autotune_mode() == "tune"
+
+
+def test_autotune_cache_path_env(monkeypatch, tmp_path):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "alt.json"))
+    assert common.autotune_cache_path() == tmp_path / "alt.json"
+
+
+def test_interpret_env_override(monkeypatch):
+    import jax
+
+    monkeypatch.setenv("REPRO_INTERPRET", "1")
+    assert common.interpret_default() is True
+    monkeypatch.setenv("REPRO_INTERPRET", "0")
+    assert common.interpret_default() is False
+    monkeypatch.delenv("REPRO_INTERPRET", raising=False)
+    assert common.interpret_default() == (jax.default_backend() != "tpu")
+    # backend_key namespaces the cache by what actually gets timed
+    monkeypatch.setenv("REPRO_INTERPRET", "1")
+    assert common.backend_key().endswith("-interpret")
+    monkeypatch.setenv("REPRO_INTERPRET", "0")
+    assert "-interpret" not in common.backend_key()
+
+
+def test_sync_round_block_resolves_from_cache(tmp_path, monkeypatch):
+    """The megakernel wrapper's key scheme round-trips through the disk
+    cache: a tuned winner is what an untuned later call resolves."""
+    from repro.kernels import ops
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "c.json"))
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    seen = []
+
+    blk, src = ops.sync_round_block(1, 9, 300, p=4, k=1, kind="max",
+                                    tune_bench=lambda c: seen.append(
+                                        tuple(c)))
+    assert src == "tuned"
+    assert len(seen) > 0
+    common._TUNE_MEM.clear()
+    monkeypatch.setenv("REPRO_AUTOTUNE", "")
+    blk2, src2 = ops.sync_round_block(1, 9, 300, p=4, k=1, kind="max")
+    assert (blk2, src2) == (blk, "cache")

@@ -1,12 +1,15 @@
-"""Fused-engine equivalence: the Pallas sync-round engine must be
-bit-identical to the reference jnp loop (DESIGN.md §11).
+"""Kernel-engine equivalence: the fused Pallas chain AND the single-launch
+megakernel must be bit-identical to the reference jnp loop (DESIGN.md
+§11/§17).
 
 For every algorithm in ALGORITHMS × every dense-kernel lattice kind
 (GSet bool-or, GCounter/GMap ℕ-max, BitGSet packed bitor) × topology
-(mesh, tree, random connected), both engines must produce identical final
-states, per-round tx / mem / cpu / max-node-memory, and per-node buffer
-counts — and still converge. Lattices without a dense kernel (lex pairs)
-must silently fall back to the reference engine and behave identically.
+(mesh, tree, random connected) × kernel engine (fused, mega), results must
+match the reference engine exactly: final states, per-round tx / mem /
+cpu / max-node-memory, and per-node buffer counts — fault-free and under
+composed fault schedules — and still converge. Lattices without a dense
+kernel (lex pairs) must silently fall back to the reference engine and
+behave identically.
 """
 
 import jax.numpy as jnp
@@ -14,9 +17,11 @@ import numpy as np
 import pytest
 
 from repro.core import BitGSet, GCounter, GSet, LWWMap
-from repro.sync import ALGORITHMS, SyncAlgorithm, converged, engine, simulate, topology
+from repro.sync import (ALGORITHMS, FaultSchedule, SyncAlgorithm, converged,
+                        engine, simulate, topology)
 
 N, T, Q = 9, 8, 10
+KERNEL_ENGINES = list(engine.KERNEL_ENGINES)
 
 
 def gset_ops(n=N, rounds=T):
@@ -73,13 +78,13 @@ WORKLOADS = {
 }
 
 
-def _run_both(algo, op_builder, topo):
+def _run_both(algo, op_builder, topo, eng="fused", faults=None):
     op_fn, lat = op_builder()
     a = simulate(algo, lat, topo, op_fn, active_rounds=T, quiet_rounds=Q,
-                 engine="reference")
+                 engine="reference", faults=faults)
     op_fn, lat = op_builder()
     b = simulate(algo, lat, topo, op_fn, active_rounds=T, quiet_rounds=Q,
-                 engine="fused")
+                 engine=eng, faults=faults)
     return a, b, lat
 
 
@@ -95,29 +100,48 @@ def _assert_identical(a, b, ctx):
                                   err_msg=f"{ctx}: max_mem_node")
 
 
+@pytest.mark.parametrize("eng", KERNEL_ENGINES)
 @pytest.mark.parametrize("algo", ALGORITHMS)
 @pytest.mark.parametrize("workload", ["gset", "gcounter", "bitgset"])
 @pytest.mark.parametrize("topo_name", ["mesh", "tree"])
-def test_fused_engine_bit_identical(algo, workload, topo_name):
+def test_kernel_engines_bit_identical(algo, workload, topo_name, eng):
     topo = topology.by_name(topo_name, N)
-    a, b, lat = _run_both(algo, WORKLOADS[workload], topo)
-    _assert_identical(a, b, f"{workload}/{algo}/{topo_name}")
+    a, b, lat = _run_both(algo, WORKLOADS[workload], topo, eng)
+    _assert_identical(a, b, f"{workload}/{algo}/{topo_name}/{eng}")
     assert converged(lat, b.final_x)
 
 
+@pytest.mark.parametrize("eng", KERNEL_ENGINES)
 @pytest.mark.parametrize("algo", ALGORITHMS)
-def test_lex_lattice_falls_back_and_matches(algo):
+def test_kernel_engines_bit_identical_faulted(algo, eng):
+    """Composed loss + churn schedule: delivery gating (ack-masked buffer
+    clears, down nodes, masked inbox slots) must match the reference
+    engine exactly through both kernel paths."""
     topo = topology.partial_mesh(N, 4)
-    a, b, lat = _run_both(algo, WORKLOADS["lww"], topo)
-    _assert_identical(a, b, f"lww/{algo}")
+    total = T + Q
+    faults = FaultSchedule.bernoulli(topo, total - 4, 0.3, seed=3).compose(
+        FaultSchedule.churn(topo, total - 4, [(2, 2, 5)]))
+    a, b, lat = _run_both("state" if algo == "state" else algo,
+                          WORKLOADS["gset"], topo, eng, faults=faults)
+    _assert_identical(a, b, f"gset/{algo}/faulted/{eng}")
+    assert converged(lat, b.final_x)     # fault-free drain tail
+
+
+@pytest.mark.parametrize("eng", KERNEL_ENGINES)
+@pytest.mark.parametrize("algo", ALGORITHMS)
+def test_lex_lattice_falls_back_and_matches(algo, eng):
+    topo = topology.partial_mesh(N, 4)
+    a, b, lat = _run_both(algo, WORKLOADS["lww"], topo, eng)
+    _assert_identical(a, b, f"lww/{algo}/{eng}")
     assert converged(lat, b.final_x)
 
 
+@pytest.mark.parametrize("eng", KERNEL_ENGINES)
 @pytest.mark.parametrize("seed", [0, 1, 2])
 @pytest.mark.parametrize("algo", ALGORITHMS)
-def test_fused_engine_random_topologies(seed, algo):
+def test_kernel_engines_random_topologies(seed, algo, eng):
     """Random connected graphs with ragged degrees (padding slots exercise
-    the kernel's ⊥-masked inbox)."""
+    the kernels' ⊥-masked inbox and the megakernel's pad-row routes)."""
     rng = np.random.default_rng(seed)
     n = int(rng.integers(5, 12))
     adj = np.zeros((n, n), bool)
@@ -134,14 +158,15 @@ def test_fused_engine_random_topologies(seed, algo):
     def build():
         return gset_ops(n, T)
 
-    a, b, lat = _run_both(algo, build, topo)
-    _assert_identical(a, b, f"rand{seed}/{algo}")
+    a, b, lat = _run_both(algo, build, topo, eng)
+    _assert_identical(a, b, f"rand{seed}/{algo}/{eng}")
     assert converged(lat, b.final_x)
 
 
 def test_engine_buffer_counts_identical():
     """Step-level check: carries (buffers and per-node buffered-element
-    counters) match after every round, not just end-of-run metrics."""
+    counters) match after every round for EVERY engine, not just
+    end-of-run metrics."""
     topo = topology.partial_mesh(N, 4)
     op_fn, lat = gset_ops()
     algs = {
@@ -153,22 +178,26 @@ def test_engine_buffer_counts_identical():
         delta = op_fn(carries["reference"].x, jnp.asarray(t))
         for e in engine.ENGINES:
             carries[e], _ = algs[e].round_step(carries[e], delta)
-        np.testing.assert_array_equal(
-            np.asarray(carries["reference"].buf),
-            np.asarray(carries["fused"].buf), err_msg=f"buf @ round {t}")
-        np.testing.assert_array_equal(
-            np.asarray(carries["reference"].buf_elems),
-            np.asarray(carries["fused"].buf_elems),
-            err_msg=f"buf_elems @ round {t}")
-        np.testing.assert_array_equal(
-            np.asarray(carries["reference"].x),
-            np.asarray(carries["fused"].x), err_msg=f"x @ round {t}")
+        for e in engine.KERNEL_ENGINES:
+            np.testing.assert_array_equal(
+                np.asarray(carries["reference"].buf),
+                np.asarray(carries[e].buf), err_msg=f"{e} buf @ round {t}")
+            np.testing.assert_array_equal(
+                np.asarray(carries["reference"].buf_elems),
+                np.asarray(carries[e].buf_elems),
+                err_msg=f"{e} buf_elems @ round {t}")
+            np.testing.assert_array_equal(
+                np.asarray(carries["reference"].x),
+                np.asarray(carries[e].x), err_msg=f"{e} x @ round {t}")
 
 
 def test_engine_resolution():
     assert engine.resolve("fused", GSet(universe=8).lattice) == "fused"
     assert engine.resolve("fused", BitGSet(universe=64).lattice) == "fused"
     assert engine.resolve("fused", LWWMap(num_keys=4).lattice) == "reference"
+    assert engine.resolve("mega", GSet(universe=8).lattice) == "mega"
+    assert engine.resolve("mega", BitGSet(universe=64).lattice) == "mega"
+    assert engine.resolve("mega", LWWMap(num_keys=4).lattice) == "reference"
     assert engine.resolve("reference", GSet(universe=8).lattice) == "reference"
     with pytest.raises(ValueError):
         engine.resolve("warp", GSet(universe=8).lattice)
@@ -181,12 +210,13 @@ def test_kernel_kind_assignments():
     assert LWWMap(num_keys=4).lattice.kernel_kind is None
 
 
-def test_fused_loo_matches_naive():
+@pytest.mark.parametrize("eng", KERNEL_ENGINES)
+def test_kernel_loo_matches_naive(eng):
     """Kernelized leave-one-out sends == the O(P²) naive fold."""
     topo = topology.partial_mesh(N, 4)
     op_fn, lat = gset_ops()
     a = simulate("bprr", lat, topo, op_fn, active_rounds=T, quiet_rounds=Q,
-                 engine="fused")
+                 engine=eng)
     b = simulate("bprr", lat, topo, op_fn, active_rounds=T, quiet_rounds=Q,
                  engine="reference", loo="naive")
     np.testing.assert_array_equal(a.final_x, b.final_x)

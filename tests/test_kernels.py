@@ -104,3 +104,77 @@ def test_bitpacked_gset_roundtrip_and_join(universe, seed):
     np.testing.assert_array_equal(
         ops.unpack_bits(s, universe), a & ~b)
     assert int(cnt) == int(jnp.sum(a & ~b))
+
+
+# -- sync-round megakernel vs whole-round oracle (DESIGN.md §17) --------------
+
+def _mega_case(rng, b, n, u, p, k, kind, per_origin, extracts, topo):
+    dtype = jnp.uint32 if kind == "bitor" else jnp.int32
+    hi = 2**31 if kind == "bitor" else 50
+    mk = lambda *s: jnp.asarray(rng.integers(0, hi, size=s), dtype)
+    delta, x = mk(b, n, u), mk(b, n, u)
+    buf = mk(k, b, n, u) if k else None
+    active = jnp.asarray(
+        rng.integers(0, 2, size=(b, n, p)), jnp.int32) * topo.mask
+    delivered = jnp.asarray(rng.integers(0, 2, size=(b, n)), jnp.int32) \
+        if k else None
+    kw = dict(nbrs=topo.nbrs, rev=topo.rev, kind=kind,
+              per_origin=per_origin, extracts=extracts)
+    got = ops.sync_round(delta, x, buf, active, delivered, **kw)
+    want = ref.sync_round(delta, x, buf, active, delivered, **kw)
+    names = ("x'", "buf'", "inbox", "dsz_op", "xsz", "ssend", "cnt", "dsz")
+    for nm, g, w in zip(names, got, want):
+        if w is None:
+            assert g is None, nm
+        else:
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                          err_msg=nm)
+
+
+# (k, per_origin, extracts) per algorithm flavor; k is in units of P+1 for
+# the per-origin buffers (resolved inside the test).
+MEGA_FLAVORS = {
+    "state": (0, False, False),
+    "classic": (1, False, False),
+    "bp": ("P+1", True, False),
+    "rr": (1, False, True),
+    "bprr": ("P+1", True, True),
+}
+
+
+@pytest.mark.parametrize("kind", ["max", "bitor"])
+@pytest.mark.parametrize("flavor", sorted(MEGA_FLAVORS))
+@pytest.mark.parametrize("b", [1, 3])
+def test_sync_round_megakernel_vs_oracle(kind, flavor, b, rng):
+    from repro.sync import topology
+
+    topo = topology.partial_mesh(9, 4)
+    p = topo.max_degree
+    k, per_origin, extracts = MEGA_FLAVORS[flavor]
+    k = p + 1 if k == "P+1" else k
+    _mega_case(rng, b, topo.num_nodes, 333, p, k, kind, per_origin,
+               extracts, topo)
+
+
+@pytest.mark.parametrize("layout_block", [(1, 128), (2, 128), (4, 256)])
+def test_sync_round_block_override_bit_identical(layout_block, rng):
+    """Any (g, bn) tile override produces the same results — tile geometry
+    is a pure performance knob (the autotuner may pick any candidate)."""
+    from repro.sync import topology
+
+    topo = topology.tree(7)
+    p = topo.max_degree
+    b, n, u = 4, topo.num_nodes, 300
+    dtype = jnp.int32
+    mk = lambda *s: jnp.asarray(rng.integers(0, 50, size=s), dtype)
+    delta, x, buf = mk(b, n, u), mk(b, n, u), mk(1, b, n, u)
+    active = jnp.broadcast_to(topo.mask, (b, n, p)).astype(jnp.int32)
+    delivered = jnp.ones((b, n), jnp.int32)
+    kw = dict(nbrs=topo.nbrs, rev=topo.rev, kind="max", per_origin=False,
+              extracts=True)
+    base = ops.sync_round(delta, x, buf, active, delivered, **kw)
+    over = ops.sync_round(delta, x, buf, active, delivered,
+                          block=layout_block, **kw)
+    for g, w in zip(base, over):
+        if w is not None:
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))

@@ -60,7 +60,7 @@ def store_schedule(topo):
 
 # -- the bit-identity invariant ----------------------------------------------
 
-@pytest.mark.parametrize("engine", ["reference", "fused"])
+@pytest.mark.parametrize("engine", ["reference", "fused", "mega"])
 @pytest.mark.parametrize("algo", ALGORITHMS)
 def test_store_cells_bit_identical_fault_free(algo, engine):
     topo = topology.partial_mesh(N, 4)
@@ -76,7 +76,7 @@ def test_store_cells_bit_identical_fault_free(algo, engine):
                               f"store/{algo}/{engine}/obj{b}")
 
 
-@pytest.mark.parametrize("engine", ["reference", "fused"])
+@pytest.mark.parametrize("engine", ["reference", "fused", "mega"])
 @pytest.mark.parametrize("algo", ALGORITHMS)
 def test_store_cells_bit_identical_shared_faults(algo, engine):
     """Unlike a sweep, ONE schedule hits every object — per-object runs
@@ -100,20 +100,21 @@ def test_store_cells_bit_identical_shared_faults(algo, engine):
         assert int(convs[b]) >= 0
 
 
+@pytest.mark.parametrize("engine", ["fused", "mega"])
 @pytest.mark.parametrize("layout", ["rows", "grid"])
-def test_store_layouts_bit_identical_bitor(layout):
+def test_store_layouts_bit_identical_bitor(layout, engine):
     """The packed bitor kernel kind through both object-axis layouts."""
     lat, cell_op, sweep_op = bitgset_sweep_ops()
     topo = topology.tree(N)
     res = simulate_store("bprr", lat, topo,
                          StoreSpec(objects=2, op_fn=sweep_op),
-                         active_rounds=T, quiet_rounds=Q, engine="fused",
+                         active_rounds=T, quiet_rounds=Q, engine=engine,
                          layout=layout)
     single = simulate("bprr", lat, topo, cell_op, active_rounds=T,
-                      quiet_rounds=Q, engine="fused")
+                      quiet_rounds=Q, engine=engine)
     for b in range(2):
         assert_cell_identical(res.object_result(b), single,
-                              f"bitgset/{layout}/{b}")
+                              f"bitgset/{layout}/{engine}/{b}")
 
 
 def test_store_digest_rows_layout():

@@ -120,7 +120,7 @@ def assert_cell_identical(cell, single, ctx):
                                       err_msg=f"{ctx}: uniform")
 
 
-@pytest.mark.parametrize("engine", ["reference", "fused"])
+@pytest.mark.parametrize("engine", ["reference", "fused", "mega"])
 @pytest.mark.parametrize("algo", ALGORITHMS)
 def test_sweep_cells_bit_identical_fault_free(algo, engine):
     topo = topology.partial_mesh(N, 4)
@@ -137,7 +137,7 @@ def test_sweep_cells_bit_identical_fault_free(algo, engine):
         assert converged(lat, res.cell(b).final_x)
 
 
-@pytest.mark.parametrize("engine", ["reference", "fused"])
+@pytest.mark.parametrize("engine", ["reference", "fused", "mega"])
 @pytest.mark.parametrize("algo", ALGORITHMS)
 def test_sweep_cells_bit_identical_faulted(algo, engine):
     topo = topology.partial_mesh(N, 4)
@@ -159,7 +159,7 @@ def test_sweep_cells_bit_identical_faulted(algo, engine):
         assert int(convs[b]) >= 0
 
 
-@pytest.mark.parametrize("engine", ["reference", "fused"])
+@pytest.mark.parametrize("engine", ["reference", "fused", "mega"])
 def test_sweep_bitor_kernel_kind(engine):
     """The packed bitor lattice through the batched kernel grid."""
     lat, cell_op, sweep_op = bitgset_sweep_ops()
@@ -308,7 +308,7 @@ def op_b(x, t):
 
 scheds = [None if b % 2 == 0 else FaultSchedule.bernoulli(topo, T, 0.3, seed=b)
           for b in range(B)]
-for engine in ("reference", "fused"):
+for engine in ("reference", "fused", "mega"):
     spec = SweepSpec(batch=B, op_fn=op_b, faults=scheds)
     a = simulate_sweep("bprr", lat, topo, spec, active_rounds=T,
                        quiet_rounds=Q, shard=False, engine=engine)
