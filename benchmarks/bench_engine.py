@@ -50,6 +50,8 @@ import numpy as np
 from repro.core import BitGSet
 from repro.kernels import common as kcommon
 from repro.kernels import ops as kops
+from repro.obs import TelemetrySpec, annotate
+from repro.obs import telemetry as obs_telemetry
 from repro.sync import ENGINES, converged, simulator
 from repro.sync.algorithms import SyncAlgorithm
 
@@ -128,13 +130,18 @@ def _cells(full: bool):
 # -- timing harness -----------------------------------------------------------
 
 def _build_runner(algo: str, lat, topo, op_fn, rounds: int, quiet: int,
-                  engine: str):
+                  engine: str, telemetry=None):
     """One jitted scan per cell — compiled once, timed many times. This is
     what ``simulate`` runs internally; re-calling ``simulate`` would pay a
-    retrace per repetition and time the tracer, not the program."""
+    retrace per repetition and time the tracer, not the program.
+    ``telemetry`` builds the instrumented program (DESIGN.md §18) the same
+    way ``simulate(telemetry=...)`` does."""
     alg = SyncAlgorithm(name=algo, lattice=lat, topo=topo, engine=engine)
     carry0 = alg.init(None)
-    step = simulator.build_round_step(alg, op_fn, rounds, None, False)
+    step = simulator.build_round_step(alg, op_fn, rounds, None, False,
+                                      telemetry)
+    if telemetry is not None:
+        carry0 = (obs_telemetry.init_carry(alg), carry0)
     xs = jnp.arange(rounds + quiet)
     run = jax.jit(lambda c0, t: jax.lax.scan(step, c0, t))
     return alg, run, carry0, xs
@@ -200,6 +207,53 @@ def _tuned_block_for(alg, topo, u: int):
     return {"block": list(block), "source": source, "k": k, "kind": kind}
 
 
+# -- telemetry overhead (DESIGN.md §18) ---------------------------------------
+
+def telemetry_overhead(topo, grid, full: bool = False, verbose: bool = True):
+    """Wall-clock cost of the in-scan telemetry channels, and the
+    zero-cost claim for the disabled path made testable: with
+    ``telemetry=None`` the round step is built by the exact pre-telemetry
+    code path — the SAME jitted program the grid above already timed — so
+    re-timing it here must land inside timing noise of that grid cell
+    (gated in ``validate`` at ``TELEMETRY_OFF_SLACK``×). The enabled run
+    is informational: the reference engine pays the novelty Δ+size pass
+    per slot plus the N-way divergence fold; on the kernel engines the
+    novelty counts are free (the kernels always emit ``cnt``)."""
+    events = [40, 120] if full else [12, 30]
+    rounds = events[-1]
+    lat, op_fn = C.gset_workload(C.NODES, rounds)
+    wname = f"gset_u{C.NODES * rounds}"
+    out = {}
+    for eng in ("reference", "mega"):
+        base = next(r["wall_min_s"] for r in grid
+                    if r["workload"] == wname and r["algo"] == "bprr"
+                    and r["engine"] == eng)
+        _, run_off, c0, xs = _build_runner("bprr", lat, topo, op_fn,
+                                           rounds, C.QUIET, eng)
+        with annotate(f"bench_engine/telemetry_off/{eng}"):
+            _, off = _time_reps(run_off, c0, xs)
+        _, run_on, c0t, xs = _build_runner("bprr", lat, topo, op_fn,
+                                           rounds, C.QUIET, eng,
+                                           telemetry=TelemetrySpec())
+        with annotate(f"bench_engine/telemetry_on/{eng}"):
+            _, on = _time_reps(run_on, c0t, xs)
+        out[eng] = {
+            "workload": wname, "algo": "bprr",
+            "off": off, "on": on,
+            "off_over_grid": round(off["wall_min_s"] / base, 3),
+            "on_over_off": round(on["wall_min_s"] / off["wall_min_s"], 3),
+        }
+        if verbose:
+            print(f"  telemetry {eng:10s} off={off['wall_min_s']*1e3:8.2f}ms "
+                  f"(grid×{out[eng]['off_over_grid']:5.2f})  "
+                  f"on={on['wall_min_s']*1e3:8.2f}ms "
+                  f"(off×{out[eng]['on_over_off']:5.2f})")
+    return out
+
+
+TELEMETRY_OFF_SLACK = 1.30    # same program, re-timed: noise band only
+
+
 # -- benchmark ----------------------------------------------------------------
 
 ALGOS = ("classic", "rr", "bprr")
@@ -253,6 +307,8 @@ def run(full: bool = False, verbose: bool = True):
                       f"block={tuned['block']}({tuned['source'][0]}) "
                       f"identical={same}")
 
+    tele = telemetry_overhead(topo, grid, full=full, verbose=verbose)
+
     passes = {
         str(deg): {
             "reference": reference_receive_passes(deg),
@@ -278,6 +334,7 @@ def run(full: bool = False, verbose: bool = True):
         "cells": cells,
         "analytic_receive_passes_per_round": passes,
         "equivalence_mismatches": mismatches,
+        "telemetry_overhead": tele,
         "regression": _regression(cells),
         "note": ("wall_* are host timings of the prebuilt jitted scan; "
                  "off-TPU the Pallas engines run interpret mode, where the "
@@ -328,6 +385,10 @@ def validate(out):
     checks = [
         ("all engines bit-identical from the timed programs (all cells)",
          not out["equivalence_mismatches"]),
+        (f"telemetry=None is the unmodified program (re-timed within "
+         f"{TELEMETRY_OFF_SLACK}x of its grid cell)",
+         all(v["off_over_grid"] <= TELEMETRY_OFF_SLACK
+             for v in out["telemetry_overhead"].values())),
     ]
     for deg, row in passes.items():
         checks.append((

@@ -1,0 +1,208 @@
+"""Telemetry benchmark: in-scan redundancy/staleness channels replayed
+over the fig7 / fault / digest scenarios (DESIGN.md §18; EXPERIMENTS.md
+§Telemetry).
+
+The paper's Fig. 1 motivation — classic delta propagation re-ships state
+the receiver already holds — is invisible in the tx totals the other
+figures report: tx counts what left the sender, not what was *useless* on
+arrival. This benchmark reruns three existing scenarios with
+``telemetry=TelemetrySpec()`` and reports the mechanism-level quantity
+directly, per algorithm:
+
+* **transmission** — the Fig-7 GSet workload on tree and mesh:
+  run-level redundancy ratio (1 − Σnovel/Σrecv) and the per-round
+  redundancy curve. The headline check is the paper's story told in the
+  new units: classic's redundancy sits strictly above bprr's on both
+  topologies, with bp (tree) / rr (mesh) in between.
+* **loss** — the same mesh workload under 10% Bernoulli loss
+  (``fig_fault``'s schedule): retransmission pushes every buffered
+  algorithm's redundancy *up* relative to its lossless run, and ack_lag —
+  zero everywhere in the fault-free runs — becomes positive.
+* **join** — ``fig_digest``'s joining-replica resync at 25% divergence:
+  full-state resync is almost all redundancy (every round re-ships the
+  whole state to already-converged peers), digest_driven's block
+  extraction keeps redundancy low. Digest/descent words are metadata and
+  excluded from recv by construction, so this comparison is payload-only.
+
+One :class:`~repro.obs.trace.TraceLog` spans the whole run — scenario
+phase spans plus per-round counter tracks for classic and bprr under loss
+— and exports both renderings next to the JSON:
+``benchmarks/results/fig_telemetry_trace.json`` (Perfetto /
+chrome://tracing) and ``..._trace.jsonl`` (greppable). Emits
+``benchmarks/results/fig_telemetry.json`` (``_smoke`` for CI).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GSet
+from repro.obs import TelemetrySpec, TraceLog
+from repro.sync import DigestSpec, FaultSchedule, simulate
+
+from benchmarks import common as C
+
+LOSS = 0.10
+SEED = 7            # fig_fault's loss seed — same schedule family
+JOIN_RATIO = 0.25
+JOIN_ALGOS = ("state", "state_driven", "digest_driven")
+
+
+def _row(res, wall_s: float) -> dict:
+    """One algorithm's telemetry aggregates (plus tx for cross-reference
+    with the fig7/fault tables)."""
+    tel = res.telemetry
+    red = tel.redundancy_over_time()
+    return {
+        "tx": res.total_tx,
+        "recv_elems": int(tel.recv_elems.sum()),
+        "novel_elems": int(tel.novel_elems.sum()),
+        "redundancy": round(tel.total_redundancy(), 4),
+        "redundancy_over_time": [
+            None if np.isnan(v) else round(float(v), 4) for v in red],
+        "peak_buf_elems": int(tel.buf_elems.sum(axis=-1).max()),
+        "max_stale_rounds": int(tel.stale_rounds.max()),
+        "max_ack_lag": int(tel.ack_lag.max()),
+        "final_div_gap": int(tel.div_gap[-1].sum()),
+        "wall_s": round(wall_s, 2),
+    }
+
+
+def _run_algos(algos, lat, op_fn, topo, events, quiet, verbose,
+               label, **kw):
+    rows = {}
+    for algo in algos:
+        t0 = time.time()
+        res = simulate(algo, lat, topo, op_fn, active_rounds=events,
+                       quiet_rounds=quiet, telemetry=TelemetrySpec(), **kw)
+        rows[algo] = _row(res, time.time() - t0)
+        rows[algo]["_result"] = res          # stripped before save
+        if verbose:
+            r = rows[algo]
+            print(f"  {label:12s} {algo:13s} redundancy={r['redundancy']:6.3f}"
+                  f"  recv={r['recv_elems']:>9,d}  novel={r['novel_elems']:>9,d}"
+                  f"  ack_lag={r['max_ack_lag']:3d}"
+                  f"  div_end={r['final_div_gap']}")
+    return rows
+
+
+def _join_x0(nodes: int, universe: int, ratio: float, joiner: int = 0):
+    x0 = np.zeros((nodes, universe), bool)
+    x0[:, : int(round(ratio * universe))] = True
+    x0[joiner] = False
+    return jnp.asarray(x0)
+
+
+def run(nodes=C.NODES, events=40, quiet=None, smoke=False, verbose=True):
+    t0 = time.time()
+    if smoke:
+        nodes, events = 9, 12
+    if quiet is None:
+        quiet = max(events, 16)
+    universe = 256 if smoke else 1024
+    join_rounds = 10 if smoke else 14
+    dspec = DigestSpec(block_elems=32 if smoke else 64)
+
+    trace = TraceLog()
+    out = {"nodes": nodes, "events": events, "quiet": quiet,
+           "smoke": smoke, "loss_rate": LOSS, "join_ratio": JOIN_RATIO,
+           "transmission": {}, "loss": {}, "join": {}}
+    cells = 0
+
+    # -- fig7 replay: fault-free redundancy on tree and mesh -----------------
+    lat, op_fn = C.gset_workload(nodes, events)
+    for topo_name in ("tree", "mesh"):
+        topo = C.topo_of(topo_name, nodes)
+        with trace.span(f"transmission/{topo_name}", nodes=nodes,
+                        events=events):
+            rows = _run_algos(C.ALGOS, lat, op_fn, topo, events, quiet,
+                              verbose, f"{topo_name}")
+        out["transmission"][topo_name] = rows
+        cells += len(rows)
+
+    # -- fig_fault replay: 10% loss on the mesh ------------------------------
+    topo = C.topo_of("mesh", nodes)
+    sched = FaultSchedule.bernoulli(topo, events + quiet // 4, LOSS,
+                                    seed=SEED)
+    with trace.span("loss/mesh", rate=LOSS, nodes=nodes, events=events):
+        out["loss"] = _run_algos(C.ALGOS, lat, op_fn, topo, events, quiet,
+                                 verbose, f"loss{int(LOSS * 100)}",
+                                 faults=sched)
+    cells += len(out["loss"])
+    for algo in ("classic", "bprr"):      # per-round counter tracks
+        trace.add_round_counters(out["loss"][algo]["_result"].telemetry,
+                                 prefix=f"loss/{algo}/")
+
+    # -- fig_digest replay: joining replica at 25% divergence ----------------
+    jlat = GSet(universe=universe).lattice
+    x0 = _join_x0(nodes, universe, JOIN_RATIO)
+
+    def no_op(x, t):
+        return jnp.zeros_like(x)
+
+    with trace.span("join/mesh", ratio=JOIN_RATIO, universe=universe):
+        out["join"] = _run_algos(JOIN_ALGOS, jlat, no_op, topo, 0,
+                                 join_rounds, verbose, "join", x0=x0,
+                                 digest=dspec, track_convergence=True)
+    cells += len(out["join"])
+
+    for rows in (*out["transmission"].values(), out["loss"], out["join"]):
+        for row in rows.values():
+            row.pop("_result")
+
+    suffix = "_smoke" if smoke else ""
+    with trace.span("export"):
+        C.save_result(f"fig_telemetry{suffix}", out,
+                      harness=C.harness_meta(t0, cells))
+    trace.export_chrome(C.RESULTS / f"fig_telemetry_trace{suffix}.json")
+    trace.export_jsonl(C.RESULTS / f"fig_telemetry_trace{suffix}.jsonl")
+    if verbose:
+        print(f"  trace: {len(trace.events)} events -> "
+              f"results/fig_telemetry_trace{suffix}.json(.jsonl)")
+    return out
+
+
+def validate(out):
+    checks = []
+    red = {sc: {a: r["redundancy"] for a, r in rows.items()}
+           for sc, rows in (*out["transmission"].items(),
+                            ("loss", out["loss"]), ("join", out["join"]))}
+
+    # the acceptance criterion: the paper's Fig-1 waste, measured directly
+    checks.append((
+        "classic redundancy strictly above bprr (tree AND mesh)",
+        all(red[t]["classic"] > red[t]["bprr"] for t in ("tree", "mesh"))))
+    checks.append((
+        "BP+RR is the least-redundant delta flavor everywhere",
+        all(red[sc]["bprr"] <= min(red[sc][a] for a in C.ALGOS)
+            for sc in ("tree", "mesh", "loss"))))
+    checks.append((
+        "full-state sync is the most redundant flavor everywhere",
+        all(red[sc]["state"] >= max(red[sc][a] for a in C.ALGOS)
+            for sc in ("tree", "mesh", "loss"))))
+    checks.append((
+        "loss raises redundancy for the RR flavors (retransmission waste)",
+        all(red["loss"][a] > red["mesh"][a] for a in ("rr", "bprr"))))
+    checks.append((
+        "ack_lag: zero fault-free, positive under loss (buffered algos)",
+        all(rows[a]["max_ack_lag"] == 0
+            for rows in out["transmission"].values() for a in C.ALGOS)
+        and all(out["loss"][a]["max_ack_lag"] > 0
+                for a in ("classic", "bp", "rr", "bprr"))))
+    checks.append((
+        "divergence gap drains to 0 in every fault-free run",
+        all(r["final_div_gap"] == 0
+            for rows in out["transmission"].values()
+            for r in rows.values())))
+    checks.append((
+        "join: digest_driven redundancy below full-state resync",
+        out["join"]["digest_driven"]["redundancy"]
+        < out["join"]["state"]["redundancy"]))
+    return checks
+
+
+if __name__ == "__main__":
+    validate(run())

@@ -9,16 +9,25 @@ Usage:  PYTHONPATH=src python -m benchmarks.run [--full] [--smoke]
 default full sweep; ``--list-sections`` prints the registry and exits.
 
 Each section prints its table and appends PASS/FAIL validation checks
-against the paper's qualitative claims.
+against the paper's qualitative claims. Every invocation (including
+partial ``--section``/``--skip`` runs) merges its outcome into the
+repo-root ``BENCH_summary.json`` — one entry per section (check list,
+pass/fail, wall clock, run flags) plus environment provenance — so the
+latest validation state of the whole registry is readable from one file
+without digging through ``benchmarks/results/``.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+from pathlib import Path
 
 import numpy as np
+
+SUMMARY = Path(__file__).resolve().parents[1] / "BENCH_summary.json"
 
 
 def _checks(checks):
@@ -109,6 +118,11 @@ def _sec_engine(args):
     return bench_engine.validate(bench_engine.run(full=args.full))
 
 
+def _sec_telemetry(args):
+    from benchmarks import fig_telemetry
+    return fig_telemetry.validate(fig_telemetry.run(smoke=args.smoke))
+
+
 def _sec_roofline(args):
     from benchmarks import roofline_report
     checks = roofline_report.validate_kernel_report(
@@ -135,6 +149,8 @@ REGISTRY = {
               "loop (DESIGN.md §15)", _sec_store),
     "engine": ("Engine A/B/C — reference jnp vs fused chain vs megakernel "
                "(DESIGN.md §17)", _sec_engine),
+    "telemetry": ("In-scan telemetry — redundancy/staleness channels + "
+                  "trace export (DESIGN.md §18)", _sec_telemetry),
     "kernels": ("CRDT Pallas kernels (interpret-mode correctness sweep)",
                 bench_kernels),
     "roofline": ("Roofline — per-kernel measured HLO cost vs pass model, "
@@ -170,17 +186,53 @@ def main() -> None:
 
     t0 = time.time()
     all_ok = True
+    sections = {}
     for name, (title, runner) in REGISTRY.items():
         if name in skip:
             continue
         print(f"\n{'=' * 72}\n== {title}\n{'=' * 72}")
+        ts = time.time()
         checks = runner(args)
+        ok = True
         if checks is not None:
-            all_ok &= _checks(checks)
+            ok = _checks(checks)
+            all_ok &= ok
+        sections[name] = {
+            "ok": bool(ok),
+            "checks": [[n, bool(p)] for n, p in (checks or [])],
+            "wall_s": round(time.time() - ts, 1),
+            "flags": {"full": args.full, "smoke": args.smoke},
+        }
+    _write_summary(sections)
 
     print(f"\nbenchmarks done in {time.time()-t0:.0f}s — "
           f"{'ALL CHECKS PASSED' if all_ok else 'SOME CHECKS FAILED'}")
     sys.exit(0 if all_ok else 1)
+
+
+def _write_summary(sections: dict) -> None:
+    """Merge this run's section outcomes into the repo-root summary.
+    Partial runs (CI's per-section steps) each update their own entries;
+    untouched sections keep their previous result. A stale registry key
+    (renamed/removed section) is dropped rather than kept forever."""
+    from benchmarks import common as C
+
+    try:
+        doc = json.loads(SUMMARY.read_text())
+    except (OSError, ValueError):
+        doc = {"sections": {}}
+    kept = {k: v for k, v in doc.get("sections", {}).items()
+            if k in REGISTRY}
+    kept.update(sections)
+    doc = {
+        "sections": {k: kept[k] for k in REGISTRY if k in kept},
+        "all_ok": all(s["ok"] for s in kept.values()),
+        "sections_run": sorted(kept),
+        "sections_pending": [k for k in REGISTRY if k not in kept],
+        "env": C.env_meta(),
+    }
+    SUMMARY.write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"\nsummary -> {SUMMARY}")
 
 
 if __name__ == "__main__":

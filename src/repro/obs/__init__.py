@@ -1,0 +1,26 @@
+"""Observability: in-scan telemetry channels, trace export, profiling
+hooks (DESIGN.md §18).
+
+``obs.telemetry`` defines the opt-in channel computation that rides the
+simulator's scan (``simulate(..., telemetry=TelemetrySpec())``);
+``obs.trace`` renders instrumented runs to Chrome-trace/Perfetto JSON and
+JSONL event logs; ``obs.oracle`` (imported explicitly — it depends on
+``repro.sync``) recomputes every channel independently for validation.
+"""
+
+from repro.obs.telemetry import (
+    TelemetryCarry,
+    TelemetryChannels,
+    TelemetryResult,
+    TelemetrySpec,
+)
+from repro.obs.trace import TraceLog, annotate
+
+__all__ = [
+    "TelemetryCarry",
+    "TelemetryChannels",
+    "TelemetryResult",
+    "TelemetrySpec",
+    "TraceLog",
+    "annotate",
+]

@@ -1,0 +1,239 @@
+"""Telemetry oracle: an independent, unjitted recomputation of every
+channel (DESIGN.md §18).
+
+``oracle_channels`` replays a ``simulate`` run round by round in plain
+Python + jnp, re-deriving the algorithm's messages from the documented
+semantics (paper §IV Algorithms 1 & 2; DESIGN.md §14 for the resync
+modes) and recomputing every telemetry channel by explicit
+join-and-compare per received slot — ``|Δ(d, x_running)|`` in slot order,
+exactly the quantity the engines' in-scan counters (and the Pallas
+kernels' ``cnt`` outputs) claim to tally. Nothing here goes through
+``round_step``, the engines, or the kernels; only the lattice primitives,
+the topology tables, and (for digest_driven message construction) the
+digest helpers are shared. ``tests/test_telemetry.py`` asserts in-scan
+channels == oracle across algorithms × lattices × engines × faults.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs.telemetry import TelemetryResult, TelemetrySpec, cluster_gap
+from repro.sync import digest as dgst
+from repro.sync.digest import DigestSpec
+
+
+def _bcast(state, prefix):
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, tuple(prefix) + a.shape), state)
+
+
+def _where_bot(cond, a, bot):
+    cond = jnp.asarray(cond)
+
+    def sel(xl, bl):
+        c = cond.reshape(cond.shape + (1,) * jnp.ndim(bl))
+        return jnp.where(c, xl, bl)
+
+    return jax.tree.map(sel, a, bot)
+
+
+def _sel(cond, a, b, bot):
+    cond = jnp.asarray(cond)
+
+    def sel(xl, yl, bl):
+        c = cond.reshape(cond.shape + (1,) * jnp.ndim(bl))
+        return jnp.where(c, xl, yl)
+
+    return jax.tree.map(sel, a, b, bot)
+
+
+def oracle_channels(algo: str, lattice, topo, op_fn, active_rounds: int,
+                    quiet_rounds: int = 0, faults=None, x0: Any = None,
+                    digest: Optional[DigestSpec] = None,
+                    spec: Optional[TelemetrySpec] = None) -> TelemetryResult:
+    """Recompute the [T, N] telemetry channels of an (unbatched)
+    ``simulate(algo, ...)`` run from first principles."""
+    spec = TelemetrySpec() if spec is None else spec
+    lat = lattice
+    n, p = topo.num_nodes, topo.max_degree
+    nbrs = np.asarray(topo.nbrs)
+    rev = np.asarray(topo.rev)
+    mask = np.asarray(topo.mask)
+    total = active_rounds + quiet_rounds
+
+    vr = None
+    if faults is not None:
+        v = faults.views(total)
+        vr = tuple(np.asarray(a) for a in (v.recv_ok, v.send_ok, v.up))
+
+    bot1 = lat.bottom()
+    botn = _bcast(bot1, (n,))
+    x = botn if x0 is None else x0
+
+    resync = algo in ("state_driven", "digest_driven")
+    has_buffer = algo not in ("state", "digest_driven")
+    per_origin = algo in ("bp", "bprr")
+    extracts = algo in ("rr", "bprr")
+
+    slots = fbuf = resp = None
+    if per_origin:
+        slots = [botn] * (p + 1)          # origin-indexed; slot p = local ops
+    elif algo in ("classic", "rr"):
+        fbuf = botn
+    elif algo == "state_driven":
+        resp = [botn] * p                 # per-destination Δ-responses
+    elif algo == "digest_driven":
+        dspec = DigestSpec() if digest is None else digest
+        u = dgst.state_universe(bot1)
+        nb = dspec.num_blocks(u)
+        kind = lat.kernel_kind or "max"
+        dig = jnp.zeros((n, p, nb, dgst.CHANNELS), jnp.uint32)
+        dvalid = jnp.zeros((n, p), jnp.bool_)
+    buf_elems = jnp.zeros((n,), jnp.int32)
+
+    ids = np.arange(n)
+    init_send = (ids[:, None] < nbrs) & mask        # state_driven initiators
+    req_recv = (nbrs < ids[:, None]) & mask
+
+    stale = np.zeros(n, np.int64)
+    ack = np.zeros(n, np.int64)
+    zeros = np.zeros(n, np.int32)
+    rows = {f: [] for f in ("recv_elems", "novel_elems", "stale_rounds",
+                            "ack_lag", "buf_elems", "div_gap")}
+
+    for t in range(total):
+        recv_ok = mask if vr is None else mask & vr[0][t]
+        send_ok = None if vr is None else vr[1][t]
+        up = None if vr is None else vr[2][t]
+        x_start = x
+
+        # (1) local op, gated exactly like build_round_step
+        delta = op_fn(x, jnp.asarray(t, jnp.int32))
+        delta = jax.tree.map(lambda d, xl: d.astype(xl.dtype), delta, x)
+        gate = np.full(n, t < active_rounds)
+        if up is not None:
+            gate = gate & up
+        delta = _where_bot(gate, delta, bot1)
+        x = lat.join(x, delta)
+        if has_buffer and not resync:
+            dsz = lat.size(delta).astype(jnp.int32)
+            if per_origin:
+                slots[p] = lat.join(slots[p], delta)
+            else:
+                fbuf = lat.join(fbuf, delta)
+            buf_elems = buf_elems + dsz
+
+        # (2) sends: what each node addresses to neighbor slot q
+        if algo == "state":
+            d_slots = [x] * p
+        elif algo in ("classic", "rr"):
+            d_slots = [fbuf] * p
+        elif per_origin:                   # leave-one-out over origin slots
+            d_slots = []
+            for j in range(p):
+                acc = None
+                for o in range(p + 1):
+                    if o == j:
+                        continue
+                    acc = slots[o] if acc is None else lat.join(acc, slots[o])
+                d_slots.append(acc)
+        elif algo == "state_driven":       # lower id ships state, higher
+            d_slots = [_sel(init_send[:, q], x, resp[q], bot1)
+                       for q in range(p)]  # id ships last round's Δ-response
+        else:                              # digest_driven: differing blocks
+            local_dig = dgst.digest_state(x, dspec, kind)       # [N, nB, 3]
+            blocks = dgst.digest_diff(local_dig[:, None], dig) \
+                & dvalid[..., None]                             # [N, P, nB]
+            em = dgst.block_mask_to_elems(blocks, u, dspec)     # [N, P, U]
+            d_slots = [dgst.extract_blocks(x, em[:, q]) for q in range(p)]
+
+        # (3) ack-gated buffer clear (δ-family only; resync modes keep no
+        # retained δ-state — DESIGN.md §14)
+        if has_buffer and not resync:
+            delivered = np.ones(n, bool) if vr is None \
+                else (send_ok | ~mask).all(axis=-1) & up
+            if per_origin:
+                slots = [_sel(delivered, botn, s, bot1) for s in slots]
+            else:
+                fbuf = _sel(delivered, botn, fbuf, bot1)
+            buf_elems = jnp.where(jnp.asarray(delivered), 0, buf_elems)
+
+        # (4) receive, sequentially per slot — the join-and-compare the
+        # in-scan redundancy counters claim to implement
+        d_stack = jax.tree.map(lambda *ls: jnp.stack(ls, axis=1), *d_slots)
+        recv_t = jnp.zeros((n,), jnp.int32)
+        novel_t = jnp.zeros((n,), jnp.int32)
+        inbox = []
+        for q in range(p):
+            valid = recv_ok[:, q]
+            d = jax.tree.map(lambda a: a[nbrs[:, q], rev[:, q]], d_stack)
+            d = _where_bot(valid, d, bot1)
+            inbox.append(d)
+            recv_t = recv_t + lat.size(d).astype(jnp.int32)
+            novel_t = novel_t + lat.size(lat.delta(d, x)).astype(jnp.int32)
+            if resync or algo == "state":
+                x = lat.join(x, d)
+                continue
+            if extracts:
+                stored = lat.delta(d, x)               # RR: Δ vs running x
+                keep = ~lat.is_bottom(stored) & jnp.asarray(valid)
+            else:
+                stored = d                             # classic/bp: whole group
+                keep = ~lat.leq(d, x) & jnp.asarray(valid)
+            ssz = lat.size(stored).astype(jnp.int32) * keep
+            x = lat.join(x, d)
+            if per_origin:
+                slots[q] = _sel(keep, lat.join(slots[q], stored), slots[q],
+                                bot1)
+            else:
+                fbuf = _sel(keep, lat.join(fbuf, stored), fbuf, bot1)
+            buf_elems = buf_elems + ssz
+
+        # (4b) resync round-trip state
+        if algo == "state_driven":
+            rsz = jnp.zeros((n,), jnp.int32)
+            resp = list(resp)
+            for q in range(p):
+                req_ok = req_recv[:, q] & recv_ok[:, q]
+                r = _where_bot(req_ok, lat.delta(x, inbox[q]), bot1)
+                resp[q] = r
+                rsz = rsz + lat.size(r).astype(jnp.int32)
+            buf_elems = rsz
+        elif algo == "digest_driven":
+            dig_in = local_dig[nbrs]                   # sender's broadcast
+            ok = jnp.asarray(recv_ok)
+            dig = jnp.where(ok[..., None, None], dig_in, dig)
+            dvalid = dvalid | ok
+            buf_elems = (jnp.sum(dvalid, axis=-1)
+                         * jnp.int32(dspec.words(u))).astype(jnp.int32)
+
+        # (5) channels, mirroring obs.telemetry.round_channels' gating
+        grew = ~np.asarray(lat.leq(x, x_start))
+        stale = np.where(grew, 0, stale + 1)
+        if has_buffer and vr is not None:
+            delivered_ack = (send_ok | ~mask).all(axis=-1) & up
+            ack = np.where(delivered_ack, 0, ack + 1)
+        rows["recv_elems"].append(
+            np.asarray(recv_t) if spec.redundancy else zeros)
+        rows["novel_elems"].append(
+            np.asarray(novel_t) if spec.redundancy else zeros)
+        rows["stale_rounds"].append(
+            stale.astype(np.int32) if spec.staleness else zeros)
+        rows["ack_lag"].append(
+            ack.astype(np.int32) if spec.buffer else zeros)
+        rows["buf_elems"].append(
+            np.asarray(buf_elems) if spec.buffer else zeros)
+        rows["div_gap"].append(
+            np.asarray(cluster_gap(lat, x, n, False))
+            if spec.divergence else zeros)
+
+    return TelemetryResult(
+        *(np.stack(rows[f]).astype(np.int32)
+          for f in ("recv_elems", "novel_elems", "stale_rounds", "ack_lag",
+                    "buf_elems", "div_gap")),
+        spec=spec)

@@ -1,0 +1,232 @@
+"""In-scan telemetry channels (DESIGN.md §18).
+
+The paper's central claim — classic delta propagation wastes bandwidth on
+*redundant* state the receiver already holds (§I Fig. 1) — is invisible in
+aggregate tx totals. This module computes the mechanism-level diagnostics
+per round, per node, INSIDE the jitted scan, and carries them out as extra
+scan outputs:
+
+* ``recv_elems`` / ``novel_elems`` — delivered payload elements and the
+  subset that was actually new at join time (|Δ(d, x_running)| per received
+  slot, in slot order — identical to what the Pallas kernels' ``cnt``
+  output tallies). The **redundancy ratio** is ``1 − novel/recv``.
+* ``stale_rounds``   — rounds since the node's state last grew (staleness
+  lag; any inflation — own op or received novelty — resets it).
+* ``buf_elems``      — δ-buffer occupancy at round end (retention pressure
+  under ack-gated eviction).
+* ``ack_lag``        — rounds since the node's sends were last fully
+  delivered (0 for fault-free runs and bufferless algorithms).
+* ``div_gap``        — per-node element gap to the running cluster-wide
+  join ``Y_t = ⊔_n x_n``: ``|Δ(Y_t, x_n)|``. Once ops cease, ``Y_t``
+  is the converged state, so this is the divergence-to-converged
+  distance during the drain (ConflictSync's adaptive-algorithm signal).
+
+Digest/descent words (digest_driven's metadata) are *excluded* from
+``recv_elems``: redundancy is a property of state payload, and metadata
+is priced separately by the tx metric (DESIGN.md §14).
+
+Everything here is structural: ``alg`` is duck-typed (``lattice``,
+``topo``, ``batched``, ``has_buffer``, ``node_prefix``) so this module
+imports nothing from ``repro.sync`` — the simulator imports us, never the
+reverse. The channels ride the scan as a ``TelemetryCarry`` (two int32
+per-node counters) plus a per-round ``TelemetryChannels`` ys entry; with
+``telemetry=None`` the scan program is textually unchanged, which is what
+makes the disabled path bit-identical (``tests/test_telemetry.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetrySpec:
+    """Which channel groups to compute (all on by default).
+
+    Each group toggles its *computation* (the disabled group's channel
+    comes back as zeros, keeping the ys pytree static for chunked /
+    checkpointed scans): ``redundancy`` adds the per-slot novelty counts
+    (free on the kernel engines — the kernels always emit them — and one
+    extra Δ+size pass per slot on the reference engine), ``staleness``
+    two leq passes, ``buffer`` nothing (occupancy is already in the
+    carry), ``divergence`` an N-way join fold plus one Δ+size pass.
+    """
+
+    redundancy: bool = True
+    staleness: bool = True
+    buffer: bool = True
+    divergence: bool = True
+
+    def asdict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class TelemetryCarry(NamedTuple):
+    stale: jnp.ndarray   # [(B,) N] rounds since the state last grew
+    ack: jnp.ndarray     # [(B,) N] rounds since sends last fully delivered
+
+
+class TelemetryChannels(NamedTuple):
+    """One round's channel values, each [(B,) N] int32 (the store's
+    reduced-aggregate mode re-emits them in the metric accumulator dtype,
+    summed/maxed over the object axis)."""
+
+    recv_elems: jnp.ndarray
+    novel_elems: jnp.ndarray
+    stale_rounds: jnp.ndarray
+    ack_lag: jnp.ndarray
+    buf_elems: jnp.ndarray
+    div_gap: jnp.ndarray
+
+
+def init_carry(alg) -> TelemetryCarry:
+    # Two distinct buffers: the chunked store scan donates the carry, and
+    # donating one aliased array through two carry slots is an XLA error.
+    return TelemetryCarry(stale=jnp.zeros(alg.node_prefix, jnp.int32),
+                          ack=jnp.zeros(alg.node_prefix, jnp.int32))
+
+
+def _cluster_join(lat, x, n: int, ax: int):
+    """⊔ over the node axis (at ``ax``) of a stacked state — N is small
+    and static, so a sequential fold of N−1 joins compiles to one chain."""
+
+    def sl(i):
+        return jax.tree.map(lambda a: a[(slice(None),) * ax + (i,)], x)
+
+    acc = sl(0)
+    for i in range(1, n):
+        acc = lat.join(acc, sl(i))
+    return acc
+
+
+def cluster_gap(lat, x, n: int, batched: bool) -> jnp.ndarray:
+    """Per-node element gap to the cluster-wide join: |Δ(⊔_m x_m, x_n)|.
+    Shared by the in-scan channel and the oracle (both call the same
+    lattice primitives — the oracle recomputes the *inputs* to it)."""
+    ax = 1 if batched else 0
+    y = _cluster_join(lat, x, n, ax)
+    yb = jax.tree.map(
+        lambda yl, xl: jnp.broadcast_to(jnp.expand_dims(yl, ax), xl.shape),
+        y, x)
+    return lat.size(lat.delta(yb, x)).astype(jnp.int32)
+
+
+def round_channels(spec: TelemetrySpec, alg, tele: TelemetryCarry,
+                   x_before, carry, recv, faults):
+    """Compute one round's channels from the post-round algorithm carry.
+
+    ``x_before`` is the state at round start (pre-op), ``recv`` the
+    ``(recv_elems, novel_elems)`` pair from ``round_step(recv_counts=
+    True)`` (None when redundancy is off), ``faults`` the round's mask
+    triple or None. Shapes derive from the carry (never ``alg.batch``),
+    so the closure stays shard-agnostic under ``shard_map``.
+    """
+    lat = alg.lattice
+    z = jnp.zeros_like(carry.buf_elems)          # [(B,) N] int32
+
+    if spec.redundancy and recv is not None:
+        recv_e, novel_e = (r.astype(jnp.int32) for r in recv)
+    else:
+        recv_e, novel_e = z, z
+
+    stale = tele.stale
+    if spec.staleness:
+        grew = jnp.logical_not(lat.leq(carry.x, x_before))    # [(B,) N]
+        stale = jnp.where(grew, 0, tele.stale + 1)
+
+    ack = tele.ack
+    if spec.buffer and alg.has_buffer and faults is not None:
+        delivered = jnp.all(faults.send_ok | ~alg.topo.mask, axis=-1) \
+            & faults.up
+        ack = jnp.where(delivered, 0, tele.ack + 1)
+
+    buf_occ = carry.buf_elems.astype(jnp.int32) if spec.buffer else z
+
+    gap = cluster_gap(lat, carry.x, alg.topo.num_nodes, alg.batched) \
+        if spec.divergence else z
+
+    new = TelemetryCarry(stale=stale, ack=ack)
+    ch = TelemetryChannels(
+        recv_elems=recv_e, novel_elems=novel_e,
+        stale_rounds=stale if spec.staleness else z,
+        ack_lag=ack if spec.buffer else z,
+        buf_elems=buf_occ, div_gap=gap)
+    return new, ch
+
+
+class TelemetryResult(NamedTuple):
+    """Host-side channels: [T, N] arrays ([B, T, N] for sweeps/stores;
+    a store's reduced-aggregate mode holds per-shard partials — sums for
+    recv/novel/buf, maxes for stale/ack/gap — with B = shard count)."""
+
+    recv_elems: np.ndarray
+    novel_elems: np.ndarray
+    stale_rounds: np.ndarray
+    ack_lag: np.ndarray
+    buf_elems: np.ndarray
+    div_gap: np.ndarray
+    spec: TelemetrySpec
+
+    @property
+    def batch(self) -> Optional[int]:
+        return int(self.recv_elems.shape[0]) \
+            if self.recv_elems.ndim == 3 else None
+
+    def cell(self, b: int) -> "TelemetryResult":
+        if self.batch is None:
+            raise ValueError("not a batched telemetry result")
+        return TelemetryResult(*(a[b] for a in self[:6]), spec=self.spec)
+
+    def take_lead(self, b: int) -> "TelemetryResult":
+        """First ``b`` entries of the batch axis (the store engine's
+        pad-mask slice)."""
+        if self.batch is None:
+            raise ValueError("not a batched telemetry result")
+        return TelemetryResult(*(a[:b] for a in self[:6]), spec=self.spec)
+
+    @property
+    def redundant_elems(self) -> np.ndarray:
+        """Received-but-already-known elements per (round, node)."""
+        return self.recv_elems.astype(np.int64) \
+            - self.novel_elems.astype(np.int64)
+
+    def redundancy_over_time(self) -> np.ndarray:
+        """[T] ([B, T]) fraction of the round's received payload that was
+        redundant, nodes summed; NaN for rounds with no received payload."""
+        recv = self.recv_elems.astype(np.float64).sum(axis=-1)
+        red = self.redundant_elems.astype(np.float64).sum(axis=-1)
+        return np.divide(red, recv, out=np.full_like(recv, np.nan),
+                         where=recv > 0)
+
+    def total_redundancy(self):
+        """Scalar ([B]) run-level redundancy ratio: 1 − Σnovel/Σrecv."""
+        ax = (-2, -1)
+        recv = self.recv_elems.astype(np.float64).sum(axis=ax)
+        red = self.redundant_elems.astype(np.float64).sum(axis=ax)
+        out = np.divide(red, recv, out=np.full_like(recv, np.nan),
+                        where=recv > 0)
+        return float(out) if out.ndim == 0 else out
+
+
+def collect(spec: TelemetrySpec, channels, batched: bool) -> TelemetryResult:
+    """Device → host: transpose the scan-stacked [T, (B,) N] channels to
+    batch-major and run the overflow check (the telemetry arm of
+    ``collect_result``'s int64 assert, DESIGN.md §10: counters are
+    tallies, so a negative value means the accumulator wrapped)."""
+
+    def t_major(a):
+        a = np.asarray(a)
+        return a.swapaxes(0, 1) if batched else a
+
+    arrays = [t_major(a) for a in channels]
+    for name, a in zip(TelemetryChannels._fields, arrays):
+        if (a < 0).any():
+            raise OverflowError(
+                f"telemetry counter {name!r} overflowed its accumulator "
+                f"(negative tallies) — rerun with wide_metrics=True")
+    return TelemetryResult(*arrays, spec=spec)

@@ -1,0 +1,125 @@
+"""Structured trace export: Chrome-trace/Perfetto JSON + JSONL event log
+(DESIGN.md §18).
+
+``TraceLog`` collects host-side events — phase spans, instant markers
+(chunk boundaries, checkpoint saves), and per-round counter tracks built
+from a :class:`~repro.obs.telemetry.TelemetryResult` — and renders them
+two ways:
+
+* ``export_chrome(path)`` — the Chrome trace event format
+  (``{"traceEvents": [...]}``), loadable in ``chrome://tracing`` and
+  https://ui.perfetto.dev;
+* ``export_jsonl(path)`` — one JSON object per line, the greppable log.
+
+``annotate(name)`` wraps ``jax.profiler.TraceAnnotation`` (no-op when the
+profiler is unavailable) so the bench harness can label kernel launches
+for device-side profiles without a hard dependency.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import json
+import time
+from typing import Optional
+
+_PID = 1          # single-process traces; tid separates tracks
+TID_PHASES = 1    # host phase spans (build / compile / scan / export)
+TID_MARKS = 2     # instant markers (chunk boundaries, checkpoint saves)
+
+
+class TraceLog:
+    """Append-only host event log with a monotonic µs clock."""
+
+    def __init__(self, clock=time.perf_counter):
+        self._clock = clock
+        self._t0 = clock()
+        self.events: list[dict] = []
+
+    def _now_us(self) -> float:
+        return (self._clock() - self._t0) * 1e6
+
+    def instant(self, name: str, tid: int = TID_MARKS, **args):
+        """A zero-duration marker (Chrome ``ph: "i"``)."""
+        self.events.append({"name": name, "ph": "i", "s": "t",
+                            "ts": self._now_us(), "pid": _PID, "tid": tid,
+                            "args": args})
+
+    def complete(self, name: str, ts_us: float, dur_us: float,
+                 tid: int = TID_PHASES, **args):
+        """A span with explicit start/duration (Chrome ``ph: "X"``)."""
+        self.events.append({"name": name, "ph": "X", "ts": ts_us,
+                            "dur": dur_us, "pid": _PID, "tid": tid,
+                            "args": args})
+
+    def counter(self, name: str, values: dict, ts_us: Optional[float] = None):
+        """One sample of a counter track (Chrome ``ph: "C"``)."""
+        self.events.append({"name": name, "ph": "C",
+                            "ts": self._now_us() if ts_us is None else ts_us,
+                            "pid": _PID, "tid": 0,
+                            "args": {k: float(v) for k, v in values.items()}})
+
+    @contextlib.contextmanager
+    def span(self, name: str, **args):
+        """Measure a host phase as a complete event (wall clock)."""
+        t0 = self._now_us()
+        try:
+            yield self
+        finally:
+            self.complete(name, t0, self._now_us() - t0, **args)
+
+    # -- telemetry counter tracks --------------------------------------------
+
+    def add_round_counters(self, tele, prefix: str = "",
+                           round_us: float = 1000.0,
+                           ts0_us: Optional[float] = None):
+        """Render an (unbatched) TelemetryResult as per-round counter
+        tracks, one tick = ``round_us`` on the trace timeline: redundancy
+        ratio, staleness max, buffer occupancy total, divergence total.
+        """
+        if tele.batch is not None:
+            raise ValueError(
+                "add_round_counters wants a single-run telemetry result — "
+                "pass tele.cell(b) for one cell of a batched run")
+        red = tele.redundancy_over_time()
+        t0 = self._now_us() if ts0_us is None else ts0_us
+        rounds = tele.recv_elems.shape[0]
+        for t in range(rounds):
+            ts = t0 + t * round_us
+            vals = {
+                "recv_elems": int(tele.recv_elems[t].sum()),
+                "novel_elems": int(tele.novel_elems[t].sum()),
+                "buf_elems": int(tele.buf_elems[t].sum()),
+                "div_gap": int(tele.div_gap[t].sum()),
+                "stale_max": int(tele.stale_rounds[t].max()),
+                "ack_lag_max": int(tele.ack_lag[t].max()),
+            }
+            if red[t] == red[t]:              # not NaN
+                vals["redundancy"] = float(red[t])
+            self.counter(f"{prefix}round", vals, ts_us=ts)
+
+    # -- export --------------------------------------------------------------
+
+    def export_chrome(self, path) -> None:
+        """Chrome trace event format (Perfetto/chrome://tracing JSON)."""
+        doc = {"traceEvents": self.events, "displayTimeUnit": "ms"}
+        with open(path, "w") as f:
+            json.dump(doc, f)
+
+    def export_jsonl(self, path) -> None:
+        """One JSON event per line."""
+        with open(path, "w") as f:
+            for ev in self.events:
+                f.write(json.dumps(ev) + "\n")
+
+
+def annotate(name: str):
+    """Label a region for device-side profiling: resolves to
+    ``jax.profiler.TraceAnnotation`` when available, else a no-op context
+    (keeps the bench harness runnable on stripped-down jax builds)."""
+    try:
+        import jax
+
+        return jax.profiler.TraceAnnotation(name)
+    except (ImportError, AttributeError):
+        return contextlib.nullcontext()

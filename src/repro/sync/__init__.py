@@ -1,5 +1,6 @@
 """Synchronization algorithms and network simulation (paper §IV-V)."""
 
+from repro.obs.telemetry import TelemetryResult, TelemetrySpec
 from repro.sync.algorithms import ALGORITHMS, RESYNC_ALGORITHMS, SyncAlgorithm
 from repro.sync.digest import DigestSpec
 from repro.sync.engine import ENGINES
@@ -26,6 +27,8 @@ __all__ = [
     "StoreSpec",
     "SweepSpec",
     "SyncAlgorithm",
+    "TelemetryResult",
+    "TelemetrySpec",
     "digest",
     "engine",
     "faults",

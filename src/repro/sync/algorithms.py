@@ -246,13 +246,23 @@ class SyncAlgorithm:
 
     # -- one synchronous round -------------------------------------------------
 
-    def round_step(self, carry: AlgoCarry, op_delta,
-                   faults=None) -> tuple[AlgoCarry, RoundMetrics]:
+    def round_step(self, carry: AlgoCarry, op_delta, faults=None,
+                   recv_counts: bool = False):
         """One synchronous round; ``faults`` is an optional per-round
         ``faults.RoundFaults`` mask triple (None ⇒ fault-free; leaves carry
-        a leading [B] axis when ``batch`` is set)."""
+        a leading [B] axis when ``batch`` is set).
+
+        Returns ``(carry, metrics)``; with ``recv_counts=True`` (the
+        telemetry layer, DESIGN.md §18) a third element ``(recv, novel)``
+        — per-node int32 received / novel-at-join element tallies summed
+        over the P receive slots, identical across engines (the kernel
+        engines reuse the kernels' ``cnt``/``dsz`` outputs, the reference
+        loop re-derives them per slot). The default path is textually
+        unchanged, which keeps ``telemetry=None`` bit-identical.
+        """
         if self.is_resync:
-            return self._resync_round(carry, op_delta, faults)
+            return self._resync_round(carry, op_delta, faults,
+                                      recv_counts=recv_counts)
         lat, topo = self.lattice, self.topo
         p = topo.max_degree
         sax = self.slot_axis
@@ -265,8 +275,10 @@ class SyncAlgorithm:
             # execute inside one kernels.round_step pallas_call; the engine
             # epilogue reuses the kernel's exact per-(node, slot) counts, so
             # the metric arithmetic below is shared verbatim.
-            x, buf, buf_elems, tx, cpu, state_elems = engine_mod.mega_round(
-                self, x, buf, buf_elems, op_delta, acc, faults=faults)
+            x, buf, buf_elems, tx, cpu, state_elems, recv = \
+                engine_mod.mega_round(self, x, buf, buf_elems, op_delta,
+                                      acc, faults=faults,
+                                      want_recv=recv_counts)
             node_mem = state_elems.astype(acc) + buf_elems.astype(acc)
             metrics = RoundMetrics(
                 tx=tx,
@@ -274,7 +286,8 @@ class SyncAlgorithm:
                 cpu=cpu,
                 max_mem_node=jnp.max(node_mem, axis=-1),
             )
-            return AlgoCarry(x=x, buf=buf, buf_elems=buf_elems), metrics
+            out = AlgoCarry(x=x, buf=buf, buf_elems=buf_elems)
+            return (out, metrics, recv) if recv_counts else (out, metrics)
 
         cpu = jnp.zeros((), acc)
 
@@ -324,11 +337,13 @@ class SyncAlgorithm:
 
         # (4) receive all messages, sequentially per slot  [Alg 2, lines 14-17]
         if self.resolved_engine == "fused":
-            x, buf, buf_elems, cpu = engine_mod.fused_receive(
-                self, x, buf, buf_elems, cpu, d_all, acc, faults=faults)
+            x, buf, buf_elems, cpu, recv = engine_mod.fused_receive(
+                self, x, buf, buf_elems, cpu, d_all, acc, faults=faults,
+                want_recv=recv_counts)
         else:
-            x, buf, buf_elems, cpu = self._receive_reference(
-                x, buf, buf_elems, cpu, d_all, acc, faults=faults)
+            x, buf, buf_elems, cpu, recv = self._receive_reference(
+                x, buf, buf_elems, cpu, d_all, acc, faults=faults,
+                want_recv=recv_counts)
 
         # (5) metrics
         state_elems = lat.size(x).astype(jnp.int32)             # [(B,) N]
@@ -339,7 +354,8 @@ class SyncAlgorithm:
             cpu=cpu,
             max_mem_node=jnp.max(node_mem, axis=-1),
         )
-        return AlgoCarry(x=x, buf=buf, buf_elems=buf_elems), metrics
+        out = AlgoCarry(x=x, buf=buf, buf_elems=buf_elems)
+        return (out, metrics, recv) if recv_counts else (out, metrics)
 
     def _bcast_sends(self, state):
         """Broadcast one per-node state over the P send slots:
@@ -369,18 +385,29 @@ class SyncAlgorithm:
 
         return jax.tree.map(sel, a, b, self.lattice.bottom())
 
-    def _join_inbox(self, x, inbox):
+    def _join_inbox(self, x, inbox, want_novel: bool = False):
         """x ⊔ every (pre-masked) inbox slot — the kernel pass of the
         resync receive. The reference loop and the fused ``round_recv``
-        fold are bit-identical (max/or joins are exact)."""
+        fold are bit-identical (max/or joins are exact). With
+        ``want_novel`` (telemetry, DESIGN.md §18) also returns the
+        per-node novel-element tally |Δ(slot, x_running)| summed over
+        slots — the kernels' ``cnt`` output, or an extra Δ+size pass per
+        slot on the reference path."""
         if self.resolved_engine in engine_mod.KERNEL_ENGINES:
-            return engine_mod.fused_join_inbox(self, x, inbox)
+            return engine_mod.fused_join_inbox(self, x, inbox,
+                                               want_novel=want_novel)
+        lat = self.lattice
+        novel = None
         for q in range(self.topo.max_degree):
-            x = self.lattice.join(x, T.slot(inbox, q, axis=self.slot_axis))
-        return x
+            d = T.slot(inbox, q, axis=self.slot_axis)
+            if want_novel:
+                sz = lat.size(lat.delta(d, x)).astype(jnp.int32)
+                novel = sz if novel is None else novel + sz
+            x = lat.join(x, d)
+        return (x, novel) if want_novel else x
 
-    def _resync_round(self, carry: AlgoCarry, op_delta,
-                      faults=None) -> tuple[AlgoCarry, RoundMetrics]:
+    def _resync_round(self, carry: AlgoCarry, op_delta, faults=None,
+                      recv_counts: bool = False):
         """One pipelined anti-entropy round for ``state_driven`` /
         ``digest_driven`` (DESIGN.md §14).
 
@@ -466,7 +493,15 @@ class SyncAlgorithm:
         inbox = T.where_bot(valid, inbox, lat.bottom())
         recv_sizes = lat.size(inbox).astype(jnp.int32)         # [.., N, P]
         cpu = cpu + self._msum(recv_sizes, acc)
-        x = self._join_inbox(x, inbox)
+        if recv_counts:
+            # Telemetry (DESIGN.md §18): received payload elements and the
+            # novel subset at join time. Digest/descent words are metadata,
+            # not state payload — excluded from the redundancy tallies.
+            x, novel = self._join_inbox(x, inbox, want_novel=True)
+            recv = (jnp.sum(recv_sizes, axis=-1), novel)
+        else:
+            x = self._join_inbox(x, inbox)
+            recv = None
 
         if self.name == "state_driven":
             # (4a) responses: Δ(x', request) for every delivered request,
@@ -503,15 +538,20 @@ class SyncAlgorithm:
             cpu=cpu,
             max_mem_node=jnp.max(node_mem, axis=-1),
         )
-        return AlgoCarry(x=x, buf=buf, buf_elems=buf_elems, aux=aux), metrics
+        out = AlgoCarry(x=x, buf=buf, buf_elems=buf_elems, aux=aux)
+        return (out, metrics, recv) if recv_counts else (out, metrics)
 
     def _receive_reference(self, x, buf, buf_elems, cpu, d_all, acc,
-                           faults=None):
+                           faults=None, want_recv: bool = False):
         """Reference receive: sequential per-slot jnp loop (3+ HBM passes
-        over the state per slot — the fused engine's baseline)."""
+        over the state per slot — the fused engine's baseline). The fifth
+        return is the telemetry ``(recv, novel)`` per-node tally pair
+        (DESIGN.md §18) or None; with ``want_recv=False`` the emitted
+        program is unchanged."""
         lat, topo = self.lattice, self.topo
         p = topo.max_degree
         sax = self.slot_axis
+        recv_n = novel_n = None
         for q in range(p):
             sender = topo.nbrs[:, q]
             sslot = topo.rev[:, q]
@@ -525,8 +565,14 @@ class SyncAlgorithm:
             # rank-0) — per-leaf ⊥-aligned select keeps the closure shard-
             # agnostic (the local config extent never appears in it).
             d = T.where_bot(valid, d, lat.bottom())
+            if want_recv:
+                dsz_q = lat.size(d).astype(jnp.int32)           # [(B,) N]
+                recv_n = dsz_q if recv_n is None else recv_n + dsz_q
 
             if self.name == "state":
+                if want_recv:
+                    nv = lat.size(lat.delta(d, x)).astype(jnp.int32)
+                    novel_n = nv if novel_n is None else novel_n + nv
                 cpu = cpu + self._msum(lat.size(d), acc)
                 x = lat.join(x, d)
                 continue
@@ -539,6 +585,12 @@ class SyncAlgorithm:
                 keep = jnp.logical_not(lat.leq(d, x)) & valid   # inflation check
 
             ssz = lat.size(stored).astype(jnp.int32) * keep
+            if want_recv:
+                # RR's extraction IS Δ(d, x_running), so its size doubles
+                # as the novelty tally; classic/bp pay one extra Δ+size.
+                nv = ssz if self.extracts \
+                    else lat.size(lat.delta(d, x)).astype(jnp.int32)
+                novel_n = nv if novel_n is None else novel_n + nv
             cpu = cpu + self._msum(lat.size(d), acc) + self._msum(ssz, acc)
             x = lat.join(x, d)
             if self.per_origin:
@@ -548,4 +600,5 @@ class SyncAlgorithm:
             else:
                 buf = T.where(keep, lat.join(buf, stored), buf)
             buf_elems = buf_elems + ssz
-        return x, buf, buf_elems, cpu
+        recv = (recv_n, novel_n) if want_recv else None
+        return x, buf, buf_elems, cpu, recv

@@ -85,12 +85,15 @@ def _fold_slots(stack, kind: str):
 
 
 def fused_receive(algo, x, buf, buf_elems, cpu, d_all, acc_dtype,
-                  faults=None):
+                  faults=None, want_recv: bool = False):
     """Execute Alg 2 lines 14-17 for all P slots in one kernel pass.
 
     ``algo`` duck-types SyncAlgorithm (name/flags/lattice/topo). Returns the
-    updated ``(x, buf, buf_elems, cpu)`` with semantics bit-identical to the
-    reference per-slot loop:
+    updated ``(x, buf, buf_elems, cpu, recv)`` with semantics bit-identical
+    to the reference per-slot loop; ``recv`` is the telemetry
+    ``(recv_elems, novel_elems)`` per-node pair (DESIGN.md §18) summed from
+    the kernel's always-emitted ``dsz``/``cnt`` tallies when ``want_recv``,
+    else None — the kernel launch itself is unchanged either way:
 
     * the kernel emits per-(node, slot) novel counts ``cnt`` against the
       RUNNING state, so the reference loop's global reductions reduce to
@@ -127,9 +130,11 @@ def fused_receive(algo, x, buf, buf_elems, cpu, d_all, acc_dtype,
         d_stack, x, kind=kind, emit_stored=algo.has_buffer, active=active,
         layout=algo.batch_layout)
 
+    recv = (jnp.sum(dsz, axis=-1, dtype=jnp.int32),
+            jnp.sum(cnt, axis=-1, dtype=jnp.int32)) if want_recv else None
     cpu = cpu + algo._msum(dsz, acc_dtype)
     if not algo.has_buffer:                              # state-based
-        return x, buf, buf_elems, cpu
+        return x, buf, buf_elems, cpu, recv
 
     if algo.extracts:                                    # rr / bprr
         ssz = cnt                                        # |⇓Δ| per (node, slot)
@@ -156,18 +161,21 @@ def fused_receive(algo, x, buf, buf_elems, cpu, d_all, acc_dtype,
 
     cpu = cpu + algo._msum(ssz, acc_dtype)
     buf_elems = buf_elems + jnp.sum(ssz, axis=-1, dtype=jnp.int32)
-    return x, buf, buf_elems, cpu
+    return x, buf, buf_elems, cpu, recv
 
 
-def mega_round(algo, x, buf, buf_elems, op_delta, acc_dtype, faults=None):
+def mega_round(algo, x, buf, buf_elems, op_delta, acc_dtype, faults=None,
+               want_recv: bool = False):
     """Execute Algorithm 1/2 phases (1)-(4) of one round through the
     single-launch megakernel (``kernels.round_step``, DESIGN.md §17).
 
-    Returns ``(x, buf, buf_elems, tx, cpu, state_elems)`` bit-identical to
-    the reference phases: every count the metric arithmetic consumes
+    Returns ``(x, buf, buf_elems, tx, cpu, state_elems, recv)`` bit-identical
+    to the reference phases: every count the metric arithmetic consumes
     (|⇓δ|, send sizes, received/novel sizes, |⇓x'|) is emitted by the
     kernel as exact int32 per-(node, slot) tallies, and the jnp epilogue
-    applies the identical accumulation order. The only per-algorithm work
+    applies the identical accumulation order; ``recv`` sums the kernel's
+    ``dsz``/``cnt`` into the telemetry per-node pair when ``want_recv``
+    (DESIGN.md §18), else None. The only per-algorithm work
     left outside the kernel is the classic/bp keep-gated buffer merge,
     whose inflation check ¬(d ⊑ x) reduces over the whole universe (all
     kernel grid tiles) — it consumes the kernel-emitted masked inbox, like
@@ -224,6 +232,8 @@ def mega_round(algo, x, buf, buf_elems, op_delta, acc_dtype, faults=None):
 
     dsz_op, xsz = unb(dsz_op), unb(xsz)          # [(B,) N]
     ssend, cnt, dsz = unb(ssend), unb(cnt), unb(dsz)  # [(B,) N, P]
+    recv = (jnp.sum(dsz, axis=-1, dtype=jnp.int32),
+            jnp.sum(cnt, axis=-1, dtype=jnp.int32)) if want_recv else None
 
     # -- metric arithmetic, in the reference round_step's exact order --------
     # (1) local update
@@ -272,19 +282,24 @@ def mega_round(algo, x, buf, buf_elems, op_delta, acc_dtype, faults=None):
         cpu = cpu + algo._msum(ssz, acc_dtype)
         buf_elems = buf_elems + jnp.sum(ssz, axis=-1, dtype=jnp.int32)
 
-    return x, buf, buf_elems, tx, cpu, xsz
+    return x, buf, buf_elems, tx, cpu, xsz, recv
 
 
-def fused_join_inbox(algo, x, inbox):
+def fused_join_inbox(algo, x, inbox, want_novel: bool = False):
     """Resync receive (DESIGN.md §14): fold all P pre-masked inbox slots
     into x in one ``round_recv`` pass (state tile VMEM-resident across the
     slots; counts/extractions are not needed — the resync modes compute
     sizes and Δ-responses from the shared masked inbox in jnp, so both
-    engines consume identical operands by construction)."""
+    engines consume identical operands by construction). With
+    ``want_novel`` the kernel's per-slot novelty tallies are summed into
+    the telemetry per-node count and returned as ``(x, novel)``
+    (DESIGN.md §18)."""
     d_stack = jnp.moveaxis(inbox, algo.slot_axis, 0)     # [P, (B,) N, U]
-    xo, _, _, _ = kops.round_recv(
+    xo, _, cnt, _ = kops.round_recv(
         d_stack, x, kind=algo.lattice.kernel_kind, emit_stored=False,
         layout=algo.batch_layout)
+    if want_novel:
+        return xo, jnp.sum(cnt, axis=-1, dtype=jnp.int32)
     return xo
 
 

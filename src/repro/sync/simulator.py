@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lattice import Lattice
+from repro.obs import telemetry as obs
 from repro.sync import treeops as T
 from repro.sync.algorithms import AlgoCarry, RoundMetrics, SyncAlgorithm
 from repro.sync.digest import DigestSpec
@@ -53,6 +54,8 @@ class SimResult(NamedTuple):
     final_x: Any             # [N, ...U] final states ([B, N, ...U] sweeps)
     uniform: Optional[np.ndarray]  # [T] bool: all nodes identical at round
                                    # end (None when tracking was off)
+    telemetry: Any = None    # obs.TelemetryResult when simulate(...,
+                             # telemetry=TelemetrySpec()) — DESIGN.md §18
 
     @property
     def batch(self) -> Optional[int]:
@@ -81,6 +84,8 @@ class SimResult(NamedTuple):
             max_mem_node=self.max_mem_node[b],
             final_x=jax.tree.map(lambda a: a[b], self.final_x),
             uniform=None if self.uniform is None else self.uniform[b],
+            telemetry=None if self.telemetry is None
+            else self.telemetry.cell(b),
         )
 
     def convergence_round(self):
@@ -125,7 +130,7 @@ def converged(lattice: Lattice, final_x) -> bool:
 
 
 def build_round_step(alg: SyncAlgorithm, op_fn, active_rounds: int,
-                     views, track_convergence: bool):
+                     views, track_convergence: bool, telemetry=None):
     """Build the pure ``lax.scan`` body for one op+sync round.
 
     Shared by ``simulate`` (unbatched) and ``simulate_sweep`` (leading
@@ -135,14 +140,23 @@ def build_round_step(alg: SyncAlgorithm, op_fn, active_rounds: int,
 
     ``views``: None, or a ``FaultViews``-like triple whose ``at_round``
     slices the per-round masks out of the scan xs tail.
+
+    ``telemetry``: None, or an ``obs.TelemetrySpec`` — the step's carry
+    becomes ``(TelemetryCarry, carry)`` and its ys grow a third
+    ``TelemetryChannels`` entry (DESIGN.md §18). With ``telemetry=None``
+    the step is the exact program it always was (the bit-identity
+    invariant of ``tests/test_telemetry.py``).
     """
     lattice = alg.lattice
 
     def step(carry, xs):
+        if telemetry is not None:
+            tele, carry = carry
         if views is None:
             t, rf = xs, None
         else:
             t, rf = xs[0], views.at_round(xs[1:])
+        x_before = carry.x
         delta = op_fn(carry.x, t)
         # Confine wide_metrics' x64 tracing to the metric accumulators: an
         # op_fn with unpinned dtypes would otherwise emit int64/float64
@@ -155,7 +169,12 @@ def build_round_step(alg: SyncAlgorithm, op_fn, active_rounds: int,
         if rf is not None:
             gate = gate & rf.up           # a down node executes no ops
         delta = T.where_bot(gate, delta, lattice.bottom())
-        carry, metrics = alg.round_step(carry, delta, faults=rf)
+        if telemetry is not None and telemetry.redundancy:
+            carry, metrics, recv = alg.round_step(carry, delta, faults=rf,
+                                                  recv_counts=True)
+        else:
+            recv = None
+            carry, metrics = alg.round_step(carry, delta, faults=rf)
         if track_convergence:
             # Per-round cluster agreement (time-to-convergence telemetry).
             uni = cluster_uniform(lattice, carry.x, batched=alg.batched)
@@ -164,7 +183,11 @@ def build_round_step(alg: SyncAlgorithm, op_fn, active_rounds: int,
             uni = jnp.zeros((lead,), jnp.bool_)
         else:
             uni = jnp.zeros((), jnp.bool_)
-        return carry, (metrics, uni)
+        if telemetry is None:
+            return carry, (metrics, uni)
+        tele, ch = obs.round_channels(telemetry, alg, tele, x_before, carry,
+                                      recv, rf)
+        return (tele, carry), (metrics, uni, ch)
 
     return step
 
@@ -262,9 +285,13 @@ def _cat_chunks(chunks):
 
 
 def collect_result(carry, metrics, uniform, track_convergence: bool,
-                   batched: bool = False) -> SimResult:
+                   batched: bool = False, telemetry=None,
+                   channels=None) -> SimResult:
     """Device → host: transpose sweep metrics to [B, T], run the overflow
-    check, and assemble the SimResult."""
+    check, and assemble the SimResult. ``telemetry``/``channels`` (the
+    spec and the scan-stacked ``TelemetryChannels`` ys) attach an
+    ``obs.TelemetryResult``, with the same transpose + overflow check
+    applied to every channel."""
 
     def t_major(a):
         a = np.asarray(a)
@@ -286,6 +313,8 @@ def collect_result(carry, metrics, uniform, track_convergence: bool,
         max_mem_node=t_major(metrics.max_mem_node),
         final_x=jax.device_get(carry.x),
         uniform=t_major(uniform) if track_convergence else None,
+        telemetry=None if telemetry is None
+        else obs.collect(telemetry, channels, batched),
     )
 
 
@@ -304,6 +333,7 @@ def simulate(
     faults: Optional[FaultSchedule] = None,
     track_convergence: Optional[bool] = None,
     digest: Optional[DigestSpec] = None,
+    telemetry: Optional[obs.TelemetrySpec] = None,
 ) -> SimResult:
     """Run ``active_rounds`` op+sync rounds plus ``quiet_rounds`` sync-only
     drain rounds of ``algo`` over ``topo``.
@@ -327,6 +357,12 @@ def simulate(
 
     ``digest`` overrides the block geometry of the ``digest_driven``
     algorithm (DESIGN.md §14); ignored by every other algorithm.
+
+    ``telemetry`` opts into the in-scan diagnostic channels (DESIGN.md
+    §18): pass an ``obs.TelemetrySpec`` and ``SimResult.telemetry`` comes
+    back as a per-round, per-node ``obs.TelemetryResult`` (redundancy,
+    staleness, buffer occupancy, divergence gap). ``telemetry=None``
+    leaves every other result field bit-identical to a run without it.
     """
     alg = SyncAlgorithm(name=algo, lattice=lattice, topo=topo, loo=loo,
                         engine=engine, digest=digest)
@@ -342,11 +378,17 @@ def simulate(
         track_convergence = faults is not None
 
     step = build_round_step(alg, op_fn, active_rounds, views,
-                            track_convergence)
+                            track_convergence, telemetry)
     if views is None:
         xs = jnp.arange(total)
     else:
         xs = (jnp.arange(total), views.recv_ok, views.send_ok, views.up)
 
-    carry, (metrics, uniform) = run_scan(step, carry0, xs, jit, wide_metrics)
-    return collect_result(carry, metrics, uniform, track_convergence)
+    if telemetry is None:
+        carry, (metrics, uniform) = run_scan(step, carry0, xs, jit,
+                                             wide_metrics)
+        return collect_result(carry, metrics, uniform, track_convergence)
+    carry, (metrics, uniform, channels) = run_scan(
+        step, (obs.init_carry(alg), carry0), xs, jit, wide_metrics)
+    return collect_result(carry[1], metrics, uniform, track_convergence,
+                          telemetry=telemetry, channels=channels)

@@ -55,6 +55,7 @@ Workload generators for the store live in ``sync/workloads.py``.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from pathlib import Path
 from typing import Any, Callable, NamedTuple, Optional, Union
@@ -65,7 +66,8 @@ import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.core.lattice import BatchWeights, Lattice
-from repro.sync.algorithms import RoundMetrics, SyncAlgorithm
+from repro.obs import telemetry as obs
+from repro.sync.algorithms import RoundMetrics, SyncAlgorithm, metric_dtype
 from repro.sync.digest import DigestSpec
 from repro.sync.faults import FaultSchedule, FaultViews
 from repro.sync.simulator import (
@@ -218,6 +220,14 @@ class StoreResult(NamedTuple):
         bit-identity invariant is stated over."""
         self._per_object("object_result")
         return self.sim.cell(b)
+
+    @property
+    def telemetry(self):
+        """The run's ``obs.TelemetryResult`` (None unless requested):
+        [B, T, N] per-object channels, or — with ``object_metrics=False``
+        — [S, T, N] per-shard partials (sums for recv/novel/buf, maxes
+        for stale/ack/gap; DESIGN.md §18)."""
+        return self.sim.telemetry
 
     def convergence_round(self):
         """Per-object first round after which all nodes stayed identical
@@ -399,7 +409,7 @@ def _validate_block_op_fn(op_fn, lattice: Lattice, n: int, block: int,
             + (f" (block-shape trace failed with: {err})" if err else ""))
 
 
-def _reduce_step(step):
+def _reduce_step(step, telemetry=None):
     """Wrap the round step to reduce the per-object metrics to ONE
     partial sum inside the scan body (DESIGN.md §16). ``omask`` rides the
     CARRY — never the closure — so under ``shard_map`` each device holds
@@ -407,11 +417,19 @@ def _reduce_step(step):
     (gathered to [S]); integer sums/maxes make the host-side total
     bit-identical to the per-object reduction. Padded objects are masked
     out here (a padded digest_driven object still pays the Merkle floor,
-    so dropping rows after the fact would not be enough)."""
+    so dropping rows after the fact would not be enough).
+
+    With ``telemetry`` the step's third ys entry (the [B, N] channels,
+    DESIGN.md §18) reduces the same way — object-axis sums for the
+    payload tallies, maxes for the lag/gap channels — re-emitted in the
+    metric accumulator dtype so store-scale sums cannot wrap int32."""
 
     def wrapped(carry, xs):
         om, inner = carry
-        inner, (m, uni) = step(inner, xs)
+        if telemetry is None:
+            inner, (m, uni) = step(inner, xs)
+        else:
+            inner, (m, uni, ch) = step(inner, xs)
 
         def red(v):
             return jnp.sum(jnp.where(om, v, 0), keepdims=True)
@@ -421,7 +439,25 @@ def _reduce_step(step):
             max_mem_node=jnp.max(jnp.where(om, m.max_mem_node, 0),
                                  keepdims=True))
         uni = jnp.all(uni | ~om, keepdims=True)
-        return (om, inner), (metrics, uni)
+        if telemetry is None:
+            return (om, inner), (metrics, uni)
+
+        mdt = metric_dtype()
+        omn = om[:, None]                        # channels are [B, N]
+
+        def rsum(v):
+            return jnp.sum(jnp.where(omn, v.astype(mdt), 0), axis=0,
+                           keepdims=True)
+
+        def rmax(v):
+            return jnp.max(jnp.where(omn, v.astype(mdt), 0), axis=0,
+                           keepdims=True)
+
+        ch = obs.TelemetryChannels(
+            recv_elems=rsum(ch.recv_elems), novel_elems=rsum(ch.novel_elems),
+            stale_rounds=rmax(ch.stale_rounds), ack_lag=rmax(ch.ack_lag),
+            buf_elems=rsum(ch.buf_elems), div_gap=rmax(ch.div_gap))
+        return (om, inner), (metrics, uni, ch)
 
     return wrapped
 
@@ -445,6 +481,8 @@ def simulate_store(
     checkpoint: Union[Checkpointer, str, Path, None] = None,
     object_metrics: bool = True,
     pad_to: Optional[int] = None,
+    telemetry: Optional[obs.TelemetrySpec] = None,
+    trace=None,
 ) -> StoreResult:
     """Run ``spec.objects`` independent CRDT objects of one
     ``algo`` × ``lattice`` × ``topo`` as one jitted scan.
@@ -479,13 +517,20 @@ def simulate_store(
       partial sums inside the scan — O(T) metric memory instead of
       O(B·T); ``StoreResult.store_*`` aggregates stay exact, per-object
       views raise.
+
+    Observability (DESIGN.md §18): ``telemetry=obs.TelemetrySpec()``
+    attaches per-object [B, T, N] diagnostic channels (per-shard
+    [S, T, N] partials under ``object_metrics=False``); ``trace`` takes
+    an ``obs.TraceLog`` and marks chunk boundaries / checkpoint saves on
+    its timeline.
     """
     return _simulate_store(
         algo, lattice, topo, spec, active_rounds, quiet_rounds, loo=loo,
         jit=jit, engine=engine, wide_metrics=wide_metrics,
         track_convergence=track_convergence, shard=shard, digest=digest,
         layout=layout, chunk_rounds=chunk_rounds, checkpoint=checkpoint,
-        object_metrics=object_metrics, pad_to=pad_to, resume=None)
+        object_metrics=object_metrics, pad_to=pad_to, telemetry=telemetry,
+        trace=trace, resume=None)
 
 
 def resume_store(
@@ -509,6 +554,8 @@ def resume_store(
     layout: str = "rows",
     object_metrics: bool = True,
     pad_to: Optional[int] = None,
+    telemetry: Optional[obs.TelemetrySpec] = None,
+    trace=None,
 ) -> StoreResult:
     """Restore a chunk-boundary checkpoint and run the REMAINING rounds.
 
@@ -544,14 +591,15 @@ def resume_store(
         jit=jit, engine=engine, wide_metrics=wide_metrics,
         track_convergence=track_convergence, shard=shard, digest=digest,
         layout=layout, chunk_rounds=chunk_rounds, checkpoint=ckpt,
-        object_metrics=object_metrics, pad_to=pad_to,
-        resume=(ckpt, step, extra))
+        object_metrics=object_metrics, pad_to=pad_to, telemetry=telemetry,
+        trace=trace, resume=(ckpt, step, extra))
 
 
 def _simulate_store(algo, lattice, topo, spec, active_rounds, quiet_rounds,
                     *, loo, jit, engine, wide_metrics, track_convergence,
                     shard, digest, layout, chunk_rounds, checkpoint,
-                    object_metrics, pad_to, resume) -> StoreResult:
+                    object_metrics, pad_to, telemetry, trace,
+                    resume) -> StoreResult:
     if layout not in LAYOUTS:
         raise ValueError(f"unknown layout {layout!r}; one of {LAYOUTS}")
     if chunk_rounds is not None and chunk_rounds < 1:
@@ -623,11 +671,13 @@ def _simulate_store(algo, lattice, topo, spec, active_rounds, quiet_rounds,
         track_convergence = views is not None
 
     step = build_round_step(alg, op_fn, active_rounds, views,
-                            track_convergence)
+                            track_convergence, telemetry)
+    if telemetry is not None:
+        carry0 = (obs.init_carry(alg), carry0)
     if not object_metrics:
         # The pad mask rides the carry (not the closure) so it shards
         # with P("object") like every other carry leaf.
-        step = _reduce_step(step)
+        step = _reduce_step(step, telemetry)
         carry0 = (jnp.arange(b_pad) < b, carry0)
     if views is None:
         xs = jnp.arange(total)
@@ -646,7 +696,7 @@ def _simulate_store(algo, lattice, topo, spec, active_rounds, quiet_rounds,
         expect = _run_fingerprint(
             algo, engine, lattice, topo, layout, loo, b, b_pad, total,
             chunk_rounds, object_metrics, track_convergence, wide_metrics,
-            shard, digest)
+            shard, digest, telemetry)
         bad = [k for k, v in expect.items() if extra.get(k) != v]
         if bad:
             detail = ", ".join(
@@ -665,6 +715,10 @@ def _simulate_store(algo, lattice, topo, spec, active_rounds, quiet_rounds,
                                 cpu=np.zeros((at, sdim), mdt),
                                 max_mem_node=np.zeros((at, sdim), mdt)),
                    np.zeros((at, sdim), bool))
+        if telemetry is not None:
+            cdt = np.int32 if object_metrics else mdt
+            ys_like = ys_like + (obs.TelemetryChannels(
+                *(np.zeros((at, sdim, n), cdt) for _ in range(6))),)
         like = {"carry": carry0, "ys": ys_like}
         if wide_metrics:
             # int64 metric prefixes would silently downcast to int32
@@ -678,29 +732,53 @@ def _simulate_store(algo, lattice, topo, spec, active_rounds, quiet_rounds,
         start = at
 
     # -- run -----------------------------------------------------------------
-    if chunk_rounds is None:
-        carry, (metrics, uniform) = run_scan(step, carry0, xs, jit,
-                                             wide_metrics, wrap=wrap)
+    scan_span = trace.span("store_scan", algo=algo, engine=engine,
+                           objects=b, rounds=total) \
+        if trace is not None else contextlib.nullcontext()
+    with scan_span:
+        if chunk_rounds is None:
+            carry, ys = run_scan(step, carry0, xs, jit, wide_metrics,
+                                 wrap=wrap)
+        else:
+            on_chunk = None
+            fp = None
+            if ckpt is not None:
+                fp = _run_fingerprint(
+                    algo, engine, lattice, topo, layout, loo, b, b_pad,
+                    total, chunk_rounds, object_metrics, track_convergence,
+                    wide_metrics, shard, digest, telemetry)
+            if ckpt is not None or trace is not None:
+
+                def on_chunk(rounds_done, carry, ys_host):
+                    if trace is not None:
+                        trace.instant("chunk_boundary",
+                                      rounds_done=int(rounds_done))
+                    if ckpt is None:
+                        return
+                    save_span = trace.span(
+                        "checkpoint_save", rounds_done=int(rounds_done)) \
+                        if trace is not None else contextlib.nullcontext()
+                    with save_span:
+                        ckpt.save(rounds_done,
+                                  {"carry": jax.device_get(carry),
+                                   "ys": ys_host},
+                                  extra=fp)
+
+            carry, ys = run_scan_chunked(
+                step, carry0, xs, jit, wide_metrics, chunk_rounds, wrap=wrap,
+                on_chunk=on_chunk, start=start, ys_prefix=ys_prefix)
+    if telemetry is None:
+        metrics, uniform = ys
+        channels = None
     else:
-        on_chunk = None
-        if ckpt is not None:
-            fp = _run_fingerprint(
-                algo, engine, lattice, topo, layout, loo, b, b_pad, total,
-                chunk_rounds, object_metrics, track_convergence,
-                wide_metrics, shard, digest)
-
-            def on_chunk(rounds_done, carry, ys_host):
-                ckpt.save(rounds_done,
-                          {"carry": jax.device_get(carry), "ys": ys_host},
-                          extra=fp)
-
-        carry, (metrics, uniform) = run_scan_chunked(
-            step, carry0, xs, jit, wide_metrics, chunk_rounds, wrap=wrap,
-            on_chunk=on_chunk, start=start, ys_prefix=ys_prefix)
+        metrics, uniform, channels = ys
     if not object_metrics:
         _, carry = carry
+    if telemetry is not None:
+        _, carry = carry
     sim = collect_result(carry, metrics, uniform, track_convergence,
-                         batched=True)
+                         batched=True, telemetry=telemetry,
+                         channels=channels)
 
     # -- mask the pad back out ------------------------------------------------
     if pad:
@@ -709,7 +787,9 @@ def _simulate_store(algo, lattice, topo, spec, active_rounds, quiet_rounds,
             sim = sim._replace(
                 tx=sim.tx[:b], mem=sim.mem[:b], cpu=sim.cpu[:b],
                 max_mem_node=sim.max_mem_node[:b], final_x=fx,
-                uniform=None if sim.uniform is None else sim.uniform[:b])
+                uniform=None if sim.uniform is None else sim.uniform[:b],
+                telemetry=None if sim.telemetry is None
+                else sim.telemetry.take_lead(b))
         else:
             sim = sim._replace(final_x=fx)   # metrics already pad-masked
 
@@ -728,7 +808,8 @@ def _simulate_store(algo, lattice, topo, spec, active_rounds, quiet_rounds,
 
 def _run_fingerprint(algo, engine, lattice, topo, layout, loo, objects,
                      padded, total_rounds, chunk_rounds, object_metrics,
-                     track_convergence, wide_metrics, shard, digest) -> dict:
+                     track_convergence, wide_metrics, shard, digest,
+                     telemetry=None) -> dict:
     """JSON-safe identity of a store run, written into every chunk
     checkpoint's manifest and verified on resume — restoring a bundle
     into a differently-configured run would type-check (same carry
@@ -750,4 +831,7 @@ def _run_fingerprint(algo, engine, lattice, topo, layout, loo, objects,
         "wide_metrics": bool(wide_metrics),
         "shard": bool(shard),
         "digest": digest is not None,
+        # Telemetry changes the carry/ys pytrees, so a bundle written
+        # with a different spec cannot restore into this run.
+        "telemetry": None if telemetry is None else telemetry.asdict(),
     }

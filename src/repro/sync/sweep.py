@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lattice import Lattice
+from repro.obs import telemetry as obs
 from repro.sync.algorithms import SyncAlgorithm
 from repro.sync.digest import DigestSpec
 from repro.sync.faults import FaultSchedule, FaultViews
@@ -141,6 +142,7 @@ def simulate_sweep(
     track_convergence: Optional[bool] = None,
     shard: bool = False,
     digest: Optional[DigestSpec] = None,
+    telemetry: Optional[obs.TelemetrySpec] = None,
 ) -> SimResult:
     """Run ``spec.batch`` configurations of ``algo`` over the shared
     ``topo``/``lattice`` as one jitted scan.
@@ -154,6 +156,11 @@ def simulate_sweep(
     schedule (matching ``simulate``). ``shard=True`` splits the config
     axis across local devices via ``shard_map`` (no-op on one device;
     requires ``batch`` divisible by the device count).
+
+    ``telemetry`` attaches the in-scan diagnostic channels (DESIGN.md
+    §18) as [B, T, N] arrays — ``res.telemetry.cell(b)`` matches the
+    single run's channels, and the extra ys shard with the config axis
+    under ``shard=True``.
     """
     alg = SyncAlgorithm(name=algo, lattice=lattice, topo=topo, loo=loo,
                         engine=engine, batch=spec.batch, digest=digest)
@@ -164,7 +171,7 @@ def simulate_sweep(
         track_convergence = views is not None
 
     step = build_round_step(alg, spec.op_fn, active_rounds, views,
-                            track_convergence)
+                            track_convergence, telemetry)
     if views is None:
         xs = jnp.arange(total)
     else:
@@ -177,7 +184,13 @@ def simulate_sweep(
         def wrap(run):
             return launch_mesh.shard_sweep_scan(run, spec.batch)
 
-    carry, (metrics, uniform) = run_scan(step, carry0, xs, jit, wide_metrics,
-                                         wrap=wrap)
-    return collect_result(carry, metrics, uniform, track_convergence,
-                          batched=True)
+    if telemetry is None:
+        carry, (metrics, uniform) = run_scan(step, carry0, xs, jit,
+                                             wide_metrics, wrap=wrap)
+        return collect_result(carry, metrics, uniform, track_convergence,
+                              batched=True)
+    carry, (metrics, uniform, channels) = run_scan(
+        step, (obs.init_carry(alg), carry0), xs, jit, wide_metrics, wrap=wrap)
+    return collect_result(carry[1], metrics, uniform, track_convergence,
+                          batched=True, telemetry=telemetry,
+                          channels=channels)

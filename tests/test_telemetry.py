@@ -1,0 +1,468 @@
+"""In-scan telemetry (DESIGN.md §18): oracle equality, disabled-path
+bit-identity, batch-axis coverage, trace export, dtype discipline.
+
+The two load-bearing invariants:
+
+* ``telemetry=None`` leaves every pre-existing SimResult field
+  bit-identical — the scan program must be textually unchanged;
+* every channel the scan emits equals ``obs.oracle.oracle_channels``'s
+  independent replay (plain Python + lattice primitives, nothing shared
+  with the engines) across algorithms × lattices × engines × faults.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import GSet, GCounter, LWWMap
+from repro.obs import TelemetryChannels, TelemetryResult, TelemetrySpec, TraceLog
+from repro.obs import telemetry as obs_telemetry
+from repro.obs.oracle import oracle_channels
+from repro.sync import (
+    ALGORITHMS,
+    FaultSchedule,
+    StoreSpec,
+    SweepSpec,
+    engine,
+    resume_store,
+    simulate,
+    simulate_store,
+    simulate_sweep,
+    topology,
+)
+
+N, T, Q = 6, 5, 6
+ENGINES = ("reference",) + tuple(engine.KERNEL_ENGINES)
+
+
+def gset_ops(n=N, rounds=T):
+    def op_fn(x, t):
+        ids = jnp.arange(n) * rounds + jnp.minimum(t, rounds - 1)
+        d = jnp.zeros((n, n * rounds), jnp.bool_)
+        return d.at[jnp.arange(n), ids].set(True)
+
+    return op_fn, GSet(universe=n * rounds).lattice
+
+
+def gcounter_ops(n=N):
+    def op_fn(x, t):
+        d = jnp.zeros((n, n), jnp.int32)
+        idx = jnp.arange(n)
+        return d.at[idx, idx].set(x[idx, idx] + 1)
+
+    return op_fn, GCounter(n).lattice
+
+
+def lww_ops(n=N):
+    """Lex-pair states (no dense kernel): reference-fallback telemetry."""
+    lm = LWWMap(num_keys=n)
+
+    def op_fn(x, t):
+        ts, vals = x
+        idx = jnp.arange(n)
+        dt = jnp.zeros_like(ts).at[idx, idx].set(t.astype(ts.dtype) + 1)
+        dv = jnp.zeros_like(vals).at[idx, idx].set(idx.astype(vals.dtype) * 3)
+        return (dt, dv)
+
+    return op_fn, lm.lattice
+
+
+WORKLOADS = {"gset": gset_ops, "gcounter": gcounter_ops, "lww": lww_ops}
+
+
+def _loss_churn(topo, total, seed):
+    return FaultSchedule.bernoulli(topo, total, 0.25, seed=seed).compose(
+        FaultSchedule.churn(topo, total, [(2, 2, 5)]))
+
+
+def _assert_channels_equal(got: TelemetryResult, want: TelemetryResult, ctx):
+    for f in TelemetryChannels._fields:
+        np.testing.assert_array_equal(
+            getattr(got, f), getattr(want, f), err_msg=f"{ctx}: {f}")
+
+
+def _assert_sim_identical(a, b, ctx):
+    fa = a.final_x if isinstance(a.final_x, (list, tuple)) else (a.final_x,)
+    fb = b.final_x if isinstance(b.final_x, (list, tuple)) else (b.final_x,)
+    for la, lb in zip(fa, fb):
+        np.testing.assert_array_equal(la, lb, err_msg=f"{ctx}: final state")
+    for f in ("tx", "mem", "cpu", "max_mem_node"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f),
+                                      err_msg=f"{ctx}: {f}")
+    assert (a.uniform is None) == (b.uniform is None), ctx
+    if a.uniform is not None:
+        np.testing.assert_array_equal(a.uniform, b.uniform,
+                                      err_msg=f"{ctx}: uniform")
+
+
+# -- the oracle property -------------------------------------------------------
+
+
+@pytest.mark.parametrize("eng", ENGINES)
+@pytest.mark.parametrize("algo", ALGORITHMS)
+def test_channels_match_oracle(algo, eng):
+    op_fn, lat = gset_ops()
+    topo = topology.partial_mesh(N, 2)
+    res = simulate(algo, lat, topo, op_fn, T, quiet_rounds=Q, engine=eng,
+                   telemetry=TelemetrySpec())
+    ora = oracle_channels(algo, lat, topo, op_fn, T, quiet_rounds=Q)
+    _assert_channels_equal(res.telemetry, ora, f"{algo}/{eng}")
+
+
+@pytest.mark.parametrize("eng", ENGINES)
+@pytest.mark.parametrize("algo", ALGORITHMS)
+def test_channels_match_oracle_faulted(algo, eng):
+    op_fn, lat = gset_ops()
+    topo = topology.partial_mesh(N, 2)
+    faults = _loss_churn(topo, T + Q, seed=7)
+    res = simulate(algo, lat, topo, op_fn, T, quiet_rounds=Q, engine=eng,
+                   faults=faults, telemetry=TelemetrySpec())
+    ora = oracle_channels(algo, lat, topo, op_fn, T, quiet_rounds=Q,
+                          faults=faults)
+    _assert_channels_equal(res.telemetry, ora, f"{algo}/{eng}/faulted")
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_channels_match_oracle_property(data):
+    """Hypothesis sweep of the oracle property: random algorithm ×
+    lattice × topology × engine × fault seed."""
+    algo = data.draw(st.sampled_from(ALGORITHMS), label="algo")
+    wname = data.draw(st.sampled_from(sorted(WORKLOADS)), label="workload")
+    if algo == "digest_driven" and wname == "lww":
+        wname = "gset"                    # digests need a dense state
+    tname = data.draw(st.sampled_from(["mesh", "tree", "full"]),
+                      label="topology")
+    eng = data.draw(st.sampled_from(ENGINES), label="engine")
+    seed = data.draw(st.integers(0, 2**16), label="seed")
+    with_faults = data.draw(st.booleans(), label="faults")
+
+    op_fn, lat = WORKLOADS[wname]()
+    topo = topology.by_name(tname, N)
+    faults = _loss_churn(topo, T + Q, seed) if with_faults else None
+    res = simulate(algo, lat, topo, op_fn, T, quiet_rounds=Q, engine=eng,
+                   faults=faults, telemetry=TelemetrySpec())
+    ora = oracle_channels(algo, lat, topo, op_fn, T, quiet_rounds=Q,
+                          faults=faults)
+    _assert_channels_equal(res.telemetry, ora,
+                           f"{algo}/{wname}/{tname}/{eng}/seed{seed}")
+
+
+# -- disabled-path bit-identity ------------------------------------------------
+
+
+@pytest.mark.parametrize("eng", ENGINES)
+@pytest.mark.parametrize("algo", ALGORITHMS)
+def test_telemetry_off_is_bit_identical(algo, eng):
+    """telemetry=TelemetrySpec() must not perturb ANY pre-existing result
+    field vs telemetry=None — same states, same metrics, bit for bit."""
+    op_fn, lat = gset_ops()
+    topo = topology.partial_mesh(N, 2)
+    faults = _loss_churn(topo, T + Q, seed=3)
+    on = simulate(algo, lat, topo, op_fn, T, quiet_rounds=Q, engine=eng,
+                  faults=faults, telemetry=TelemetrySpec())
+    off = simulate(algo, lat, topo, op_fn, T, quiet_rounds=Q, engine=eng,
+                   faults=faults)
+    assert off.telemetry is None
+    assert on.telemetry is not None
+    _assert_sim_identical(on, off, f"{algo}/{eng}")
+
+
+def test_spec_groups_gate_channels():
+    """Disabled channel groups come back as zeros; enabled groups are
+    unchanged (the ys pytree stays static for chunked scans)."""
+    op_fn, lat = gset_ops()
+    topo = topology.ring(N)
+    full_spec = simulate("classic", lat, topo, op_fn, T, quiet_rounds=Q,
+                         telemetry=TelemetrySpec()).telemetry
+    only_red = simulate("classic", lat, topo, op_fn, T, quiet_rounds=Q,
+                        telemetry=TelemetrySpec(
+                            staleness=False, buffer=False,
+                            divergence=False)).telemetry
+    np.testing.assert_array_equal(only_red.recv_elems, full_spec.recv_elems)
+    np.testing.assert_array_equal(only_red.novel_elems, full_spec.novel_elems)
+    assert (only_red.stale_rounds == 0).all()
+    assert (only_red.buf_elems == 0).all()
+    assert (only_red.div_gap == 0).all()
+    none_spec = simulate("classic", lat, topo, op_fn, T, quiet_rounds=Q,
+                         telemetry=TelemetrySpec(
+                             redundancy=False, staleness=False,
+                             buffer=False, divergence=False)).telemetry
+    for f in TelemetryChannels._fields:
+        assert (getattr(none_spec, f) == 0).all(), f
+
+
+# -- channel semantics ---------------------------------------------------------
+
+
+def test_redundancy_ordering_classic_above_bprr():
+    """The paper's headline mechanism: classic δ-groups re-ship known
+    state, BP+RR ships almost none of it."""
+    op_fn, lat = gset_ops()
+    topo = topology.partial_mesh(N, 4)
+    red = {}
+    for algo in ("classic", "bprr"):
+        res = simulate(algo, lat, topo, op_fn, T, quiet_rounds=Q,
+                       telemetry=TelemetrySpec())
+        red[algo] = res.telemetry.total_redundancy()
+    assert red["classic"] > red["bprr"]
+
+
+def test_div_gap_drains_to_zero():
+    op_fn, lat = gset_ops()
+    topo = topology.ring(N)
+    tel = simulate("bprr", lat, topo, op_fn, T, quiet_rounds=Q,
+                   telemetry=TelemetrySpec()).telemetry
+    assert (tel.div_gap[:T] > 0).any()       # divergence while ops flow
+    assert (tel.div_gap[-1] == 0).all()      # converged after the drain
+
+
+def test_stale_rounds_grow_under_partition():
+    op_fn, lat = gset_ops()
+    topo = topology.ring(N)
+    total = T + Q
+    cut = FaultSchedule.partition(topo, total, start=1, stop=total - 2,
+                                  groups=[0] * (N // 2) + [1] * (N - N // 2))
+    tel = simulate("state", lat, topo, op_fn, 2, quiet_rounds=total - 2,
+                   faults=cut, telemetry=TelemetrySpec()).telemetry
+    # During quiescence inside the partition window nothing new arrives
+    # across the cut, so staleness must climb somewhere.
+    assert tel.stale_rounds[total - 3].max() > 1
+    ora = oracle_channels("state", lat, topo, op_fn, 2,
+                          quiet_rounds=total - 2, faults=cut)
+    _assert_channels_equal(tel, ora, "partition")
+
+
+def test_ack_lag_under_loss():
+    op_fn, lat = gset_ops()
+    topo = topology.ring(N)
+    faults = FaultSchedule.bernoulli(topo, T + Q, 0.5, seed=11)
+    tel = simulate("bp", lat, topo, op_fn, T, quiet_rounds=Q, faults=faults,
+                   telemetry=TelemetrySpec()).telemetry
+    assert tel.ack_lag.max() > 0             # some sends went unacked
+    fault_free = simulate("bp", lat, topo, op_fn, T, quiet_rounds=Q,
+                          telemetry=TelemetrySpec()).telemetry
+    assert (fault_free.ack_lag == 0).all()   # fault-free: always delivered
+
+
+# -- sweep / store batch axes --------------------------------------------------
+
+
+def _shifted_ops(shift, n=N, rounds=T):
+    def op_fn(x, t):
+        ids = (jnp.arange(n) * rounds + jnp.minimum(t, rounds - 1)
+               + shift) % (n * rounds)
+        d = jnp.zeros((n, n * rounds), jnp.bool_)
+        return d.at[jnp.arange(n), ids].set(True)
+
+    return op_fn
+
+
+def _store_ops(n=N, rounds=T):
+    def op_fn(x, t):
+        bdim = x.shape[0]
+        ids = (jnp.arange(n)[None, :] * rounds + jnp.minimum(t, rounds - 1)
+               + jnp.arange(bdim)[:, None]) % (n * rounds)
+        d = jnp.zeros((bdim, n, n * rounds), jnp.bool_)
+        return d.at[jnp.arange(bdim)[:, None], jnp.arange(n)[None, :],
+                    ids].set(True)
+
+    return op_fn
+
+
+@pytest.mark.parametrize("eng", ENGINES)
+def test_sweep_cells_match_single_runs(eng):
+    _, lat = gset_ops()
+    topo = topology.ring(N)
+    B = 3
+    spec = SweepSpec(batch=B,
+                     op_fn=SweepSpec.stack_op([_shifted_ops(s)
+                                               for s in range(B)]))
+    sw = simulate_sweep("bprr", lat, topo, spec, T, quiet_rounds=Q,
+                        engine=eng, telemetry=TelemetrySpec())
+    base = simulate_sweep("bprr", lat, topo, spec, T, quiet_rounds=Q,
+                          engine=eng)
+    _assert_sim_identical(sw, base, f"sweep/{eng}")
+    assert sw.telemetry.batch == B
+    for b in range(B):
+        single = simulate("bprr", lat, topo, _shifted_ops(b), T,
+                          quiet_rounds=Q, engine=eng,
+                          telemetry=TelemetrySpec())
+        _assert_channels_equal(sw.cell(b).telemetry, single.telemetry,
+                               f"sweep cell {b}/{eng}")
+
+
+@pytest.mark.parametrize("eng", ENGINES)
+def test_store_objects_match_single_runs(eng):
+    _, lat = gset_ops()
+    topo = topology.ring(N)
+    B = 3
+    spec = StoreSpec(objects=B, op_fn=_store_ops())
+    st = simulate_store("rr", lat, topo, spec, T, quiet_rounds=Q,
+                        engine=eng, telemetry=TelemetrySpec())
+    base = simulate_store("rr", lat, topo, spec, T, quiet_rounds=Q,
+                          engine=eng)
+    _assert_sim_identical(st.sim, base.sim, f"store/{eng}")
+    for b in range(B):
+        single = simulate("rr", lat, topo, _shifted_ops(b), T,
+                          quiet_rounds=Q, engine=eng,
+                          telemetry=TelemetrySpec())
+        _assert_channels_equal(st.telemetry.cell(b), single.telemetry,
+                               f"store object {b}/{eng}")
+
+
+def test_store_reduced_telemetry_partials():
+    """object_metrics=False: per-shard channel partials (sums for the
+    tallies, maxes for the lags) equal the host reduction of the
+    per-object channels, in the metric accumulator dtype."""
+    _, lat = gset_ops()
+    topo = topology.ring(N)
+    spec = StoreSpec(objects=3, op_fn=_store_ops())
+    full_t = simulate_store("rr", lat, topo, spec, T, quiet_rounds=Q,
+                            telemetry=TelemetrySpec()).telemetry
+    red_t = simulate_store("rr", lat, topo, spec, T, quiet_rounds=Q,
+                           telemetry=TelemetrySpec(),
+                           object_metrics=False).telemetry
+    for f in ("recv_elems", "novel_elems", "buf_elems"):
+        np.testing.assert_array_equal(getattr(red_t, f).sum(axis=0),
+                                      getattr(full_t, f).sum(axis=0),
+                                      err_msg=f)
+        assert getattr(red_t, f).dtype == np.int64, f
+    for f in ("stale_rounds", "ack_lag", "div_gap"):
+        np.testing.assert_array_equal(getattr(red_t, f).max(axis=0),
+                                      getattr(full_t, f).max(axis=0),
+                                      err_msg=f)
+
+
+def test_store_padding_masks_telemetry():
+    _, lat = gset_ops()
+    topo = topology.ring(N)
+    spec = StoreSpec(objects=3, op_fn=_store_ops())
+    plain = simulate_store("rr", lat, topo, spec, T, quiet_rounds=Q,
+                           telemetry=TelemetrySpec())
+    padded = simulate_store("rr", lat, topo, spec, T, quiet_rounds=Q,
+                            telemetry=TelemetrySpec(), pad_to=4)
+    assert padded.telemetry.batch == 3
+    _assert_channels_equal(padded.telemetry, plain.telemetry, "pad")
+
+
+def test_store_chunked_resume_keeps_telemetry(tmp_path):
+    _, lat = gset_ops()
+    topo = topology.ring(N)
+    spec = StoreSpec(objects=3, op_fn=_store_ops())
+    trace = TraceLog()
+    full_run = simulate_store("bp", lat, topo, spec, T, quiet_rounds=Q,
+                              telemetry=TelemetrySpec(), chunk_rounds=3,
+                              checkpoint=tmp_path, trace=trace)
+    resumed = resume_store("bp", lat, topo, spec, T, quiet_rounds=Q,
+                           checkpoint=tmp_path, step=3,
+                           telemetry=TelemetrySpec())
+    _assert_sim_identical(full_run.sim, resumed.sim, "resume")
+    _assert_channels_equal(full_run.telemetry, resumed.telemetry, "resume")
+    names = [e["name"] for e in trace.events]
+    assert "chunk_boundary" in names
+    assert "checkpoint_save" in names
+    assert "store_scan" in names
+
+
+def test_store_resume_rejects_other_telemetry_config(tmp_path):
+    """The run fingerprint records the telemetry spec: a bundle written
+    with telemetry cannot restore into a run without it (different carry
+    pytree ⇒ silent bit-identity break otherwise)."""
+    _, lat = gset_ops()
+    topo = topology.ring(N)
+    spec = StoreSpec(objects=3, op_fn=_store_ops())
+    simulate_store("bp", lat, topo, spec, T, quiet_rounds=Q,
+                   telemetry=TelemetrySpec(), chunk_rounds=3,
+                   checkpoint=tmp_path)
+    with pytest.raises(ValueError, match="different store run"):
+        resume_store("bp", lat, topo, spec, T, quiet_rounds=Q,
+                     checkpoint=tmp_path, step=3)
+
+
+# -- dtype discipline / overflow (DESIGN.md §10) -------------------------------
+
+
+def test_metric_dtype_consistent_across_paths():
+    """wide_metrics=True must produce int64 metric accumulators on all
+    three drivers (simulate / sweep / store-reduced) — and int32 when
+    opted out — so cross-path comparisons never mix widths."""
+    op_fn, lat = gset_ops()
+    topo = topology.ring(N)
+    r1 = simulate("classic", lat, topo, op_fn, T, quiet_rounds=Q)
+    spec = SweepSpec(batch=2, op_fn=SweepSpec.stack_op(
+        [_shifted_ops(s) for s in range(2)]))
+    r2 = simulate_sweep("classic", lat, topo, spec, T, quiet_rounds=Q)
+    sspec = StoreSpec(objects=2, op_fn=_store_ops())
+    r3 = simulate_store("classic", lat, topo, sspec, T, quiet_rounds=Q,
+                        object_metrics=False)
+    for r in (r1, r2, r3.sim):
+        for f in ("tx", "mem", "cpu", "max_mem_node"):
+            assert getattr(r, f).dtype == np.int64, f
+    narrow = simulate("classic", lat, topo, op_fn, T, quiet_rounds=Q,
+                      wide_metrics=False)
+    assert narrow.tx.dtype == np.int32
+
+
+def test_telemetry_overflow_assert():
+    """Negative channel values (a wrapped accumulator) must fail loudly,
+    exactly like the tx/mem/cpu overflow check."""
+    spec = TelemetrySpec()
+    bad = [np.zeros((4, N), np.int32) for _ in range(6)]
+    bad[1][2, 3] = -7                      # novel_elems wrapped
+    with pytest.raises(OverflowError, match="novel_elems"):
+        obs_telemetry.collect(spec, TelemetryChannels(*bad), batched=False)
+
+
+# -- trace export --------------------------------------------------------------
+
+
+def test_trace_log_exports(tmp_path):
+    log = TraceLog()
+    with log.span("phase", detail=1):
+        log.instant("marker", key="v")
+    log.counter("track", {"a": 1, "b": 2.5})
+    chrome = tmp_path / "trace.json"
+    jsonl = tmp_path / "trace.jsonl"
+    log.export_chrome(chrome)
+    log.export_jsonl(jsonl)
+    doc = json.loads(chrome.read_text())
+    assert set(e["ph"] for e in doc["traceEvents"]) == {"X", "i", "C"}
+    span = next(e for e in doc["traceEvents"] if e["ph"] == "X")
+    assert span["name"] == "phase" and span["dur"] >= 0
+    lines = [json.loads(ln) for ln in jsonl.read_text().splitlines()]
+    assert len(lines) == len(doc["traceEvents"])
+
+
+def test_trace_round_counters():
+    op_fn, lat = gset_ops()
+    topo = topology.ring(N)
+    tel = simulate("classic", lat, topo, op_fn, T, quiet_rounds=Q,
+                   telemetry=TelemetrySpec()).telemetry
+    log = TraceLog()
+    log.add_round_counters(tel, prefix="run/")
+    counters = [e for e in log.events if e["ph"] == "C"]
+    assert len(counters) == T + Q
+    assert counters[0]["name"] == "run/round"
+    got = counters[1]["args"]["recv_elems"]
+    assert got == float(tel.recv_elems[1].sum())
+    # batched results must be refused (one counter track per run)
+    spec = SweepSpec(batch=2, op_fn=SweepSpec.stack_op(
+        [_shifted_ops(s) for s in range(2)]))
+    sw = simulate_sweep("classic", lat, topo, spec, T, quiet_rounds=Q,
+                        telemetry=TelemetrySpec())
+    with pytest.raises(ValueError, match="single-run"):
+        log.add_round_counters(sw.telemetry)
+    log.add_round_counters(sw.telemetry.cell(0))   # the documented escape
+
+
+def test_annotate_is_reentrant():
+    from repro.obs import annotate
+
+    with annotate("outer"):
+        with annotate("inner"):
+            pass
