@@ -123,6 +123,11 @@ def _sec_telemetry(args):
     return fig_telemetry.validate(fig_telemetry.run(smoke=args.smoke))
 
 
+def _sec_provenance(args):
+    from benchmarks import fig_provenance
+    return fig_provenance.validate(fig_provenance.run(smoke=args.smoke))
+
+
 def _sec_roofline(args):
     from benchmarks import roofline_report
     checks = roofline_report.validate_kernel_report(
@@ -151,6 +156,9 @@ REGISTRY = {
                "(DESIGN.md §17)", _sec_engine),
     "telemetry": ("In-scan telemetry — redundancy/staleness channels + "
                   "trace export (DESIGN.md §18)", _sec_telemetry),
+    "provenance": ("Delta provenance — per-element waste attribution, "
+                   "lineage traces, stall detection (DESIGN.md §19)",
+                   _sec_provenance),
     "kernels": ("CRDT Pallas kernels (interpret-mode correctness sweep)",
                 bench_kernels),
     "roofline": ("Roofline — per-kernel measured HLO cost vs pass model, "
@@ -197,10 +205,15 @@ def main() -> None:
         if checks is not None:
             ok = _checks(checks)
             all_ok &= ok
-        sections[name] = {
+        # one summary entry per (section, smoke) — a smoke rerun must not
+        # clobber the full-scale result, and vice versa
+        key = f"{name}@smoke" if args.smoke else name
+        sections[key] = {
+            "section": name,
             "ok": bool(ok),
             "checks": [[n, bool(p)] for n, p in (checks or [])],
             "wall_s": round(time.time() - ts, 1),
+            "ts": _utc_now(),
             "flags": {"full": args.full, "smoke": args.smoke},
         }
     _write_summary(sections)
@@ -210,25 +223,40 @@ def main() -> None:
     sys.exit(0 if all_ok else 1)
 
 
+def _utc_now() -> str:
+    import datetime
+
+    return datetime.datetime.now(datetime.timezone.utc) \
+        .isoformat(timespec="seconds")
+
+
 def _write_summary(sections: dict) -> None:
-    """Merge this run's section outcomes into the repo-root summary.
-    Partial runs (CI's per-section steps) each update their own entries;
-    untouched sections keep their previous result. A stale registry key
-    (renamed/removed section) is dropped rather than kept forever."""
+    """Merge this run's section outcomes into the repo-root summary,
+    idempotently per (section, smoke) key: rerunning a section replaces
+    its own entry in place (timestamped), a smoke run never clobbers the
+    full-scale entry of the same section, and untouched sections keep
+    their previous result. A stale registry key (renamed/removed section)
+    is dropped rather than kept forever."""
     from benchmarks import common as C
+
+    def base(key: str) -> str:
+        return key.split("@", 1)[0]
 
     try:
         doc = json.loads(SUMMARY.read_text())
     except (OSError, ValueError):
         doc = {"sections": {}}
     kept = {k: v for k, v in doc.get("sections", {}).items()
-            if k in REGISTRY}
+            if base(k) in REGISTRY}
     kept.update(sections)
+    order = [k for name in REGISTRY for k in (name, f"{name}@smoke")
+             if k in kept]
     doc = {
-        "sections": {k: kept[k] for k in REGISTRY if k in kept},
+        "sections": {k: kept[k] for k in order},
         "all_ok": all(s["ok"] for s in kept.values()),
-        "sections_run": sorted(kept),
-        "sections_pending": [k for k in REGISTRY if k not in kept],
+        "sections_run": sorted({base(k) for k in kept}),
+        "sections_pending": [k for k in REGISTRY
+                             if not any(base(x) == k for x in kept)],
         "env": C.env_meta(),
     }
     SUMMARY.write_text(json.dumps(doc, indent=2) + "\n")

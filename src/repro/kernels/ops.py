@@ -117,18 +117,22 @@ def buffer_fold(buf, *, kind: str = "max", block=FOLD_BLOCK, interpret=None,
 
 
 def round_recv(d_stack, x, *, kind: str = "max", block=None, interpret=None,
-               emit_stored: bool = True, active=None, layout: str = "grid"):
+               emit_stored: bool = True, emit_cov: bool = False, active=None,
+               layout: str = "grid"):
     """Fused one-pass sync-round receive (DESIGN.md §11).
 
     ``d_stack``: [P, B, U] gathered per-slot δ-groups, ``x``: [B, U]
     states. ``active``: optional bool/int [B, P] per-(node, slot) mask —
     0/False suppresses the slot inside the kernel (topology padding or an
     injected fault, DESIGN.md §12); with ``active=None`` the caller must
-    pre-mask invalid slots to ⊥. Returns ``(x', stored, cnt, dsz)`` where
-    ``x'`` is the state after joining all P slots in order, ``stored``
-    [P, B, U] holds the slot-order RR extractions Δ(d_q, x_running) (None
-    when ``emit_stored=False``), and ``cnt``/``dsz`` [B, P] count each
-    slot's novel / received irreducibles per node.
+    pre-mask invalid slots to ⊥. Returns ``(x', stored, cov, cnt, dsz)``
+    where ``x'`` is the state after joining all P slots in order,
+    ``stored`` [P, B, U] holds the slot-order RR extractions
+    Δ(d_q, x_running) (None when ``emit_stored=False``), ``cov`` [B, U]
+    int32 the per-element delivery tally (None unless ``emit_cov``; how
+    many active slots delivered each universe slot — popcounted per word
+    for kind "bitor"; provenance, DESIGN.md §19), and ``cnt``/``dsz``
+    [B, P] count each slot's novel / received irreducibles per node.
 
     Sweep batching (DESIGN.md §13): a rank-3 ``x`` ([C, B, U] with a
     leading config axis, ``d_stack`` [P, C, B, U], ``active`` [C, B, P])
@@ -153,14 +157,17 @@ def round_recv(d_stack, x, *, kind: str = "max", block=None, interpret=None,
             # (object, node) rows; short universes stay lane-aligned.
             bm = 128 if rows >= 128 else ROUND_BLOCK[0]
             block = (bm, min(ROUND_BLOCK[1], -(-u // LANE) * LANE))
-        xo, s, cnt, dsz = round_recv(
+        xo, s, cov, cnt, dsz = round_recv(
             d_stack.reshape(p, rows, u), x.reshape(rows, u), kind=kind,
             block=block, interpret=interpret, emit_stored=emit_stored,
+            emit_cov=emit_cov,
             active=None if active is None else active.reshape(rows, p))
         xo = xo.reshape(c, b, u)
         if s is not None:
             s = s.reshape(p, c, b, u)
-        return xo, s, cnt.reshape(c, b, p), dsz.reshape(c, b, p)
+        if cov is not None:
+            cov = cov.reshape(c, b, u)
+        return xo, s, cov, cnt.reshape(c, b, p), dsz.reshape(c, b, p)
     batched = x.ndim == 3
     if batched:
         p, c, b, u = d_stack.shape
@@ -188,24 +195,28 @@ def round_recv(d_stack, x, *, kind: str = "max", block=None, interpret=None,
         assert active.shape == x.shape[:-1] + (p,)
         a2 = jnp.pad(active.astype(jnp.int32),
                      lead[:-1] + ((0, m_pad - b), (0, 0)))
-    xo, s, cnt, dsz = round_recv_2d(
+    xo, s, cov, cnt, dsz = round_recv_2d(
         d2, x2, a2, kind=kind, block=block, interpret=interpret,
-        emit_stored=emit_stored, batched=batched)
+        emit_stored=emit_stored, emit_cov=emit_cov, batched=batched)
     if batched:
         xo = xo[:, :b, :u].astype(orig_dtype)
         if s is not None:
             s = s[:, :, :b, :u].astype(orig_dtype)
+        if cov is not None:
+            cov = cov[:, :b, :u]
         # [C, gi, gj, bm, P] -> sum universe tiles -> [C, m_pad, P] -> trim
         cnt = cnt.sum(axis=2).reshape(c, m_pad, p)[:, :b]
         dsz = dsz.sum(axis=2).reshape(c, m_pad, p)[:, :b]
-        return xo, s, cnt, dsz
+        return xo, s, cov, cnt, dsz
     xo = xo[:b, :u].astype(orig_dtype)
     if s is not None:
         s = s[:, :b, :u].astype(orig_dtype)
+    if cov is not None:
+        cov = cov[:b, :u]
     # [gi, gj, bm, P] -> sum universe tiles -> [m_pad, P] -> trim pad nodes
     cnt = cnt.sum(axis=1).reshape(m_pad, p)[:b]
     dsz = dsz.sum(axis=1).reshape(m_pad, p)[:b]
-    return xo, s, cnt, dsz
+    return xo, s, cov, cnt, dsz
 
 
 # -- single-launch sync round (megakernel, DESIGN.md §17) ---------------------
@@ -255,8 +266,8 @@ def sync_round_block(b: int, n: int, u: int, *, p: int, k: int,
 
 def sync_round(delta, x, buf, active, delivered, *, nbrs, rev,
                kind: str = "max", per_origin: bool = False,
-               extracts: bool = False, layout: str = "grid", block=None,
-               interpret=None):
+               extracts: bool = False, want_inbox: bool = False,
+               layout: str = "grid", block=None, interpret=None):
     """One full Algorithm 1/2 sync round in a single kernel launch
     (DESIGN.md §17). Canonical operands:
 
@@ -270,18 +281,21 @@ def sync_round(delta, x, buf, active, delivered, *, nbrs, rev,
 
     Returns ``(x', buf', inbox, dsz_op, xsz, ssend, cnt, dsz)``: states and
     buffers in the input dtype; ``inbox`` [P, B, N, U] — the active-masked
-    received δ-groups, emitted only for the classic/bp flavors
+    received δ-groups, emitted for the classic/bp flavors
     (``buf is not None and not extracts``) whose keep-gate needs the global
-    count, else None; ``dsz_op``/``xsz`` int32 [B, N] (local-δ and final
-    state sizes); ``ssend``/``cnt``/``dsz`` int32 [B, N, P] (send sizes
-    before liveness masking, novel counts, received sizes).
+    count, and whenever ``want_inbox`` forces it (provenance replay,
+    DESIGN.md §19 — orthogonal to ``extracts``, so an RR flavor keeps its
+    in-kernel Δ-merge while also emitting the inbox), else None;
+    ``dsz_op``/``xsz`` int32 [B, N] (local-δ and final state sizes);
+    ``ssend``/``cnt``/``dsz`` int32 [B, N, P] (send sizes before liveness
+    masking, novel counts, received sizes).
     """
     interpret = interpret_default() if interpret is None else interpret
     b, n, u = x.shape
     p = nbrs.shape[-1]
     has_buffer = buf is not None
     k = buf.shape[0] if has_buffer else 0
-    emit_inbox = has_buffer and not extracts
+    emit_inbox = (has_buffer and not extracts) or want_inbox
     if block is None:
         block, _ = sync_round_block(b, n, u, p=p, k=k, kind=kind,
                                     layout=layout, interpret=interpret)
@@ -312,7 +326,8 @@ def sync_round(delta, x, buf, active, delivered, *, nbrs, rev,
 
     xo, bo, ib, nodecnt, ssend, cnt, dsz = round_step_2d(
         d2, x2, b2, a2, dlv, routes=routes, kind=kind,
-        per_origin=per_origin, emit_inbox=emit_inbox, block=(g, bn),
+        per_origin=per_origin, emit_inbox=emit_inbox,
+        extracts=bool(extracts and has_buffer), block=(g, bn),
         interpret=interpret)
 
     xo = xo[:b, :n, :u].astype(orig_dtype)

@@ -44,11 +44,14 @@ def lex_join_delta(ta, va, tb, vb):
     return t, v, dt, dv, jnp.sum(novel.astype(jnp.int32))
 
 
-def round_recv(d_stack, x, kind: str = "max"):
+def round_recv(d_stack, x, kind: str = "max", emit_cov: bool = False):
     """Slot-order receive oracle: d_stack [P, B, U], x [B, U] ->
-    (x', stored [P, B, U], cnt [B, P], dsz [B, P])."""
+    (x', stored [P, B, U], cnt [B, P], dsz [B, P]), plus a trailing
+    per-element delivery tally cov [B, U] int32 when ``emit_cov``
+    (per-word bit tally for kind "bitor")."""
     p = d_stack.shape[0]
     stored, cnt, dsz = [], [], []
+    cov = jnp.zeros(x.shape, jnp.int32)
     for q in range(p):
         d = d_stack[q]
         if kind == "max":
@@ -56,18 +59,21 @@ def round_recv(d_stack, x, kind: str = "max"):
             s = jnp.where(novel, d, jnp.zeros_like(d))
             cnt.append(jnp.sum(novel, axis=-1).astype(jnp.int32))
             dsz.append(jnp.sum(d != 0, axis=-1).astype(jnp.int32))
+            cov = cov + (d != 0).astype(jnp.int32)
             x = jnp.maximum(x, d)
         elif kind == "bitor":
             s = jnp.bitwise_and(d, jnp.bitwise_not(x))
             pc = jax.lax.population_count
             cnt.append(jnp.sum(pc(s), axis=-1).astype(jnp.int32))
             dsz.append(jnp.sum(pc(d), axis=-1).astype(jnp.int32))
+            cov = cov + pc(d).astype(jnp.int32)
             x = jnp.bitwise_or(x, d)
         else:
             raise ValueError(kind)
         stored.append(s)
-    return (x, jnp.stack(stored, axis=0),
-            jnp.stack(cnt, axis=1), jnp.stack(dsz, axis=1))
+    out = (x, jnp.stack(stored, axis=0),
+           jnp.stack(cnt, axis=1), jnp.stack(dsz, axis=1))
+    return out + (cov,) if emit_cov else out
 
 
 def digest_blocks(x, be: int, kind: str = "max"):
@@ -90,12 +96,14 @@ def masked_extract(x, block_masks, be: int):
 
 def sync_round(delta, x, buf, active, delivered, *, nbrs, rev,
                kind: str = "max", per_origin: bool = False,
-               extracts: bool = False):
+               extracts: bool = False, emit_inbox: bool | None = None):
     """Whole-round oracle for the megakernel (kernels/round_step.py), on the
     same canonical operands as ``ops.sync_round``: delta/x [B, N, U], buf
     [K, B, N, U] or None, active [B, N, P], delivered [B, N]. Deliberately
     multi-pass: local join → sends (leave-one-out per-origin) → ack-gated
-    clear → routed slot-order receive."""
+    clear → routed slot-order receive. ``emit_inbox=None`` keeps the
+    classic/bp derivation (buffered, non-extracting); True forces the
+    stacked active-masked inbox out regardless (provenance replay)."""
     p = nbrs.shape[-1]
     dsz_op = _size(delta, kind)
     x = join(x, delta, kind)
@@ -135,7 +143,8 @@ def sync_round(delta, x, buf, active, delivered, *, nbrs, rev,
             tgt = q if per_origin else 0
             buf = buf.at[tgt].set(join(buf[tgt], s, kind))
     xsz = _size(x, kind)
-    emit = buf is not None and not extracts
+    emit = (buf is not None and not extracts) if emit_inbox is None \
+        else emit_inbox
     return (x, buf, jnp.stack(inbox, axis=0) if emit else None,
             dsz_op, xsz, ssend,
             jnp.stack(cnts, axis=-1), jnp.stack(dszs, axis=-1))

@@ -58,16 +58,22 @@ def _popcount_rows(a):
 
 
 def _round_recv_kernel(d_ref, x_ref, a_ref, *o_refs, p: int, kind: str,
-                       emit_stored: bool, batched: bool):
-    if emit_stored:
-        xo_ref, s_ref, cnt_ref, dsz_ref = o_refs
-    else:
-        xo_ref, cnt_ref, dsz_ref = o_refs
+                       emit_stored: bool, emit_cov: bool, batched: bool):
+    o_refs = list(o_refs)
+    xo_ref = o_refs.pop(0)
+    s_ref = o_refs.pop(0) if emit_stored else None
+    cov_ref = o_refs.pop(0) if emit_cov else None
+    cnt_ref, dsz_ref = o_refs
     # Batched blocks carry a singleton config dim (the batch grid axis maps
     # each config to its own block) — index it away so the fold body is the
     # same program either way.
     x = x_ref[0] if batched else x_ref[...]               # [bm, bn], VMEM
     act = a_ref[0] if batched else a_ref[...]             # [bm, p] active
+    # Per-element delivery tally (provenance, DESIGN.md §19): how many
+    # active slots shipped each universe slot this round. Word-granular
+    # for bit-packed states (popcount of delivered bits per word), same
+    # granularity as the lattice's irreducible_mask.
+    cov = jnp.zeros(x.shape, jnp.int32) if emit_cov else None
     for q in range(p):
         # Active-slot mask (topology padding ∧ fault delivery, DESIGN.md
         # §12): a suppressed slot is ⊥ — contributes nothing to x, counts,
@@ -98,18 +104,28 @@ def _round_recv_kernel(d_ref, x_ref, a_ref, *o_refs, p: int, kind: str,
             else (0, 0, slice(None), q)
         cnt_ref[cnt_idx] = cnt
         dsz_ref[cnt_idx] = dsz
+        if emit_cov:
+            if kind == "max":
+                cov = cov + (d != 0).astype(jnp.int32)
+            else:
+                cov = cov + jax.lax.population_count(d).astype(jnp.int32)
     if batched:
         xo_ref[0] = x
+        if emit_cov:
+            cov_ref[0] = cov
     else:
         xo_ref[...] = x
+        if emit_cov:
+            cov_ref[...] = cov
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("kind", "block", "interpret", "emit_stored", "batched"))
+    static_argnames=("kind", "block", "interpret", "emit_stored", "emit_cov",
+                     "batched"))
 def round_recv_2d(d, x, active=None, *, kind: str = "max", block=ROUND_BLOCK,
                   interpret: bool | None = None, emit_stored: bool = True,
-                  batched: bool = False):
+                  emit_cov: bool = False, batched: bool = False):
     """d: [P, (B,) M, N] slot-major gathered δ-groups, x: [(B,) M, N],
     tile-aligned; ``batched`` declares the extra leading config axis B
     (DESIGN.md §13), which becomes the leading batch grid dimension.
@@ -118,10 +134,14 @@ def round_recv_2d(d, x, active=None, *, kind: str = "max", block=ROUND_BLOCK,
     suppresses the slot entirely (topology padding or an injected fault,
     DESIGN.md §12); None means all slots active.
 
-    Returns ``(x', stored, cnt, dsz)`` with ``stored`` [P, (B,) M, N] the
-    slot-order RR extractions (omitted when ``emit_stored=False``) and
-    ``cnt``/``dsz`` [(B,) gi, gj, bm, P] per-block per-node counts (sum the
-    gj axis to get the [(B,) M, P] totals).
+    Returns ``(x', stored, cov, cnt, dsz)`` with ``stored`` [P, (B,) M, N]
+    the slot-order RR extractions (None when ``emit_stored=False``),
+    ``cov`` [(B,) M, N] int32 the per-element delivery tally (None unless
+    ``emit_cov``: per universe slot, how many active slots delivered it —
+    popcounted per word for kind "bitor"), and ``cnt``/``dsz``
+    [(B,) gi, gj, bm, P] per-block per-node counts (sum the gj axis to get
+    the [(B,) M, P] totals). Tiles own disjoint elements, so ``cov`` needs
+    no cross-block reduction.
     """
     interpret = interpret_default() if interpret is None else interpret
     if batched:
@@ -152,21 +172,24 @@ def round_recv_2d(d, x, active=None, *, kind: str = "max", block=ROUND_BLOCK,
         cnt_spec = pl.BlockSpec((1, 1, bm, p), lambda i, j: (i, j, 0, 0))
         cnt_shape = jax.ShapeDtypeStruct(tiles + (bm, p), jnp.int32)
     out_specs = [x_spec] + ([d_spec] if emit_stored else []) \
-        + [cnt_spec, cnt_spec]
+        + ([x_spec] if emit_cov else []) + [cnt_spec, cnt_spec]
     out_shape = [jax.ShapeDtypeStruct(x.shape, x.dtype)] \
         + ([jax.ShapeDtypeStruct(d.shape, d.dtype)] if emit_stored else []) \
+        + ([jax.ShapeDtypeStruct(x.shape, jnp.int32)] if emit_cov else []) \
         + [cnt_shape, cnt_shape]
     outs = pl.pallas_call(
         functools.partial(_round_recv_kernel, p=p, kind=kind,
-                          emit_stored=emit_stored, batched=batched),
+                          emit_stored=emit_stored, emit_cov=emit_cov,
+                          batched=batched),
         grid=grid,
         in_specs=[d_spec, x_spec, a_spec],
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
     )(d, x, active)
-    if emit_stored:
-        xo, s, cnt, dsz = outs
-    else:
-        (xo, cnt, dsz), s = outs, None
-    return xo, s, cnt, dsz
+    outs = list(outs)
+    xo = outs.pop(0)
+    s = outs.pop(0) if emit_stored else None
+    cov = outs.pop(0) if emit_cov else None
+    cnt, dsz = outs
+    return xo, s, cov, cnt, dsz

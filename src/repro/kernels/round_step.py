@@ -59,9 +59,8 @@ def _count_rows(v, kind: str):
 
 def _round_step_kernel(d_ref, x_ref, *refs, g: int, np_: int, p: int, k: int,
                        kind: str, per_origin: bool, emit_inbox: bool,
-                       routes):
+                       extracts: bool, routes):
     has_buffer = k > 0
-    extracts = has_buffer and not emit_inbox
     refs = list(refs)
     buf_ref = refs.pop(0) if has_buffer else None
     act_ref = refs.pop(0)
@@ -129,9 +128,9 @@ def _round_step_kernel(d_ref, x_ref, *refs, g: int, np_: int, p: int, k: int,
             x = jnp.bitwise_or(x, d)
         cnt_ref[0, 0, :, :, q] = cnt
         dsz_ref[0, 0, :, :, q] = _count_rows(d, kind)
-        if emit_inbox:                  # classic/bp: keep-gate is global
-            ib_ref[q] = d
-        elif extracts:                  # rr/bprr: Δ is ⊥ where not novel
+        if emit_inbox:                  # classic/bp keep-gate is global; also
+            ib_ref[q] = d               # provenance replay (want_inbox)
+        if extracts:                    # rr/bprr: Δ is ⊥ where not novel
             slots[q if per_origin else 0] = op(slots[q if per_origin else 0],
                                                s)
 
@@ -144,12 +143,12 @@ def _round_step_kernel(d_ref, x_ref, *refs, g: int, np_: int, p: int, k: int,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("routes", "kind", "per_origin", "emit_inbox", "block",
-                     "interpret"))
+    static_argnames=("routes", "kind", "per_origin", "emit_inbox", "extracts",
+                     "block", "interpret"))
 def round_step_2d(delta, x, buf, active, delivered, *, routes,
                   kind: str = "max", per_origin: bool = False,
-                  emit_inbox: bool = False, block=(1, 512),
-                  interpret: bool | None = None):
+                  emit_inbox: bool = False, extracts: bool | None = None,
+                  block=(1, 512), interpret: bool | None = None):
     """One full sync round over tile-aligned canonical operands.
 
     ``delta``/``x``: [B, Np, U] (B a multiple of g, Np the whole padded
@@ -158,6 +157,13 @@ def round_step_2d(delta, x, buf, active, delivered, *, routes,
     (required iff buf is given). ``routes``: static tuple-of-tuples,
     routes[q][n] = (sender_slot, sender_node) realizing
     inbox[n, q] = d_all[nbrs[n,q], rev[n,q]]. ``block`` = (g, bn).
+
+    ``extracts`` merges the slot-order Δ extractions into the buffer
+    in-kernel (rr/bprr). Historically it was the complement of
+    ``emit_inbox``; it is independent now so provenance can request the
+    masked inbox (``emit_inbox=True``) without silently disabling an RR
+    flavor's in-kernel merge. None keeps the legacy derivation
+    ``has_buffer and not emit_inbox``.
 
     Returns ``(x', buf', inbox, nodecnt, ssend, cnt, dsz)``:
     buf' [K, B, Np, U] (None without buffer), inbox [P, B, Np, U] (None
@@ -175,6 +181,9 @@ def round_step_2d(delta, x, buf, active, delivered, *, routes,
     gb, gj = grid
     has_buffer = buf is not None
     k = buf.shape[0] if has_buffer else 0
+    if extracts is None:
+        extracts = has_buffer and not emit_inbox
+    assert not (extracts and not has_buffer)
 
     d_spec = pl.BlockSpec((g, np_, bn), lambda i, j: (i, 0, j))
     a_spec = pl.BlockSpec((g, np_, p), lambda i, j: (i, 0, 0))
@@ -210,7 +219,8 @@ def round_step_2d(delta, x, buf, active, delivered, *, routes,
     outs = pl.pallas_call(
         functools.partial(_round_step_kernel, g=g, np_=np_, p=p, k=k,
                           kind=kind, per_origin=per_origin,
-                          emit_inbox=emit_inbox, routes=routes),
+                          emit_inbox=emit_inbox, extracts=extracts,
+                          routes=routes),
         grid=grid,
         in_specs=in_specs,
         out_specs=out_specs,

@@ -1,13 +1,29 @@
-"""Observability: in-scan telemetry channels, trace export, profiling
-hooks (DESIGN.md §18).
+"""Observability: in-scan telemetry channels, delta provenance tracing,
+trace export, convergence anomaly detection, profiling hooks (DESIGN.md
+§18, §19).
 
 ``obs.telemetry`` defines the opt-in channel computation that rides the
 simulator's scan (``simulate(..., telemetry=TelemetrySpec())``);
-``obs.trace`` renders instrumented runs to Chrome-trace/Perfetto JSON and
-JSONL event logs; ``obs.oracle`` (imported explicitly — it depends on
-``repro.sync``) recomputes every channel independently for validation.
+``obs.provenance`` the per-element lineage flight recorder
+(``simulate(..., provenance=ProvenanceSpec())``); ``obs.anomaly`` the
+host-side stall detector over divergence-gap channels; ``obs.trace``
+renders instrumented runs to Chrome-trace/Perfetto JSON and JSONL event
+logs; ``obs.oracle`` (imported explicitly — it depends on ``repro.sync``)
+recomputes every channel independently for validation.
 """
 
+from repro.obs.anomaly import (
+    FAULT_STALL,
+    NON_CONVERGENCE,
+    StallEvent,
+    detect_stalls,
+)
+from repro.obs.provenance import (
+    ProvChannels,
+    ProvenanceCarry,
+    ProvenanceResult,
+    ProvenanceSpec,
+)
 from repro.obs.telemetry import (
     TelemetryCarry,
     TelemetryChannels,
@@ -17,10 +33,18 @@ from repro.obs.telemetry import (
 from repro.obs.trace import TraceLog, annotate
 
 __all__ = [
+    "FAULT_STALL",
+    "NON_CONVERGENCE",
+    "ProvChannels",
+    "ProvenanceCarry",
+    "ProvenanceResult",
+    "ProvenanceSpec",
+    "StallEvent",
     "TelemetryCarry",
     "TelemetryChannels",
     "TelemetryResult",
     "TelemetrySpec",
     "TraceLog",
     "annotate",
+    "detect_stalls",
 ]

@@ -1,5 +1,5 @@
-"""Telemetry oracle: an independent, unjitted recomputation of every
-channel (DESIGN.md §18).
+"""Telemetry + provenance oracles: independent, unjitted recomputations
+of every observability channel (DESIGN.md §18, §19).
 
 ``oracle_channels`` replays a ``simulate`` run round by round in plain
 Python + jnp, re-deriving the algorithm's messages from the documented
@@ -12,6 +12,14 @@ kernels' ``cnt`` outputs) claim to tally. Nothing here goes through
 the topology tables, and (for digest_driven message construction) the
 digest helpers are shared. ``tests/test_telemetry.py`` asserts in-scan
 channels == oracle across algorithms × lattices × engines × faults.
+
+``oracle_provenance`` runs the same replay but re-derives the per-element
+lineage record — coverage/birth/source/hop matrices, per-edge first
+deliveries, and the per-cause waste split — entirely in numpy, including
+its own bit-unpacking for packed states (nothing shared with
+``obs/provenance.py`` beyond the result container types).
+``tests/test_provenance.py`` asserts the in-scan channels are
+bit-identical to this replay across algorithms × engines × faults.
 """
 
 from __future__ import annotations
@@ -22,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import provenance as prv
 from repro.obs.telemetry import TelemetryResult, TelemetrySpec, cluster_gap
 from repro.sync import digest as dgst
 from repro.sync.digest import DigestSpec
@@ -237,3 +246,229 @@ def oracle_channels(algo: str, lattice, topo, op_fn, active_rounds: int,
           for f in ("recv_elems", "novel_elems", "stale_rounds", "ack_lag",
                     "buf_elems", "div_gap")),
         spec=spec)
+
+
+def _np_unpack_bits(words, universe: int):
+    """uint32[..., W] -> bool[..., universe], little-endian — the oracle's
+    own bit view (independent of provenance._unpack_bits)."""
+    w = np.asarray(words)
+    bits = (w[..., :, None] >> np.arange(32, dtype=np.uint32)) & np.uint32(1)
+    return bits.reshape(w.shape[:-1] + (-1,))[..., :universe].astype(bool)
+
+
+def _np_elem_mask(lat, v, e: int):
+    if getattr(lat, "kernel_kind", None) == "bitor":
+        return _np_unpack_bits(v, e)
+    return np.asarray(lat.irreducible_mask(v), bool)
+
+
+def _np_novel_mask(lat, d, x, e: int):
+    if getattr(lat, "kernel_kind", None) == "bitor":
+        return _np_unpack_bits(
+            np.bitwise_and(np.asarray(d), np.bitwise_not(np.asarray(x))), e)
+    return np.asarray(lat.novel_mask(d, x), bool)
+
+
+def oracle_provenance(algo: str, lattice, topo, op_fn, active_rounds: int,
+                      quiet_rounds: int = 0, faults=None, x0: Any = None,
+                      digest: Optional[DigestSpec] = None,
+                      spec: Optional[prv.ProvenanceSpec] = None,
+                      ) -> prv.ProvenanceResult:
+    """Recompute the full provenance record of an (unbatched)
+    ``simulate(algo, ..., provenance=spec)`` run from first principles:
+    the same message replay as ``oracle_channels``, with per-element
+    lineage bookkeeping done in plain numpy (DESIGN.md §19). Attribution
+    gathers the sender's source from the post-op snapshot — sends precede
+    every receive in a round — matching ``provenance.round_update``'s
+    documented semantics by construction, not by sharing its code."""
+    spec = prv.ProvenanceSpec() if spec is None else spec
+    lat = lattice
+    n, p = topo.num_nodes, topo.max_degree
+    nbrs = np.asarray(topo.nbrs)
+    rev = np.asarray(topo.rev)
+    mask = np.asarray(topo.mask)
+    total = active_rounds + quiet_rounds
+    e = prv.element_universe(lat, spec.universe)
+
+    vr = None
+    if faults is not None:
+        v = faults.views(total)
+        vr = tuple(np.asarray(a) for a in (v.recv_ok, v.send_ok, v.up))
+
+    bot1 = lat.bottom()
+    botn = _bcast(bot1, (n,))
+    x = botn if x0 is None else x0
+
+    resync = algo in ("state_driven", "digest_driven")
+    has_buffer = algo not in ("state", "digest_driven")
+    per_origin = algo in ("bp", "bprr")
+    extracts = algo in ("rr", "bprr")
+
+    slots = fbuf = resp = None
+    if per_origin:
+        slots = [botn] * (p + 1)
+    elif algo in ("classic", "rr"):
+        fbuf = botn
+    elif algo == "state_driven":
+        resp = [botn] * p
+    elif algo == "digest_driven":
+        dspec = DigestSpec() if digest is None else digest
+        u = dgst.state_universe(bot1)
+        kind = lat.kernel_kind or "max"
+        nb = dspec.num_blocks(u)
+        dig = jnp.zeros((n, p, nb, dgst.CHANNELS), jnp.uint32)
+        dvalid = jnp.zeros((n, p), jnp.bool_)
+
+    ids = np.arange(n)
+    init_send = (ids[:, None] < nbrs) & mask
+    req_recv = (nbrs < ids[:, None]) & mask
+
+    # -- lineage state --------------------------------------------------------
+    idcol = ids.astype(np.int32)[:, None]                       # [N, 1]
+    cov = np.zeros((n, e), np.int32)
+    birth = np.full((n, e), -1, np.int32)
+    src = np.full((n, e), -1, np.int32)
+    hop = np.full((n, e), -1, np.int32)
+    if x0 is not None:
+        m0 = _np_elem_mask(lat, x0, e)
+        cov = m0.astype(np.int32)
+        src = np.where(m0, idcol, src).astype(np.int32)
+        hop = np.where(m0, 0, hop).astype(np.int32)
+    edge_first = np.full((n, p, e), -1, np.int32)
+    waste_bp = np.zeros((n, e), np.int32)
+    waste_cp = np.zeros((n, e), np.int32)
+    rows_bp, rows_cp, rows_cov = [], [], []
+
+    for t in range(total):
+        recv_ok = mask if vr is None else mask & vr[0][t]
+        send_ok = None if vr is None else vr[1][t]
+        up = None if vr is None else vr[2][t]
+
+        # (1) local op (gated) — births its irreducibles locally
+        delta = op_fn(x, jnp.asarray(t, jnp.int32))
+        delta = jax.tree.map(lambda d, xl: d.astype(xl.dtype), delta, x)
+        gate = np.full(n, t < active_rounds)
+        if up is not None:
+            gate = gate & up
+        delta = _where_bot(gate, delta, bot1)
+        op_m = _np_elem_mask(lat, delta, e)
+        newm = op_m & (cov == 0)
+        cov = np.where(newm, 1, cov).astype(np.int32)
+        birth = np.where(newm, t, birth).astype(np.int32)
+        src = np.where(newm, idcol, src).astype(np.int32)
+        hop = np.where(newm, 0, hop).astype(np.int32)
+        x = lat.join(x, delta)
+        if has_buffer and not resync:
+            if per_origin:
+                slots[p] = lat.join(slots[p], delta)
+            else:
+                fbuf = lat.join(fbuf, delta)
+
+        # Frozen attribution snapshot: what a sender ships this round
+        # reflects at most its op-phase lineage.
+        src_op, hop_op = src.copy(), hop.copy()
+
+        # (2) sends (identical machinery to oracle_channels)
+        if algo == "state":
+            d_slots = [x] * p
+        elif algo in ("classic", "rr"):
+            d_slots = [fbuf] * p
+        elif per_origin:
+            d_slots = []
+            for j in range(p):
+                acc = None
+                for o in range(p + 1):
+                    if o == j:
+                        continue
+                    acc = slots[o] if acc is None else lat.join(acc, slots[o])
+                d_slots.append(acc)
+        elif algo == "state_driven":
+            d_slots = [_sel(init_send[:, q], x, resp[q], bot1)
+                       for q in range(p)]
+        else:
+            local_dig = dgst.digest_state(x, dspec, kind)
+            blocks = dgst.digest_diff(local_dig[:, None], dig) \
+                & dvalid[..., None]
+            em = dgst.block_mask_to_elems(blocks, u, dspec)
+            d_slots = [dgst.extract_blocks(x, em[:, q]) for q in range(p)]
+
+        # (3) ack-gated buffer clear
+        if has_buffer and not resync:
+            delivered = np.ones(n, bool) if vr is None \
+                else (send_ok | ~mask).all(axis=-1) & up
+            if per_origin:
+                slots = [_sel(delivered, botn, s, bot1) for s in slots]
+            else:
+                fbuf = _sel(delivered, botn, fbuf, bot1)
+
+        # (4) receive in slot order, attributing each delivery
+        d_stack = jax.tree.map(lambda *ls: jnp.stack(ls, axis=1), *d_slots)
+        bp_t = np.zeros(n, np.int64)
+        cp_t = np.zeros(n, np.int64)
+        inbox = []
+        for q in range(p):
+            valid = recv_ok[:, q]
+            d = jax.tree.map(lambda a: a[nbrs[:, q], rev[:, q]], d_stack)
+            d = _where_bot(valid, d, bot1)
+            inbox.append(d)
+            recv_m = _np_elem_mask(lat, d, e)
+            novel_m = _np_novel_mask(lat, d, x, e)
+            if spec.waste:
+                red = recv_m & ~novel_m
+                isbp = red & (src_op[nbrs[:, q]] == idcol)
+                waste_bp = waste_bp + isbp.astype(np.int32)
+                waste_cp = waste_cp + (red & ~isbp).astype(np.int32)
+                bp_t = bp_t + isbp.sum(axis=-1)
+                cp_t = cp_t + (red & ~isbp).sum(axis=-1)
+            if spec.edges:
+                ef = edge_first[:, q]
+                edge_first[:, q] = np.where(recv_m & (ef < 0), t, ef)
+            newly = recv_m & (cov == 0)
+            snd = nbrs[:, q].astype(np.int32)[:, None]
+            s_hop = hop_op[nbrs[:, q]]
+            cov = np.where(newly, 1, cov).astype(np.int32)
+            birth = np.where(newly, t, birth).astype(np.int32)
+            src = np.where(newly, snd, src).astype(np.int32)
+            hop = np.where(newly, s_hop + 1, hop).astype(np.int32)
+            # buffer/state update exactly as oracle_channels
+            if resync or algo == "state":
+                x = lat.join(x, d)
+                continue
+            if extracts:
+                stored = lat.delta(d, x)
+                keep = ~lat.is_bottom(stored) & jnp.asarray(valid)
+            else:
+                stored = d
+                keep = ~lat.leq(d, x) & jnp.asarray(valid)
+            x = lat.join(x, d)
+            if per_origin:
+                slots[q] = _sel(keep, lat.join(slots[q], stored), slots[q],
+                                bot1)
+            else:
+                fbuf = _sel(keep, lat.join(fbuf, stored), fbuf, bot1)
+
+        # (4b) resync round-trip state
+        if algo == "state_driven":
+            resp = list(resp)
+            for q in range(p):
+                req_ok = req_recv[:, q] & recv_ok[:, q]
+                resp[q] = _where_bot(req_ok, lat.delta(x, inbox[q]), bot1)
+        elif algo == "digest_driven":
+            dig_in = local_dig[nbrs]
+            ok = jnp.asarray(recv_ok)
+            dig = jnp.where(ok[..., None, None], dig_in, dig)
+            dvalid = dvalid | ok
+
+        rows_bp.append(bp_t.astype(np.int32))
+        rows_cp.append(cp_t.astype(np.int32))
+        rows_cov.append(cov.sum(axis=-1).astype(np.int32))
+
+    def ch(rows):
+        return np.stack(rows).astype(np.int32) if rows \
+            else np.zeros((0, n), np.int32)
+
+    return prv.ProvenanceResult(
+        cov=cov, birth=birth, src=src, hop=hop, edge_first=edge_first,
+        waste_bp_elems=waste_bp, waste_cp_elems=waste_cp,
+        waste_bp=ch(rows_bp), waste_cp=ch(rows_cp), covered=ch(rows_cov),
+        nbrs=nbrs, spec=spec)

@@ -1,0 +1,394 @@
+"""Delta provenance tracing: per-irreducible lineage, wasted-transmission
+attribution (DESIGN.md §19).
+
+PR 9's telemetry (``obs/telemetry.py``) measures *aggregate* redundancy —
+how many delivered elements were already known, per node per round. It
+cannot say WHICH irreducible was retransmitted, along which edge, or which
+of the paper's two inefficiency sources caused it (back-propagation of
+received δ-groups vs missing redundancy removal, §I/§IV of
+arxiv 1803.02750). This module tracks, INSIDE the jitted scan, a
+per-element flight record over a fixed element universe E:
+
+* ``cov``   [.., N, E] — 0/1 coverage matrix (node n holds element e);
+* ``birth`` [.., N, E] — round of first coverage (−1: uncovered, or held
+  before round 0 via ``x0``);
+* ``src``   [.., N, E] — the node e was first obtained from (own id for
+  local op births and initial state);
+* ``hop``   [.., N, E] — path length at first coverage (0 at the origin);
+* ``edge_first`` [.., N, P, E] — first round e was delivered to n through
+  receive slot q (−1: never);
+* ``waste_bp``/``waste_cp`` [.., N, E] — cumulative redundant deliveries
+  of e at n, split by cause:
+
+  - **back-propagation** (``bp``): the sender FIRST obtained e from this
+    very receiver (``src[sender, e] == receiver``) and is now shipping it
+    back — the inefficiency BP's origin tags eliminate;
+  - **concurrent-path** (``cp``): any other redundant delivery — e reached
+    the receiver over another path first, the residual redundancy RR's
+    Δ-extraction attacks.
+
+  Every redundant delivery (telemetry's ``recv − novel``) falls in exactly
+  one bucket, so ``waste_bp + waste_cp`` accounts for 100% of the
+  aggregate redundancy — the attribution ``benchmarks/fig_provenance.py``
+  checks per algorithm.
+
+The element universe: lattices whose state is ONE dense array index
+elements by their flattened universe slot (``irreducible_mask``/
+``novel_mask`` give the per-element views); bit-packed states
+(``kernel_kind == "bitor"``) unpack to per-bit masks, so E = 32·words (or
+``ProvenanceSpec(universe=...)`` to trim the dead padding bits).
+Tuple-state lattices (lex pairs, products, linear sums) have no flat
+element axis and are rejected with an actionable error.
+
+Like the telemetry layer, everything here is structural: ``alg`` is
+duck-typed (``lattice``, ``topo``, ``slot_axis``, ``node_prefix``), this
+module imports nothing from ``repro.sync``, and the channels ride the
+scan as a ``ProvenanceCarry`` plus a per-round ``ProvChannels`` ys entry.
+With ``provenance=None`` the scan program is textually unchanged —
+bit-identical to a run without it (``tests/test_provenance.py``). The
+replay consumes the engines' masked inbox (``round_step(...,
+want_inbox=True)``), which is itself bit-identical across the
+reference/fused/mega engines, so every provenance channel is too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ProvenanceSpec:
+    """Which provenance groups to compute. Coverage lineage (``cov``,
+    ``birth``, ``src``, ``hop``) is always on — it is the substrate the
+    other groups attribute against. ``edges`` toggles the per-edge
+    first-delivery matrix, ``waste`` the per-cause redundancy tallies
+    (one src-gather and two mask passes per slot). Disabled groups keep
+    their carry leaves (the pytree must stay static for chunked /
+    checkpointed scans) but skip the per-round arithmetic.
+
+    ``universe`` overrides the element-universe width E for bit-packed
+    states (``kernel_kind == "bitor"`` unpacks to 32·words bits; pass the
+    true universe to drop the dead padding bits from every view). For
+    dense states it must match the flattened universe axis (or be None).
+    """
+
+    edges: bool = True
+    waste: bool = True
+    universe: Optional[int] = None
+
+    def asdict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class ProvenanceCarry(NamedTuple):
+    cov: jnp.ndarray         # [.., N, E] int32 0/1
+    birth: jnp.ndarray       # [.., N, E] int32 first-coverage round (−1)
+    src: jnp.ndarray         # [.., N, E] int32 first-coverage source node
+    hop: jnp.ndarray         # [.., N, E] int32 hops at first coverage (−1)
+    edge_first: jnp.ndarray  # [.., N, P, E] int32 first delivery round (−1)
+    waste_bp: jnp.ndarray    # [.., N, E] int32 back-propagation waste
+    waste_cp: jnp.ndarray    # [.., N, E] int32 concurrent-path waste
+
+
+class ProvChannels(NamedTuple):
+    """One round's aggregate provenance channels, each [(B,) N] int32."""
+
+    waste_bp: jnp.ndarray    # this round's back-propagated redundant elems
+    waste_cp: jnp.ndarray    # this round's concurrent-path redundant elems
+    covered: jnp.ndarray     # elements covered at round end
+
+
+def element_universe(lattice, universe: Optional[int] = None) -> int:
+    """Resolve the element-universe width E for ``lattice`` (see module
+    docstring), validating the optional ``ProvenanceSpec.universe``
+    override."""
+    bot = lattice.bottom()
+    if isinstance(bot, (tuple, list)):
+        raise ValueError(
+            f"provenance needs a single dense state array, but lattice "
+            f"{lattice.name!r} has a tuple state (lex pair / product / "
+            f"linear sum) — there is no flat element universe to index "
+            f"lineage over")
+    if getattr(lattice, "kernel_kind", None) == "bitor":
+        e = int(bot.shape[-1]) * 32
+        if universe is not None:
+            if not 0 < universe <= e:
+                raise ValueError(
+                    f"ProvenanceSpec.universe={universe} out of range for "
+                    f"a {bot.shape[-1]}-word bit-packed state (max {e})")
+            return universe
+        return e
+    e = int(bot.shape[-1])
+    if universe is not None and universe != e:
+        raise ValueError(
+            f"ProvenanceSpec.universe={universe} does not match the dense "
+            f"universe axis {e} of lattice {lattice.name!r} — omit it "
+            f"(it only trims bit-packed states)")
+    return e
+
+
+def _unpack_bits(words, universe: int):
+    """uint32[..., W] -> bool[..., universe] little-endian bit view
+    (mirrors kernels.ops.unpack_bits; duplicated so obs stays free of the
+    kernel stack)."""
+    bits = (words[..., :, None] >> jnp.arange(32, dtype=jnp.uint32)) \
+        & jnp.uint32(1)
+    return bits.reshape(words.shape[:-1] + (-1,))[..., :universe] \
+        .astype(jnp.bool_)
+
+
+def _elem_mask(lattice, v, e: int):
+    """bool [.., E] per-element coverage mask of a state/δ value."""
+    if getattr(lattice, "kernel_kind", None) == "bitor":
+        return _unpack_bits(v, e)
+    return lattice.irreducible_mask(v)
+
+
+def _novel_elem_mask(lattice, d, x, e: int):
+    """bool [.., E]: elements of d novel w.r.t. x (value-level for max
+    lattices — a covered slot can still receive a strictly larger value,
+    which telemetry counts as novel, not redundant)."""
+    if getattr(lattice, "kernel_kind", None) == "bitor":
+        return _unpack_bits(jnp.bitwise_and(d, jnp.bitwise_not(x)), e)
+    return lattice.novel_mask(d, x)
+
+
+def _slot(a, q: int, ax: int):
+    return a[(slice(None),) * ax + (q,)]
+
+
+def init_carry(spec: ProvenanceSpec, alg, x0=None) -> ProvenanceCarry:
+    """Fresh carry; ``x0`` (the algorithm's initial states, [.., N, ...U])
+    seeds pre-run coverage: birth −1, src = own node, hop 0 — a joining
+    replica's initial state counts as native, so resync deliveries of it
+    attribute as concurrent-path, never back-propagation. Every leaf is a
+    distinct buffer (the chunked store scan donates the carry; aliased
+    slots are an XLA donation error)."""
+    lat = alg.lattice
+    e = element_universe(lat, spec.universe)
+    n, p = alg.topo.num_nodes, alg.topo.max_degree
+    prefix = tuple(alg.node_prefix)
+    shape = prefix + (e,)
+    cov = jnp.zeros(shape, jnp.int32)
+    src = jnp.full(shape, -1, jnp.int32)
+    hop = jnp.full(shape, -1, jnp.int32)
+    if x0 is not None:
+        m = _elem_mask(lat, x0, e)
+        ids = jnp.arange(n, dtype=jnp.int32)[:, None]
+        cov = m.astype(jnp.int32)
+        src = jnp.where(m, ids, src)
+        hop = jnp.where(m, jnp.int32(0), hop)
+    return ProvenanceCarry(
+        cov=cov,
+        birth=jnp.full(shape, -1, jnp.int32),
+        src=src,
+        hop=hop,
+        edge_first=jnp.full(prefix + (p, e), -1, jnp.int32),
+        waste_bp=jnp.zeros(shape, jnp.int32),
+        waste_cp=jnp.zeros(shape, jnp.int32),
+    )
+
+
+def round_update(spec: ProvenanceSpec, alg, prov: ProvenanceCarry,
+                 x_before, op_delta, inbox, t):
+    """Replay one round's provenance from the gated op delta and the
+    engines' masked inbox ([.., N, P, ...U], exactly the per-slot values
+    the receive phase joined, ⊥ where suppressed by topology padding or
+    faults).
+
+    Order mirrors the algorithms' round: (a) the op phase births its
+    irreducibles locally; (b) the P receive slots replay in slot order
+    against the RUNNING state (novelty semantics identical to the
+    telemetry counters and the kernels' ``cnt``). Attribution gathers the
+    sender's ``src``/``hop`` from the post-op snapshot: sends are emitted
+    after the sender's own op but before any receive, so what a sender
+    ships this round reflects at most its op-phase lineage — receive-phase
+    updates of other nodes cannot retroactively change this round's
+    attribution.
+    """
+    lat, topo = alg.lattice, alg.topo
+    n, p = topo.num_nodes, topo.max_degree
+    sax = alg.slot_axis
+    e = prov.cov.shape[-1]
+    t32 = jnp.asarray(t).astype(jnp.int32)
+    ids = jnp.arange(n, dtype=jnp.int32)[:, None]               # [N, 1]
+
+    cov, birth, src, hop = prov.cov, prov.birth, prov.src, prov.hop
+    edge_first = prov.edge_first
+
+    # (a) op phase: local births. op_delta is already gated (quiescence,
+    # down nodes), so a down node births nothing.
+    op_m = _elem_mask(lat, op_delta, e)
+    new = op_m & (cov == 0)
+    cov = jnp.where(new, jnp.int32(1), cov)
+    birth = jnp.where(new, t32, birth)
+    src = jnp.where(new, ids, src)
+    hop = jnp.where(new, jnp.int32(0), hop)
+    x_run = lat.join(x_before, op_delta)
+
+    # Frozen attribution snapshot for the whole receive phase (see above).
+    src_op, hop_op = src, hop
+
+    round_bp = jnp.zeros_like(prov.waste_bp)
+    round_cp = jnp.zeros_like(prov.waste_cp)
+    for q in range(p):
+        d = _slot(inbox, q, sax)                                # [.., N, ..U]
+        recv_m = _elem_mask(lat, d, e)
+        novel_m = _novel_elem_mask(lat, d, x_run, e)
+        nbr_q = jnp.asarray(topo.nbrs[:, q])
+        snd = nbr_q.astype(jnp.int32)[:, None]                  # [N, 1]
+        if spec.waste:
+            red = recv_m & ~novel_m
+            s_src = jnp.take(src_op, nbr_q, axis=-2)            # [.., N, E]
+            isbp = red & (s_src == ids)
+            round_bp = round_bp + isbp.astype(jnp.int32)
+            round_cp = round_cp + (red & ~isbp).astype(jnp.int32)
+        if spec.edges:
+            ef_q = edge_first[..., q, :]
+            edge_first = edge_first.at[..., q, :].set(
+                jnp.where(recv_m & (ef_q < 0), t32, ef_q))
+        newly = recv_m & (cov == 0)
+        s_hop = jnp.take(hop_op, nbr_q, axis=-2)
+        cov = jnp.where(newly, jnp.int32(1), cov)
+        birth = jnp.where(newly, t32, birth)
+        src = jnp.where(newly, snd, src)
+        hop = jnp.where(newly, s_hop + jnp.int32(1), hop)
+        x_run = lat.join(x_run, d)
+
+    new_prov = ProvenanceCarry(
+        cov=cov, birth=birth, src=src, hop=hop, edge_first=edge_first,
+        waste_bp=prov.waste_bp + round_bp,
+        waste_cp=prov.waste_cp + round_cp)
+    ch = ProvChannels(
+        waste_bp=jnp.sum(round_bp, axis=-1, dtype=jnp.int32),
+        waste_cp=jnp.sum(round_cp, axis=-1, dtype=jnp.int32),
+        covered=jnp.sum(cov, axis=-1, dtype=jnp.int32))
+    return new_prov, ch
+
+
+class ProvenanceResult(NamedTuple):
+    """Host-side provenance views. Matrix fields are end-of-run
+    ([(B,) N, E] / [(B,) N, P, E]); channel fields are per-round
+    ([T, N], or [B, T, N] for sweeps/stores)."""
+
+    cov: np.ndarray
+    birth: np.ndarray
+    src: np.ndarray
+    hop: np.ndarray
+    edge_first: np.ndarray
+    waste_bp_elems: np.ndarray
+    waste_cp_elems: np.ndarray
+    waste_bp: np.ndarray     # per-round, per-node
+    waste_cp: np.ndarray
+    covered: np.ndarray
+    nbrs: np.ndarray         # [N, P] topology table (edge_first naming)
+    spec: ProvenanceSpec
+
+    # -- batch plumbing (mirrors TelemetryResult) -----------------------------
+
+    @property
+    def batch(self) -> Optional[int]:
+        return int(self.cov.shape[0]) if self.cov.ndim == 3 else None
+
+    def cell(self, b: int) -> "ProvenanceResult":
+        if self.batch is None:
+            raise ValueError("not a batched provenance result")
+        return ProvenanceResult(*(a[b] for a in self[:10]),
+                                nbrs=self.nbrs, spec=self.spec)
+
+    def take_lead(self, b: int) -> "ProvenanceResult":
+        """First ``b`` entries of the batch axis (the store engine's
+        pad-mask slice)."""
+        if self.batch is None:
+            raise ValueError("not a batched provenance result")
+        return ProvenanceResult(*(a[:b] for a in self[:10]),
+                                nbrs=self.nbrs, spec=self.spec)
+
+    def _single(self, what: str):
+        if self.batch is not None:
+            raise ValueError(
+                f"{what} is a single-run view — pass .cell(b) for one "
+                f"cell of a batched provenance result")
+
+    # -- waste attribution ----------------------------------------------------
+
+    def waste_by_cause(self):
+        """Total redundant deliveries split by cause: ``{"backprop": int,
+        "concurrent": int}`` (arrays [B] for batched results). The two
+        buckets partition telemetry's ``redundant_elems`` exactly."""
+        ax = (-2, -1)
+        bp = self.waste_bp.astype(np.int64).sum(axis=ax)
+        cp = self.waste_cp.astype(np.int64).sum(axis=ax)
+        return {"backprop": int(bp) if bp.ndim == 0 else bp,
+                "concurrent": int(cp) if cp.ndim == 0 else cp}
+
+    @property
+    def total_waste(self):
+        w = self.waste_by_cause()
+        return w["backprop"] + w["concurrent"]
+
+    def attributed_fraction(self, tele) -> float:
+        """Fraction of ``tele.redundant_elems`` (an
+        ``obs.TelemetryResult``) this trace attributes to a named cause —
+        1.0 by construction when both rode the same run."""
+        red = float(tele.redundant_elems.astype(np.int64).sum())
+        if red == 0:
+            return 1.0
+        return float(np.asarray(self.total_waste, np.float64).sum()) / red
+
+    # -- lineage views --------------------------------------------------------
+
+    def lineage(self, e: int) -> dict:
+        """The flight record of element ``e``: where it was born, how it
+        spread (per covered node: birth round / source / hop count), the
+        first-delivery edges, and the full-coverage round (−1: never)."""
+        self._single("lineage")
+        covered = self.cov[:, e] != 0
+        nodes = [{"node": int(nd), "birth": int(self.birth[nd, e]),
+                  "src": int(self.src[nd, e]), "hop": int(self.hop[nd, e])}
+                 for nd in np.nonzero(covered)[0]]
+        origins = [r["node"] for r in nodes if r["src"] == r["node"]]
+        edges = []
+        if self.spec.edges:
+            for nd in range(self.edge_first.shape[0]):
+                for q in range(self.edge_first.shape[1]):
+                    r = int(self.edge_first[nd, q, e])
+                    if r >= 0:
+                        edges.append({"dst": nd,
+                                      "src": int(self.nbrs[nd, q]),
+                                      "round": r})
+        full = int(self.birth[:, e].max()) if covered.all() else -1
+        return {"element": int(e), "origins": origins, "nodes": nodes,
+                "edges": edges, "full_coverage_round": full}
+
+    def time_to_full_coverage(self) -> np.ndarray:
+        """[E] round at which the LAST node obtained each element (−1:
+        never fully covered; 0-or-negative birth maxima mean pre-run /
+        round-0 coverage everywhere)."""
+        self._single("time_to_full_coverage")
+        full = (self.cov != 0).all(axis=0)
+        return np.where(full, self.birth.max(axis=0), -1).astype(np.int32)
+
+
+def collect(spec: ProvenanceSpec, carry: ProvenanceCarry, channels,
+            nbrs, batched: bool) -> ProvenanceResult:
+    """Device → host: transpose the scan-stacked [T, (B,) N] channels to
+    batch-major and run the overflow check (tallies are counts — negative
+    means the accumulator wrapped)."""
+
+    def t_major(a):
+        a = np.asarray(a)
+        return a.swapaxes(0, 1) if batched else a
+
+    chans = [t_major(a) for a in channels]
+    for name, a in zip(ProvChannels._fields, chans):
+        if (a < 0).any():
+            raise OverflowError(
+                f"provenance counter {name!r} overflowed its accumulator "
+                f"(negative tallies)")
+    return ProvenanceResult(*(np.asarray(a) for a in carry), *chans,
+                            nbrs=np.asarray(nbrs), spec=spec)

@@ -26,6 +26,7 @@ from typing import Optional
 _PID = 1          # single-process traces; tid separates tracks
 TID_PHASES = 1    # host phase spans (build / compile / scan / export)
 TID_MARKS = 2     # instant markers (chunk boundaries, checkpoint saves)
+TID_LINEAGE = 3   # per-element propagation spans (provenance lineage)
 
 
 class TraceLog:
@@ -97,6 +98,54 @@ class TraceLog:
             if red[t] == red[t]:              # not NaN
                 vals["redundancy"] = float(red[t])
             self.counter(f"{prefix}round", vals, ts_us=ts)
+
+    # -- provenance lineage tracks -------------------------------------------
+
+    def add_propagation_spans(self, prov, elems=None, prefix: str = "",
+                              round_us: float = 1000.0,
+                              ts0_us: Optional[float] = None):
+        """Render an (unbatched) ProvenanceResult's element lineages as
+        complete spans on the lineage track: one span per covered element
+        from its first birth round to the round its LAST covered node
+        obtained it, annotated with origins, coverage, hop depth, and the
+        per-cause waste split. ``elems`` restricts to a subset (default:
+        every element covered anywhere). One round = ``round_us`` µs on
+        the trace timeline, matching ``add_round_counters``."""
+        import numpy as np
+
+        if prov.batch is not None:
+            raise ValueError(
+                "add_propagation_spans wants a single-run provenance "
+                "result — pass prov.cell(b) for one cell of a batched run")
+        t0 = self._now_us() if ts0_us is None else ts0_us
+        n, e = prov.cov.shape
+        if elems is None:
+            elems = np.nonzero((prov.cov != 0).any(axis=0))[0]
+        for el in elems:
+            el = int(el)
+            covered = prov.cov[:, el] != 0
+            if not covered.any():
+                continue
+            births = prov.birth[covered, el]
+            # pre-run (x0-seeded) coverage has birth −1: clamp to round 0
+            t_first = max(int(births.min()), 0)
+            t_last = max(int(births.max()), 0)
+            info = prov.lineage(el)
+            self.complete(
+                f"{prefix}elem:{el}",
+                t0 + t_first * round_us,
+                (t_last - t_first + 1) * round_us,
+                tid=TID_LINEAGE,
+                element=el,
+                origins=info["origins"],
+                nodes_covered=int(covered.sum()),
+                total_nodes=n,
+                full_coverage_round=info["full_coverage_round"],
+                max_hop=int(prov.hop[covered, el].max()),
+                waste_backprop=int(
+                    prov.waste_bp_elems[:, el].astype(np.int64).sum()),
+                waste_concurrent=int(
+                    prov.waste_cp_elems[:, el].astype(np.int64).sum()))
 
     # -- export --------------------------------------------------------------
 

@@ -247,7 +247,7 @@ class SyncAlgorithm:
     # -- one synchronous round -------------------------------------------------
 
     def round_step(self, carry: AlgoCarry, op_delta, faults=None,
-                   recv_counts: bool = False):
+                   recv_counts: bool = False, want_inbox: bool = False):
         """One synchronous round; ``faults`` is an optional per-round
         ``faults.RoundFaults`` mask triple (None ⇒ fault-free; leaves carry
         a leading [B] axis when ``batch`` is set).
@@ -257,12 +257,18 @@ class SyncAlgorithm:
         — per-node int32 received / novel-at-join element tallies summed
         over the P receive slots, identical across engines (the kernel
         engines reuse the kernels' ``cnt``/``dsz`` outputs, the reference
-        loop re-derives them per slot). The default path is textually
-        unchanged, which keeps ``telemetry=None`` bit-identical.
+        loop re-derives them per slot). With ``want_inbox=True`` (the
+        provenance replay, DESIGN.md §19) the LAST element is the
+        active-masked inbox [(B,) N, P, ...U] — per receive slot, exactly
+        the δ-group the slot-order fold consumed, ⊥ where topology padding
+        or a fault suppressed it; bit-identical across engines. The
+        default path is textually unchanged, which keeps
+        ``telemetry=None``/``provenance=None`` bit-identical.
         """
         if self.is_resync:
             return self._resync_round(carry, op_delta, faults,
-                                      recv_counts=recv_counts)
+                                      recv_counts=recv_counts,
+                                      want_inbox=want_inbox)
         lat, topo = self.lattice, self.topo
         p = topo.max_degree
         sax = self.slot_axis
@@ -275,10 +281,11 @@ class SyncAlgorithm:
             # execute inside one kernels.round_step pallas_call; the engine
             # epilogue reuses the kernel's exact per-(node, slot) counts, so
             # the metric arithmetic below is shared verbatim.
-            x, buf, buf_elems, tx, cpu, state_elems, recv = \
+            x, buf, buf_elems, tx, cpu, state_elems, recv, inbox = \
                 engine_mod.mega_round(self, x, buf, buf_elems, op_delta,
                                       acc, faults=faults,
-                                      want_recv=recv_counts)
+                                      want_recv=recv_counts,
+                                      want_inbox=want_inbox)
             node_mem = state_elems.astype(acc) + buf_elems.astype(acc)
             metrics = RoundMetrics(
                 tx=tx,
@@ -287,7 +294,10 @@ class SyncAlgorithm:
                 max_mem_node=jnp.max(node_mem, axis=-1),
             )
             out = AlgoCarry(x=x, buf=buf, buf_elems=buf_elems)
-            return (out, metrics, recv) if recv_counts else (out, metrics)
+            ret = (out, metrics)
+            ret += (recv,) if recv_counts else ()
+            ret += (inbox,) if want_inbox else ()
+            return ret
 
         cpu = jnp.zeros((), acc)
 
@@ -337,13 +347,13 @@ class SyncAlgorithm:
 
         # (4) receive all messages, sequentially per slot  [Alg 2, lines 14-17]
         if self.resolved_engine == "fused":
-            x, buf, buf_elems, cpu, recv = engine_mod.fused_receive(
+            x, buf, buf_elems, cpu, recv, inbox = engine_mod.fused_receive(
                 self, x, buf, buf_elems, cpu, d_all, acc, faults=faults,
-                want_recv=recv_counts)
+                want_recv=recv_counts, want_inbox=want_inbox)
         else:
-            x, buf, buf_elems, cpu, recv = self._receive_reference(
+            x, buf, buf_elems, cpu, recv, inbox = self._receive_reference(
                 x, buf, buf_elems, cpu, d_all, acc, faults=faults,
-                want_recv=recv_counts)
+                want_recv=recv_counts, want_inbox=want_inbox)
 
         # (5) metrics
         state_elems = lat.size(x).astype(jnp.int32)             # [(B,) N]
@@ -355,7 +365,10 @@ class SyncAlgorithm:
             max_mem_node=jnp.max(node_mem, axis=-1),
         )
         out = AlgoCarry(x=x, buf=buf, buf_elems=buf_elems)
-        return (out, metrics, recv) if recv_counts else (out, metrics)
+        ret = (out, metrics)
+        ret += (recv,) if recv_counts else ()
+        ret += (inbox,) if want_inbox else ()
+        return ret
 
     def _bcast_sends(self, state):
         """Broadcast one per-node state over the P send slots:
@@ -407,7 +420,7 @@ class SyncAlgorithm:
         return (x, novel) if want_novel else x
 
     def _resync_round(self, carry: AlgoCarry, op_delta, faults=None,
-                      recv_counts: bool = False):
+                      recv_counts: bool = False, want_inbox: bool = False):
         """One pipelined anti-entropy round for ``state_driven`` /
         ``digest_driven`` (DESIGN.md §14).
 
@@ -539,19 +552,27 @@ class SyncAlgorithm:
             max_mem_node=jnp.max(node_mem, axis=-1),
         )
         out = AlgoCarry(x=x, buf=buf, buf_elems=buf_elems, aux=aux)
-        return (out, metrics, recv) if recv_counts else (out, metrics)
+        ret = (out, metrics)
+        ret += (recv,) if recv_counts else ()
+        # The resync inbox is built masked once above — it IS the
+        # provenance view (responses/extractions ride the same slots).
+        ret += (inbox,) if want_inbox else ()
+        return ret
 
     def _receive_reference(self, x, buf, buf_elems, cpu, d_all, acc,
-                           faults=None, want_recv: bool = False):
+                           faults=None, want_recv: bool = False,
+                           want_inbox: bool = False):
         """Reference receive: sequential per-slot jnp loop (3+ HBM passes
         over the state per slot — the fused engine's baseline). The fifth
         return is the telemetry ``(recv, novel)`` per-node tally pair
-        (DESIGN.md §18) or None; with ``want_recv=False`` the emitted
-        program is unchanged."""
+        (DESIGN.md §18) or None; the sixth the stacked masked inbox
+        [(B,) N, P, ...U] when ``want_inbox`` (provenance, DESIGN.md §19)
+        or None; with both flags off the emitted program is unchanged."""
         lat, topo = self.lattice, self.topo
         p = topo.max_degree
         sax = self.slot_axis
         recv_n = novel_n = None
+        slots = []
         for q in range(p):
             sender = topo.nbrs[:, q]
             sslot = topo.rev[:, q]
@@ -565,6 +586,8 @@ class SyncAlgorithm:
             # rank-0) — per-leaf ⊥-aligned select keeps the closure shard-
             # agnostic (the local config extent never appears in it).
             d = T.where_bot(valid, d, lat.bottom())
+            if want_inbox:
+                slots.append(d)
             if want_recv:
                 dsz_q = lat.size(d).astype(jnp.int32)           # [(B,) N]
                 recv_n = dsz_q if recv_n is None else recv_n + dsz_q
@@ -601,4 +624,6 @@ class SyncAlgorithm:
                 buf = T.where(keep, lat.join(buf, stored), buf)
             buf_elems = buf_elems + ssz
         recv = (recv_n, novel_n) if want_recv else None
-        return x, buf, buf_elems, cpu, recv
+        inbox = jax.tree.map(lambda *ls: jnp.stack(ls, axis=sax), *slots) \
+            if want_inbox else None
+        return x, buf, buf_elems, cpu, recv, inbox

@@ -85,15 +85,19 @@ def _fold_slots(stack, kind: str):
 
 
 def fused_receive(algo, x, buf, buf_elems, cpu, d_all, acc_dtype,
-                  faults=None, want_recv: bool = False):
+                  faults=None, want_recv: bool = False,
+                  want_inbox: bool = False):
     """Execute Alg 2 lines 14-17 for all P slots in one kernel pass.
 
     ``algo`` duck-types SyncAlgorithm (name/flags/lattice/topo). Returns the
-    updated ``(x, buf, buf_elems, cpu, recv)`` with semantics bit-identical
-    to the reference per-slot loop; ``recv`` is the telemetry
+    updated ``(x, buf, buf_elems, cpu, recv, inbox)`` with semantics
+    bit-identical to the reference per-slot loop; ``recv`` is the telemetry
     ``(recv_elems, novel_elems)`` per-node pair (DESIGN.md §18) summed from
     the kernel's always-emitted ``dsz``/``cnt`` tallies when ``want_recv``,
-    else None — the kernel launch itself is unchanged either way:
+    else None; ``inbox`` is the active-masked [(B,) N, P, ...U] received
+    δ-groups — exactly what the slot-order fold consumed, ⊥ where a slot
+    was suppressed — when ``want_inbox`` (provenance replay, DESIGN.md
+    §19), else None. The kernel launch itself is unchanged either way:
 
     * the kernel emits per-(node, slot) novel counts ``cnt`` against the
       RUNNING state, so the reference loop's global reductions reduce to
@@ -126,15 +130,19 @@ def fused_receive(algo, x, buf, buf_elems, cpu, d_all, acc_dtype,
         active = jnp.broadcast_to(active, x.shape[:-1] + (p,))
     inbox = gather_inbox(d_all, topo, batched=algo.batched)  # [(B,) N, P, U]
     d_stack = jnp.moveaxis(inbox, sax, 0)                # [P, (B,) N, U]
-    x, stored, cnt, dsz = kops.round_recv(
+    x, stored, _, cnt, dsz = kops.round_recv(
         d_stack, x, kind=kind, emit_stored=algo.has_buffer, active=active,
         layout=algo.batch_layout)
 
     recv = (jnp.sum(dsz, axis=-1, dtype=jnp.int32),
             jnp.sum(cnt, axis=-1, dtype=jnp.int32)) if want_recv else None
+    # The kernel masks suppressed slots in VMEM; the provenance replay
+    # needs the same masked view on the host side of the launch.
+    mib = jnp.where((active != 0)[..., None], inbox,
+                    jnp.zeros((), inbox.dtype)) if want_inbox else None
     cpu = cpu + algo._msum(dsz, acc_dtype)
     if not algo.has_buffer:                              # state-based
-        return x, buf, buf_elems, cpu, recv
+        return x, buf, buf_elems, cpu, recv, mib
 
     if algo.extracts:                                    # rr / bprr
         ssz = cnt                                        # |⇓Δ| per (node, slot)
@@ -161,15 +169,16 @@ def fused_receive(algo, x, buf, buf_elems, cpu, d_all, acc_dtype,
 
     cpu = cpu + algo._msum(ssz, acc_dtype)
     buf_elems = buf_elems + jnp.sum(ssz, axis=-1, dtype=jnp.int32)
-    return x, buf, buf_elems, cpu, recv
+    return x, buf, buf_elems, cpu, recv, mib
 
 
 def mega_round(algo, x, buf, buf_elems, op_delta, acc_dtype, faults=None,
-               want_recv: bool = False):
+               want_recv: bool = False, want_inbox: bool = False):
     """Execute Algorithm 1/2 phases (1)-(4) of one round through the
     single-launch megakernel (``kernels.round_step``, DESIGN.md §17).
 
-    Returns ``(x, buf, buf_elems, tx, cpu, state_elems, recv)`` bit-identical
+    Returns ``(x, buf, buf_elems, tx, cpu, state_elems, recv, inbox)``
+    bit-identical
     to the reference phases: every count the metric arithmetic consumes
     (|⇓δ|, send sizes, received/novel sizes, |⇓x'|) is emitted by the
     kernel as exact int32 per-(node, slot) tallies, and the jnp epilogue
@@ -179,7 +188,11 @@ def mega_round(algo, x, buf, buf_elems, op_delta, acc_dtype, faults=None,
     left outside the kernel is the classic/bp keep-gated buffer merge,
     whose inflation check ¬(d ⊑ x) reduces over the whole universe (all
     kernel grid tiles) — it consumes the kernel-emitted masked inbox, like
-    the fused engine's epilogue.
+    the fused engine's epilogue. ``want_inbox`` forces the kernel to emit
+    that masked inbox even for flavors that don't need it themselves
+    (state / rr / bprr) and returns it reshaped to the engine layout
+    [(B,) N, P, ...U] for the provenance replay (DESIGN.md §19), else the
+    last element is None.
     """
     lat, topo = algo.lattice, algo.topo
     kind = lat.kernel_kind
@@ -225,7 +238,13 @@ def mega_round(algo, x, buf, buf_elems, op_delta, acc_dtype, faults=None,
     xo, bo, inbox, dsz_op, xsz, ssend, cnt, dsz = kops.sync_round(
         dv, xv, bv, active, delivered, nbrs=topo.nbrs, rev=topo.rev,
         kind=kind, per_origin=algo.per_origin, extracts=algo.extracts,
-        layout=algo.batch_layout)
+        want_inbox=want_inbox, layout=algo.batch_layout)
+
+    def engine_inbox(ib):          # [P, B, N, u] -> [(B,) N, P, ...U]
+        ib = jnp.moveaxis(ib if batched else ib[:, 0], 0, sax)
+        return ib.reshape(x.shape[:nprefix] + (p,) + ushape)
+
+    mib = engine_inbox(inbox) if want_inbox else None
 
     def unb(a):
         return a if batched else a[0]
@@ -267,8 +286,7 @@ def mega_round(algo, x, buf, buf_elems, op_delta, acc_dtype, faults=None,
             b_alg = bo[0] if batched else bo[0, 0]
         b_alg = b_alg.reshape(buf.shape)
         if not algo.extracts:
-            ib = jnp.moveaxis(inbox if batched else inbox[:, 0], 0, sax)
-            ib = ib.reshape(x.shape[:nprefix] + (p,) + ushape)
+            ib = mib if mib is not None else engine_inbox(inbox)
             keep_u = keep.reshape(keep.shape + (1,) * len(ushape))
             slot_vals = jnp.where(keep_u, ib, jnp.zeros((), ib.dtype))
             if algo.per_origin:                  # bp
@@ -282,7 +300,7 @@ def mega_round(algo, x, buf, buf_elems, op_delta, acc_dtype, faults=None,
         cpu = cpu + algo._msum(ssz, acc_dtype)
         buf_elems = buf_elems + jnp.sum(ssz, axis=-1, dtype=jnp.int32)
 
-    return x, buf, buf_elems, tx, cpu, xsz, recv
+    return x, buf, buf_elems, tx, cpu, xsz, recv, mib
 
 
 def fused_join_inbox(algo, x, inbox, want_novel: bool = False):
@@ -295,7 +313,7 @@ def fused_join_inbox(algo, x, inbox, want_novel: bool = False):
     the telemetry per-node count and returned as ``(x, novel)``
     (DESIGN.md §18)."""
     d_stack = jnp.moveaxis(inbox, algo.slot_axis, 0)     # [P, (B,) N, U]
-    xo, _, cnt, _ = kops.round_recv(
+    xo, _, _, cnt, _ = kops.round_recv(
         d_stack, x, kind=algo.lattice.kernel_kind, emit_stored=False,
         layout=algo.batch_layout)
     if want_novel:

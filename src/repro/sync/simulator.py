@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lattice import Lattice
+from repro.obs import provenance as prv
 from repro.obs import telemetry as obs
 from repro.sync import treeops as T
 from repro.sync.algorithms import AlgoCarry, RoundMetrics, SyncAlgorithm
@@ -56,6 +57,8 @@ class SimResult(NamedTuple):
                                    # end (None when tracking was off)
     telemetry: Any = None    # obs.TelemetryResult when simulate(...,
                              # telemetry=TelemetrySpec()) — DESIGN.md §18
+    provenance: Any = None   # obs.ProvenanceResult when simulate(...,
+                             # provenance=ProvenanceSpec()) — DESIGN.md §19
 
     @property
     def batch(self) -> Optional[int]:
@@ -86,6 +89,8 @@ class SimResult(NamedTuple):
             uniform=None if self.uniform is None else self.uniform[b],
             telemetry=None if self.telemetry is None
             else self.telemetry.cell(b),
+            provenance=None if self.provenance is None
+            else self.provenance.cell(b),
         )
 
     def convergence_round(self):
@@ -130,7 +135,8 @@ def converged(lattice: Lattice, final_x) -> bool:
 
 
 def build_round_step(alg: SyncAlgorithm, op_fn, active_rounds: int,
-                     views, track_convergence: bool, telemetry=None):
+                     views, track_convergence: bool, telemetry=None,
+                     provenance=None):
     """Build the pure ``lax.scan`` body for one op+sync round.
 
     Shared by ``simulate`` (unbatched) and ``simulate_sweep`` (leading
@@ -143,13 +149,22 @@ def build_round_step(alg: SyncAlgorithm, op_fn, active_rounds: int,
 
     ``telemetry``: None, or an ``obs.TelemetrySpec`` — the step's carry
     becomes ``(TelemetryCarry, carry)`` and its ys grow a third
-    ``TelemetryChannels`` entry (DESIGN.md §18). With ``telemetry=None``
-    the step is the exact program it always was (the bit-identity
-    invariant of ``tests/test_telemetry.py``).
+    ``TelemetryChannels`` entry (DESIGN.md §18).
+
+    ``provenance``: None, or an ``obs.ProvenanceSpec`` — the carry gains
+    an OUTERMOST ``ProvenanceCarry`` (around the telemetry wrap when both
+    ride: ``(prov, (tele, carry))``) and the ys a trailing
+    ``ProvChannels`` entry (DESIGN.md §19); the algorithms' round runs
+    with ``want_inbox=True`` and the per-element replay consumes its
+    masked inbox. With both None the step is the exact program it always
+    was (the bit-identity invariants of ``tests/test_telemetry.py`` /
+    ``tests/test_provenance.py``).
     """
     lattice = alg.lattice
 
     def step(carry, xs):
+        if provenance is not None:
+            prov, carry = carry
         if telemetry is not None:
             tele, carry = carry
         if views is None:
@@ -169,9 +184,18 @@ def build_round_step(alg: SyncAlgorithm, op_fn, active_rounds: int,
         if rf is not None:
             gate = gate & rf.up           # a down node executes no ops
         delta = T.where_bot(gate, delta, lattice.bottom())
-        if telemetry is not None and telemetry.redundancy:
+        want_recv = telemetry is not None and telemetry.redundancy
+        inbox = None
+        if want_recv and provenance is not None:
+            carry, metrics, recv, inbox = alg.round_step(
+                carry, delta, faults=rf, recv_counts=True, want_inbox=True)
+        elif want_recv:
             carry, metrics, recv = alg.round_step(carry, delta, faults=rf,
                                                   recv_counts=True)
+        elif provenance is not None:
+            recv = None
+            carry, metrics, inbox = alg.round_step(carry, delta, faults=rf,
+                                                   want_inbox=True)
         else:
             recv = None
             carry, metrics = alg.round_step(carry, delta, faults=rf)
@@ -183,11 +207,21 @@ def build_round_step(alg: SyncAlgorithm, op_fn, active_rounds: int,
             uni = jnp.zeros((lead,), jnp.bool_)
         else:
             uni = jnp.zeros((), jnp.bool_)
-        if telemetry is None:
+        if telemetry is None and provenance is None:
             return carry, (metrics, uni)
-        tele, ch = obs.round_channels(telemetry, alg, tele, x_before, carry,
-                                      recv, rf)
-        return (tele, carry), (metrics, uni, ch)
+        ys = (metrics, uni)
+        out = carry
+        if telemetry is not None:
+            tele, ch = obs.round_channels(telemetry, alg, tele, x_before,
+                                          carry, recv, rf)
+            ys = ys + (ch,)
+            out = (tele, out)
+        if provenance is not None:
+            prov, pch = prv.round_update(provenance, alg, prov, x_before,
+                                         delta, inbox, t)
+            ys = ys + (pch,)
+            out = (prov, out)
+        return out, ys
 
     return step
 
@@ -285,13 +319,18 @@ def _cat_chunks(chunks):
 
 
 def collect_result(carry, metrics, uniform, track_convergence: bool,
-                   batched: bool = False, telemetry=None,
-                   channels=None) -> SimResult:
+                   batched: bool = False, telemetry=None, channels=None,
+                   provenance=None, prov_carry=None, prov_channels=None,
+                   nbrs=None) -> SimResult:
     """Device → host: transpose sweep metrics to [B, T], run the overflow
     check, and assemble the SimResult. ``telemetry``/``channels`` (the
     spec and the scan-stacked ``TelemetryChannels`` ys) attach an
     ``obs.TelemetryResult``, with the same transpose + overflow check
-    applied to every channel."""
+    applied to every channel. ``provenance``/``prov_carry``/
+    ``prov_channels``/``nbrs`` (the spec, the final ``ProvenanceCarry``,
+    the scan-stacked ``ProvChannels`` ys, and the topology's neighbor
+    table) attach an ``obs.ProvenanceResult`` the same way
+    (DESIGN.md §19)."""
 
     def t_major(a):
         a = np.asarray(a)
@@ -315,6 +354,9 @@ def collect_result(carry, metrics, uniform, track_convergence: bool,
         uniform=t_major(uniform) if track_convergence else None,
         telemetry=None if telemetry is None
         else obs.collect(telemetry, channels, batched),
+        provenance=None if provenance is None
+        else prv.collect(provenance, jax.device_get(prov_carry),
+                         prov_channels, nbrs, batched),
     )
 
 
@@ -334,6 +376,7 @@ def simulate(
     track_convergence: Optional[bool] = None,
     digest: Optional[DigestSpec] = None,
     telemetry: Optional[obs.TelemetrySpec] = None,
+    provenance: Optional[prv.ProvenanceSpec] = None,
 ) -> SimResult:
     """Run ``active_rounds`` op+sync rounds plus ``quiet_rounds`` sync-only
     drain rounds of ``algo`` over ``topo``.
@@ -363,6 +406,14 @@ def simulate(
     back as a per-round, per-node ``obs.TelemetryResult`` (redundancy,
     staleness, buffer occupancy, divergence gap). ``telemetry=None``
     leaves every other result field bit-identical to a run without it.
+
+    ``provenance`` opts into per-element lineage tracing (DESIGN.md §19):
+    pass an ``obs.ProvenanceSpec`` and ``SimResult.provenance`` comes back
+    as an ``obs.ProvenanceResult`` (birth/source/hop matrices, per-edge
+    first deliveries, wasted-transmission attribution by cause). Requires
+    a single-dense-array state lattice; composes freely with
+    ``telemetry``; ``provenance=None`` is bit-identical to a run without
+    it.
     """
     alg = SyncAlgorithm(name=algo, lattice=lattice, topo=topo, loo=loo,
                         engine=engine, digest=digest)
@@ -378,17 +429,33 @@ def simulate(
         track_convergence = faults is not None
 
     step = build_round_step(alg, op_fn, active_rounds, views,
-                            track_convergence, telemetry)
+                            track_convergence, telemetry, provenance)
     if views is None:
         xs = jnp.arange(total)
     else:
         xs = (jnp.arange(total), views.recv_ok, views.send_ok, views.up)
 
-    if telemetry is None:
+    if telemetry is None and provenance is None:
         carry, (metrics, uniform) = run_scan(step, carry0, xs, jit,
                                              wide_metrics)
         return collect_result(carry, metrics, uniform, track_convergence)
-    carry, (metrics, uniform, channels) = run_scan(
-        step, (obs.init_carry(alg), carry0), xs, jit, wide_metrics)
-    return collect_result(carry[1], metrics, uniform, track_convergence,
-                          telemetry=telemetry, channels=channels)
+    # Wrap order mirrors build_round_step: telemetry inner, provenance
+    # outermost.
+    wrapped = carry0
+    if telemetry is not None:
+        wrapped = (obs.init_carry(alg), wrapped)
+    if provenance is not None:
+        wrapped = (prv.init_carry(provenance, alg, carry0.x), wrapped)
+    carry, ys = run_scan(step, wrapped, xs, jit, wide_metrics)
+    prov_carry = channels = prov_channels = None
+    if provenance is not None:
+        prov_carry, carry = carry
+        prov_channels = ys[-1]
+    if telemetry is not None:
+        _, carry = carry
+        channels = ys[2]
+    metrics, uniform = ys[0], ys[1]
+    return collect_result(carry, metrics, uniform, track_convergence,
+                          telemetry=telemetry, channels=channels,
+                          provenance=provenance, prov_carry=prov_carry,
+                          prov_channels=prov_channels, nbrs=topo.nbrs)

@@ -66,6 +66,7 @@ import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.core.lattice import BatchWeights, Lattice
+from repro.obs import provenance as prv
 from repro.obs import telemetry as obs
 from repro.sync.algorithms import RoundMetrics, SyncAlgorithm, metric_dtype
 from repro.sync.digest import DigestSpec
@@ -482,6 +483,7 @@ def simulate_store(
     object_metrics: bool = True,
     pad_to: Optional[int] = None,
     telemetry: Optional[obs.TelemetrySpec] = None,
+    provenance: Optional[prv.ProvenanceSpec] = None,
     trace=None,
 ) -> StoreResult:
     """Run ``spec.objects`` independent CRDT objects of one
@@ -522,7 +524,11 @@ def simulate_store(
     attaches per-object [B, T, N] diagnostic channels (per-shard
     [S, T, N] partials under ``object_metrics=False``); ``trace`` takes
     an ``obs.TraceLog`` and marks chunk boundaries / checkpoint saves on
-    its timeline.
+    its timeline. ``provenance=prv.ProvenanceSpec()`` attaches the
+    per-object element-lineage trace (DESIGN.md §19) — per-element
+    coverage/waste matrices are [B, N, E], so it requires
+    ``object_metrics=True`` (the lineage matrices cannot be reduced to
+    shard partials without losing the per-element views).
     """
     return _simulate_store(
         algo, lattice, topo, spec, active_rounds, quiet_rounds, loo=loo,
@@ -530,7 +536,7 @@ def simulate_store(
         track_convergence=track_convergence, shard=shard, digest=digest,
         layout=layout, chunk_rounds=chunk_rounds, checkpoint=checkpoint,
         object_metrics=object_metrics, pad_to=pad_to, telemetry=telemetry,
-        trace=trace, resume=None)
+        provenance=provenance, trace=trace, resume=None)
 
 
 def resume_store(
@@ -555,6 +561,7 @@ def resume_store(
     object_metrics: bool = True,
     pad_to: Optional[int] = None,
     telemetry: Optional[obs.TelemetrySpec] = None,
+    provenance: Optional[prv.ProvenanceSpec] = None,
     trace=None,
 ) -> StoreResult:
     """Restore a chunk-boundary checkpoint and run the REMAINING rounds.
@@ -592,16 +599,21 @@ def resume_store(
         track_convergence=track_convergence, shard=shard, digest=digest,
         layout=layout, chunk_rounds=chunk_rounds, checkpoint=ckpt,
         object_metrics=object_metrics, pad_to=pad_to, telemetry=telemetry,
-        trace=trace, resume=(ckpt, step, extra))
+        provenance=provenance, trace=trace, resume=(ckpt, step, extra))
 
 
 def _simulate_store(algo, lattice, topo, spec, active_rounds, quiet_rounds,
                     *, loo, jit, engine, wide_metrics, track_convergence,
                     shard, digest, layout, chunk_rounds, checkpoint,
-                    object_metrics, pad_to, telemetry, trace,
+                    object_metrics, pad_to, telemetry, provenance, trace,
                     resume) -> StoreResult:
     if layout not in LAYOUTS:
         raise ValueError(f"unknown layout {layout!r}; one of {LAYOUTS}")
+    if provenance is not None and not object_metrics:
+        raise ValueError(
+            "provenance= requires object_metrics=True: lineage matrices "
+            "are per-object [B, N, E] views and cannot be reduced to "
+            "per-shard partial sums in-scan (DESIGN.md §19)")
     if chunk_rounds is not None and chunk_rounds < 1:
         raise ValueError(f"chunk_rounds must be >= 1, got {chunk_rounds}")
     ckpt = _as_checkpointer(checkpoint)
@@ -671,9 +683,12 @@ def _simulate_store(algo, lattice, topo, spec, active_rounds, quiet_rounds,
         track_convergence = views is not None
 
     step = build_round_step(alg, op_fn, active_rounds, views,
-                            track_convergence, telemetry)
+                            track_convergence, telemetry, provenance)
+    x_init = carry0.x
     if telemetry is not None:
         carry0 = (obs.init_carry(alg), carry0)
+    if provenance is not None:
+        carry0 = (prv.init_carry(provenance, alg, x_init), carry0)
     if not object_metrics:
         # The pad mask rides the carry (not the closure) so it shards
         # with P("object") like every other carry leaf.
@@ -696,7 +711,7 @@ def _simulate_store(algo, lattice, topo, spec, active_rounds, quiet_rounds,
         expect = _run_fingerprint(
             algo, engine, lattice, topo, layout, loo, b, b_pad, total,
             chunk_rounds, object_metrics, track_convergence, wide_metrics,
-            shard, digest, telemetry)
+            shard, digest, telemetry, provenance)
         bad = [k for k, v in expect.items() if extra.get(k) != v]
         if bad:
             detail = ", ".join(
@@ -719,6 +734,10 @@ def _simulate_store(algo, lattice, topo, spec, active_rounds, quiet_rounds,
             cdt = np.int32 if object_metrics else mdt
             ys_like = ys_like + (obs.TelemetryChannels(
                 *(np.zeros((at, sdim, n), cdt) for _ in range(6))),)
+        if provenance is not None:
+            # provenance requires object_metrics, so channels stay int32
+            ys_like = ys_like + (prv.ProvChannels(
+                *(np.zeros((at, sdim, n), np.int32) for _ in range(3))),)
         like = {"carry": carry0, "ys": ys_like}
         if wide_metrics:
             # int64 metric prefixes would silently downcast to int32
@@ -746,7 +765,7 @@ def _simulate_store(algo, lattice, topo, spec, active_rounds, quiet_rounds,
                 fp = _run_fingerprint(
                     algo, engine, lattice, topo, layout, loo, b, b_pad,
                     total, chunk_rounds, object_metrics, track_convergence,
-                    wide_metrics, shard, digest, telemetry)
+                    wide_metrics, shard, digest, telemetry, provenance)
             if ckpt is not None or trace is not None:
 
                 def on_chunk(rounds_done, carry, ys_host):
@@ -767,18 +786,21 @@ def _simulate_store(algo, lattice, topo, spec, active_rounds, quiet_rounds,
             carry, ys = run_scan_chunked(
                 step, carry0, xs, jit, wide_metrics, chunk_rounds, wrap=wrap,
                 on_chunk=on_chunk, start=start, ys_prefix=ys_prefix)
-    if telemetry is None:
-        metrics, uniform = ys
-        channels = None
-    else:
-        metrics, uniform, channels = ys
+    metrics, uniform = ys[0], ys[1]
+    channels = ys[2] if telemetry is not None else None
+    prov_channels = ys[-1] if provenance is not None else None
     if not object_metrics:
         _, carry = carry
+    prov_carry = None
+    if provenance is not None:
+        prov_carry, carry = carry
     if telemetry is not None:
         _, carry = carry
     sim = collect_result(carry, metrics, uniform, track_convergence,
                          batched=True, telemetry=telemetry,
-                         channels=channels)
+                         channels=channels, provenance=provenance,
+                         prov_carry=prov_carry, prov_channels=prov_channels,
+                         nbrs=topo.nbrs)
 
     # -- mask the pad back out ------------------------------------------------
     if pad:
@@ -789,7 +811,9 @@ def _simulate_store(algo, lattice, topo, spec, active_rounds, quiet_rounds,
                 max_mem_node=sim.max_mem_node[:b], final_x=fx,
                 uniform=None if sim.uniform is None else sim.uniform[:b],
                 telemetry=None if sim.telemetry is None
-                else sim.telemetry.take_lead(b))
+                else sim.telemetry.take_lead(b),
+                provenance=None if sim.provenance is None
+                else sim.provenance.take_lead(b))
         else:
             sim = sim._replace(final_x=fx)   # metrics already pad-masked
 
@@ -809,7 +833,7 @@ def _simulate_store(algo, lattice, topo, spec, active_rounds, quiet_rounds,
 def _run_fingerprint(algo, engine, lattice, topo, layout, loo, objects,
                      padded, total_rounds, chunk_rounds, object_metrics,
                      track_convergence, wide_metrics, shard, digest,
-                     telemetry=None) -> dict:
+                     telemetry=None, provenance=None) -> dict:
     """JSON-safe identity of a store run, written into every chunk
     checkpoint's manifest and verified on resume — restoring a bundle
     into a differently-configured run would type-check (same carry
@@ -831,7 +855,8 @@ def _run_fingerprint(algo, engine, lattice, topo, layout, loo, objects,
         "wide_metrics": bool(wide_metrics),
         "shard": bool(shard),
         "digest": digest is not None,
-        # Telemetry changes the carry/ys pytrees, so a bundle written
-        # with a different spec cannot restore into this run.
+        # Telemetry/provenance change the carry/ys pytrees, so a bundle
+        # written with a different spec cannot restore into this run.
         "telemetry": None if telemetry is None else telemetry.asdict(),
+        "provenance": None if provenance is None else provenance.asdict(),
     }

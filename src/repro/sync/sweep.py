@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lattice import Lattice
+from repro.obs import provenance as prv
 from repro.obs import telemetry as obs
 from repro.sync.algorithms import SyncAlgorithm
 from repro.sync.digest import DigestSpec
@@ -143,6 +144,7 @@ def simulate_sweep(
     shard: bool = False,
     digest: Optional[DigestSpec] = None,
     telemetry: Optional[obs.TelemetrySpec] = None,
+    provenance: Optional[prv.ProvenanceSpec] = None,
 ) -> SimResult:
     """Run ``spec.batch`` configurations of ``algo`` over the shared
     ``topo``/``lattice`` as one jitted scan.
@@ -160,7 +162,9 @@ def simulate_sweep(
     ``telemetry`` attaches the in-scan diagnostic channels (DESIGN.md
     §18) as [B, T, N] arrays — ``res.telemetry.cell(b)`` matches the
     single run's channels, and the extra ys shard with the config axis
-    under ``shard=True``.
+    under ``shard=True``. ``provenance`` attaches the per-element lineage
+    trace the same way (DESIGN.md §19): [B, N, E] matrices and [B, T, N]
+    channels, with ``res.provenance.cell(b)`` matching the single run.
     """
     alg = SyncAlgorithm(name=algo, lattice=lattice, topo=topo, loo=loo,
                         engine=engine, batch=spec.batch, digest=digest)
@@ -171,7 +175,7 @@ def simulate_sweep(
         track_convergence = views is not None
 
     step = build_round_step(alg, spec.op_fn, active_rounds, views,
-                            track_convergence, telemetry)
+                            track_convergence, telemetry, provenance)
     if views is None:
         xs = jnp.arange(total)
     else:
@@ -184,13 +188,27 @@ def simulate_sweep(
         def wrap(run):
             return launch_mesh.shard_sweep_scan(run, spec.batch)
 
-    if telemetry is None:
+    if telemetry is None and provenance is None:
         carry, (metrics, uniform) = run_scan(step, carry0, xs, jit,
                                              wide_metrics, wrap=wrap)
         return collect_result(carry, metrics, uniform, track_convergence,
                               batched=True)
-    carry, (metrics, uniform, channels) = run_scan(
-        step, (obs.init_carry(alg), carry0), xs, jit, wide_metrics, wrap=wrap)
-    return collect_result(carry[1], metrics, uniform, track_convergence,
+    wrapped = carry0
+    if telemetry is not None:
+        wrapped = (obs.init_carry(alg), wrapped)
+    if provenance is not None:
+        wrapped = (prv.init_carry(provenance, alg, carry0.x), wrapped)
+    carry, ys = run_scan(step, wrapped, xs, jit, wide_metrics, wrap=wrap)
+    prov_carry = channels = prov_channels = None
+    if provenance is not None:
+        prov_carry, carry = carry
+        prov_channels = ys[-1]
+    if telemetry is not None:
+        _, carry = carry
+        channels = ys[2]
+    metrics, uniform = ys[0], ys[1]
+    return collect_result(carry, metrics, uniform, track_convergence,
                           batched=True, telemetry=telemetry,
-                          channels=channels)
+                          channels=channels, provenance=provenance,
+                          prov_carry=prov_carry, prov_channels=prov_channels,
+                          nbrs=topo.nbrs)

@@ -178,3 +178,46 @@ def test_sync_round_block_override_bit_identical(layout_block, rng):
     for g, w in zip(base, over):
         if w is not None:
             np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+@pytest.mark.parametrize("kind", ["max", "bitor"])
+def test_round_recv_emit_cov_vs_ref(kind, rng):
+    """The optional per-element delivery tally (provenance, DESIGN.md
+    §19): cov counts how many active slots delivered each universe slot
+    (per-word bit tally for bitor), exactly like the oracle's."""
+    p, b, u = 3, 9, 150
+    hi, dtype = (50, jnp.int32) if kind == "max" else (2**31, jnp.uint32)
+    d = jnp.asarray(rng.integers(0, hi, size=(p, b, u)), dtype)
+    x = jnp.asarray(rng.integers(0, hi, size=(b, u)), dtype)
+    active = jnp.asarray(rng.integers(0, 2, size=(b, p)), jnp.int32)
+    dm = jnp.where(jnp.moveaxis(active, -1, 0)[..., None] != 0, d, 0)
+    xo, s, cov, cnt, dsz = ops.round_recv(d, x, kind=kind, active=active,
+                                          emit_cov=True)
+    rx, rs, rcnt, rdsz, rcov = ref.round_recv(dm, x, kind=kind,
+                                              emit_cov=True)
+    for got, want in ((xo, rx), (s, rs), (cov, rcov), (cnt, rcnt),
+                      (dsz, rdsz)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert cov.dtype == jnp.int32
+    # the default path is unchanged: no tally output unless asked
+    assert ops.round_recv(d, x, kind=kind, active=active)[2] is None
+
+
+@pytest.mark.parametrize("layout", ["grid", "rows"])
+def test_round_recv_emit_cov_batched(layout, rng):
+    """Both rank-3 dispatches (sweep grid axis, store row-flattening)
+    yield per-cell tallies bit-identical to unbatched calls."""
+    c, p, b, u = 2, 3, 9, 150
+    d = jnp.asarray(rng.integers(0, 50, size=(p, c, b, u)), jnp.int32)
+    x = jnp.asarray(rng.integers(0, 50, size=(c, b, u)), jnp.int32)
+    active = jnp.asarray(rng.integers(0, 2, size=(c, b, p)), jnp.int32)
+    xo, _, cov, cnt, dsz = ops.round_recv(d, x, kind="max", active=active,
+                                          emit_cov=True, layout=layout)
+    assert cov.shape == (c, b, u)
+    for cc in range(c):
+        sx, _, scov, scnt, sdsz = ops.round_recv(
+            d[:, cc], x[cc], kind="max", active=active[cc], emit_cov=True)
+        np.testing.assert_array_equal(np.asarray(cov[cc]), np.asarray(scov))
+        np.testing.assert_array_equal(np.asarray(xo[cc]), np.asarray(sx))
+        np.testing.assert_array_equal(np.asarray(cnt[cc]), np.asarray(scnt))
+        np.testing.assert_array_equal(np.asarray(dsz[cc]), np.asarray(sdsz))

@@ -1,0 +1,520 @@
+"""Delta provenance tracing (DESIGN.md §19): oracle equality, disabled-
+path bit-identity, waste attribution completeness, batch-axis coverage,
+lineage views, anomaly detection, propagation-span export.
+
+The load-bearing invariants mirror test_telemetry.py's:
+
+* ``provenance=None`` leaves every pre-existing result field
+  bit-identical — the scan program must be textually unchanged;
+* every provenance channel the scan emits equals
+  ``obs.oracle.oracle_provenance``'s independent numpy replay across
+  algorithms × engines × faults;
+* ``waste_bp + waste_cp`` partitions telemetry's redundant elements
+  EXACTLY (per node, per round) — the attribution is exhaustive.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import BitGSet, GCounter, GSet, LWWMap
+from repro.obs import (
+    FAULT_STALL,
+    NON_CONVERGENCE,
+    ProvenanceSpec,
+    TelemetrySpec,
+    TraceLog,
+    detect_stalls,
+)
+from repro.obs import provenance as prv
+from repro.obs.oracle import oracle_provenance
+from repro.obs.trace import TID_LINEAGE
+from repro.sync import (
+    ALGORITHMS,
+    FaultSchedule,
+    StoreSpec,
+    SweepSpec,
+    engine,
+    resume_store,
+    simulate,
+    simulate_store,
+    simulate_sweep,
+    topology,
+)
+
+N, T, Q = 6, 5, 6
+ENGINES = ("reference",) + tuple(engine.KERNEL_ENGINES)
+
+PROV_FIELDS = ("cov", "birth", "src", "hop", "edge_first",
+               "waste_bp_elems", "waste_cp_elems",
+               "waste_bp", "waste_cp", "covered")
+
+
+def gset_ops(n=N, rounds=T):
+    def op_fn(x, t):
+        ids = jnp.arange(n) * rounds + jnp.minimum(t, rounds - 1)
+        d = jnp.zeros((n, n * rounds), jnp.bool_)
+        return d.at[jnp.arange(n), ids].set(True)
+
+    return op_fn, GSet(universe=n * rounds).lattice, None
+
+
+def gcounter_ops(n=N):
+    def op_fn(x, t):
+        d = jnp.zeros((n, n), jnp.int32)
+        idx = jnp.arange(n)
+        return d.at[idx, idx].set(x[idx, idx] + 1)
+
+    return op_fn, GCounter(n).lattice, None
+
+
+def bitgset_ops(n=N, rounds=T):
+    """Bit-packed GSet: provenance unpacks to per-bit lineage, with the
+    universe override trimming the dead padding bits."""
+    bg = BitGSet(universe=n * rounds)
+
+    def op_fn(x, t):
+        ids = jnp.arange(n) * rounds + jnp.minimum(t, rounds - 1)
+        bit = jnp.uint32(1) << (ids % 32).astype(jnp.uint32)
+        d = jnp.zeros((n, bg.num_words), jnp.uint32)
+        return d.at[jnp.arange(n), ids // 32].set(bit)
+
+    return op_fn, bg.lattice, bg.universe
+
+
+WORKLOADS = {"gset": gset_ops, "gcounter": gcounter_ops,
+             "bitgset": bitgset_ops}
+
+
+def _loss_churn(topo, total, seed):
+    return FaultSchedule.bernoulli(topo, total, 0.25, seed=seed).compose(
+        FaultSchedule.churn(topo, total, [(2, 2, 5)]))
+
+
+def _assert_prov_equal(got, want, ctx):
+    for f in PROV_FIELDS:
+        np.testing.assert_array_equal(
+            getattr(got, f), getattr(want, f), err_msg=f"{ctx}: {f}")
+
+
+def _assert_sim_identical(a, b, ctx):
+    fa = a.final_x if isinstance(a.final_x, (list, tuple)) else (a.final_x,)
+    fb = b.final_x if isinstance(b.final_x, (list, tuple)) else (b.final_x,)
+    for la, lb in zip(fa, fb):
+        np.testing.assert_array_equal(la, lb, err_msg=f"{ctx}: final state")
+    for f in ("tx", "mem", "cpu", "max_mem_node"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f),
+                                      err_msg=f"{ctx}: {f}")
+
+
+# -- the oracle property -------------------------------------------------------
+
+
+@pytest.mark.parametrize("eng", ENGINES)
+@pytest.mark.parametrize("algo", ALGORITHMS)
+def test_provenance_matches_oracle(algo, eng):
+    op_fn, lat, uni = gset_ops()
+    topo = topology.partial_mesh(N, 2)
+    res = simulate(algo, lat, topo, op_fn, T, quiet_rounds=Q, engine=eng,
+                   provenance=ProvenanceSpec(universe=uni))
+    ora = oracle_provenance(algo, lat, topo, op_fn, T, quiet_rounds=Q,
+                            spec=ProvenanceSpec(universe=uni))
+    _assert_prov_equal(res.provenance, ora, f"{algo}/{eng}")
+
+
+@pytest.mark.parametrize("eng", ("reference", "mega"))
+@pytest.mark.parametrize("algo", ALGORITHMS)
+def test_provenance_matches_oracle_faulted(algo, eng):
+    op_fn, lat, uni = gset_ops()
+    topo = topology.partial_mesh(N, 2)
+    faults = _loss_churn(topo, T + Q, seed=7)
+    res = simulate(algo, lat, topo, op_fn, T, quiet_rounds=Q, engine=eng,
+                   faults=faults, provenance=ProvenanceSpec(universe=uni))
+    ora = oracle_provenance(algo, lat, topo, op_fn, T, quiet_rounds=Q,
+                            faults=faults,
+                            spec=ProvenanceSpec(universe=uni))
+    _assert_prov_equal(res.provenance, ora, f"{algo}/{eng}/faulted")
+
+
+@settings(max_examples=12, deadline=None)
+@given(data=st.data())
+def test_provenance_matches_oracle_property(data):
+    """Hypothesis sweep: random algorithm × lattice (boolean, counter,
+    bit-packed) × topology × engine × fault seed."""
+    algo = data.draw(st.sampled_from(ALGORITHMS), label="algo")
+    wname = data.draw(st.sampled_from(sorted(WORKLOADS)), label="workload")
+    tname = data.draw(st.sampled_from(["mesh", "tree", "full"]),
+                      label="topology")
+    eng = data.draw(st.sampled_from(ENGINES), label="engine")
+    seed = data.draw(st.integers(0, 2**16), label="seed")
+    with_faults = data.draw(st.booleans(), label="faults")
+
+    op_fn, lat, uni = WORKLOADS[wname]()
+    topo = topology.by_name(tname, N)
+    faults = _loss_churn(topo, T + Q, seed) if with_faults else None
+    spec = ProvenanceSpec(universe=uni)
+    res = simulate(algo, lat, topo, op_fn, T, quiet_rounds=Q, engine=eng,
+                   faults=faults, provenance=spec)
+    ora = oracle_provenance(algo, lat, topo, op_fn, T, quiet_rounds=Q,
+                            faults=faults, spec=spec)
+    _assert_prov_equal(res.provenance, ora,
+                       f"{algo}/{wname}/{tname}/{eng}/seed{seed}")
+
+
+# -- disabled-path bit-identity ------------------------------------------------
+
+
+@pytest.mark.parametrize("eng", ENGINES)
+@pytest.mark.parametrize("algo", ("classic", "bprr", "digest_driven"))
+def test_provenance_off_is_bit_identical(algo, eng):
+    """provenance=ProvenanceSpec() must not perturb ANY pre-existing
+    result field (states, metrics, telemetry channels) vs
+    provenance=None."""
+    op_fn, lat, _ = gset_ops()
+    topo = topology.partial_mesh(N, 2)
+    faults = _loss_churn(topo, T + Q, seed=3)
+    on = simulate(algo, lat, topo, op_fn, T, quiet_rounds=Q, engine=eng,
+                  faults=faults, telemetry=TelemetrySpec(),
+                  provenance=ProvenanceSpec())
+    off = simulate(algo, lat, topo, op_fn, T, quiet_rounds=Q, engine=eng,
+                   faults=faults, telemetry=TelemetrySpec())
+    assert off.provenance is None
+    assert on.provenance is not None
+    _assert_sim_identical(on, off, f"{algo}/{eng}")
+    for f in ("recv_elems", "novel_elems", "div_gap"):
+        np.testing.assert_array_equal(getattr(on.telemetry, f),
+                                      getattr(off.telemetry, f),
+                                      err_msg=f"{algo}/{eng}: {f}")
+
+
+def test_spec_groups_gate_channels():
+    """Disabled groups keep their (zero / −1) carry leaves but skip the
+    arithmetic — the pytree stays static for chunked scans."""
+    op_fn, lat, _ = gset_ops()
+    topo = topology.ring(N)
+    full = simulate("classic", lat, topo, op_fn, T, quiet_rounds=Q,
+                    provenance=ProvenanceSpec()).provenance
+    bare = simulate("classic", lat, topo, op_fn, T, quiet_rounds=Q,
+                    provenance=ProvenanceSpec(edges=False,
+                                              waste=False)).provenance
+    for f in ("cov", "birth", "src", "hop"):    # lineage is always on
+        np.testing.assert_array_equal(getattr(bare, f), getattr(full, f), f)
+    assert (bare.edge_first == -1).all()
+    assert (bare.waste_bp == 0).all() and (bare.waste_cp == 0).all()
+    assert bare.total_waste == 0
+
+
+# -- attribution completeness and cause structure ------------------------------
+
+
+@pytest.mark.parametrize("algo", ("state", "classic", "rr"))
+def test_waste_partitions_redundancy_exactly(algo):
+    """waste_bp + waste_cp == telemetry's recv − novel, per node per
+    round — not approximately: the split is a partition."""
+    op_fn, lat, _ = gset_ops()
+    topo = topology.partial_mesh(N, 4)
+    res = simulate(algo, lat, topo, op_fn, T, quiet_rounds=Q,
+                   telemetry=TelemetrySpec(), provenance=ProvenanceSpec())
+    tel, prov = res.telemetry, res.provenance
+    np.testing.assert_array_equal(
+        prov.waste_bp + prov.waste_cp,
+        tel.recv_elems - tel.novel_elems, err_msg=algo)
+    assert prov.attributed_fraction(tel) == 1.0
+
+
+@pytest.mark.parametrize("eng", ENGINES)
+def test_bprr_never_backpropagates_fault_free(eng):
+    """The paper's BP mechanism, verified per element: with origin
+    tracking AND redundancy removal, no element is ever shipped back to
+    the node it was first obtained from (fault-free)."""
+    op_fn, lat, _ = gset_ops()
+    topo = topology.partial_mesh(N, 4)
+    prov = simulate("bprr", lat, topo, op_fn, T, quiet_rounds=Q,
+                    engine=eng, provenance=ProvenanceSpec()).provenance
+    assert prov.waste_by_cause()["backprop"] == 0
+    classic = simulate("classic", lat, topo, op_fn, T, quiet_rounds=Q,
+                       engine=eng, provenance=ProvenanceSpec()).provenance
+    assert classic.waste_by_cause()["backprop"] > 0
+
+
+# -- lineage views -------------------------------------------------------------
+
+
+def test_lineage_and_coverage_views():
+    op_fn, lat, _ = gset_ops()
+    topo = topology.ring(N)
+    prov = simulate("classic", lat, topo, op_fn, T, quiet_rounds=Q,
+                    provenance=ProvenanceSpec()).provenance
+    assert (prov.cov == 1).all()                 # fault-free: full coverage
+    t2f = prov.time_to_full_coverage()
+    np.testing.assert_array_equal(t2f, prov.birth.max(axis=0))
+    for e in (0, T, N * T - 1):
+        rec = prov.lineage(e)
+        origin = e // T                          # element e born at node e//T
+        assert rec["origins"] == [origin]
+        born = next(r for r in rec["nodes"] if r["node"] == origin)
+        assert born["hop"] == 0 and born["birth"] == min(e % T, T - 1)
+        assert rec["full_coverage_round"] == int(t2f[e])
+        assert all(r["hop"] >= 1 for r in rec["nodes"]
+                   if r["node"] != origin)
+        # every non-origin node's first delivery edge is recorded
+        dsts = {ed["dst"] for ed in rec["edges"]}
+        assert set(range(N)) - {origin} <= dsts
+        assert len(rec["edges"]) >= N - 1
+
+
+def test_x0_seeds_native_coverage():
+    """Initial state counts as native: birth −1, src = own node, hop 0 —
+    resync deliveries of it attribute as concurrent, never backprop."""
+    _, lat, _ = gset_ops()
+    topo = topology.ring(N)
+    u = N * T
+    x0 = jnp.ones((N, u), jnp.bool_)
+
+    def no_op(x, t):
+        return jnp.zeros_like(x)
+
+    prov = simulate("state", lat, topo, no_op, 0, quiet_rounds=3, x0=x0,
+                    provenance=ProvenanceSpec()).provenance
+    assert (prov.cov == 1).all()
+    assert (prov.birth == -1).all()
+    np.testing.assert_array_equal(
+        prov.src, np.broadcast_to(np.arange(N)[:, None], (N, u)))
+    assert (prov.hop == 0).all()
+    assert prov.waste_by_cause()["backprop"] == 0   # native ≠ back-propagated
+
+
+def test_element_universe_validation():
+    lat = LWWMap(num_keys=4).lattice
+    with pytest.raises(ValueError, match="tuple state"):
+        prv.element_universe(lat)
+    bg = BitGSet(universe=40)
+    assert prv.element_universe(bg.lattice) == 64          # 2 words
+    assert prv.element_universe(bg.lattice, universe=40) == 40
+    with pytest.raises(ValueError, match="out of range"):
+        prv.element_universe(bg.lattice, universe=65)
+    dense = GSet(universe=10).lattice
+    assert prv.element_universe(dense) == 10
+    with pytest.raises(ValueError, match="does not match"):
+        prv.element_universe(dense, universe=5)
+
+
+def test_overflow_check():
+    chans = [np.zeros((3, N), np.int32) for _ in range(3)]
+    chans[0][1, 2] = -9
+    carry = prv.init_carry(
+        ProvenanceSpec(),
+        type("A", (), {"lattice": GSet(universe=8).lattice,
+                       "topo": topology.ring(N),
+                       "node_prefix": (N,), "slot_axis": 1})())
+    with pytest.raises(OverflowError, match="waste_bp"):
+        prv.collect(ProvenanceSpec(), carry, prv.ProvChannels(*chans),
+                    topology.ring(N).nbrs, batched=False)
+
+
+# -- sweep / store batch axes --------------------------------------------------
+
+
+def _shifted_ops(shift, n=N, rounds=T):
+    def op_fn(x, t):
+        ids = (jnp.arange(n) * rounds + jnp.minimum(t, rounds - 1)
+               + shift) % (n * rounds)
+        d = jnp.zeros((n, n * rounds), jnp.bool_)
+        return d.at[jnp.arange(n), ids].set(True)
+
+    return op_fn
+
+
+def _store_ops(n=N, rounds=T):
+    def op_fn(x, t):
+        bdim = x.shape[0]
+        ids = (jnp.arange(n)[None, :] * rounds + jnp.minimum(t, rounds - 1)
+               + jnp.arange(bdim)[:, None]) % (n * rounds)
+        d = jnp.zeros((bdim, n, n * rounds), jnp.bool_)
+        return d.at[jnp.arange(bdim)[:, None], jnp.arange(n)[None, :],
+                    ids].set(True)
+
+    return op_fn
+
+
+@pytest.mark.parametrize("eng", ENGINES)
+def test_sweep_cells_match_single_runs(eng):
+    _, lat, _ = gset_ops()
+    topo = topology.ring(N)
+    B = 3
+    spec = SweepSpec(batch=B,
+                     op_fn=SweepSpec.stack_op([_shifted_ops(s)
+                                               for s in range(B)]))
+    sw = simulate_sweep("bprr", lat, topo, spec, T, quiet_rounds=Q,
+                        engine=eng, telemetry=TelemetrySpec(),
+                        provenance=ProvenanceSpec())
+    assert sw.provenance.batch == B
+    for b in range(B):
+        single = simulate("bprr", lat, topo, _shifted_ops(b), T,
+                          quiet_rounds=Q, engine=eng,
+                          provenance=ProvenanceSpec())
+        _assert_prov_equal(sw.provenance.cell(b), single.provenance,
+                           f"sweep cell {b}/{eng}")
+        _assert_prov_equal(sw.cell(b).provenance, single.provenance,
+                           f"sweep cell view {b}/{eng}")
+
+
+@pytest.mark.parametrize("eng", ("reference", "mega"))
+def test_store_objects_match_single_runs(eng):
+    _, lat, _ = gset_ops()
+    topo = topology.ring(N)
+    B = 3
+    spec = StoreSpec(objects=B, op_fn=_store_ops())
+    res = simulate_store("rr", lat, topo, spec, T, quiet_rounds=Q,
+                         engine=eng, provenance=ProvenanceSpec())
+    for b in range(B):
+        single = simulate("rr", lat, topo, _shifted_ops(b), T,
+                          quiet_rounds=Q, engine=eng,
+                          provenance=ProvenanceSpec())
+        _assert_prov_equal(res.sim.provenance.cell(b), single.provenance,
+                           f"store object {b}/{eng}")
+
+
+def test_store_padding_masks_provenance():
+    _, lat, _ = gset_ops()
+    topo = topology.ring(N)
+    spec = StoreSpec(objects=3, op_fn=_store_ops())
+    plain = simulate_store("rr", lat, topo, spec, T, quiet_rounds=Q,
+                           provenance=ProvenanceSpec())
+    padded = simulate_store("rr", lat, topo, spec, T, quiet_rounds=Q,
+                            provenance=ProvenanceSpec(), pad_to=4)
+    assert padded.sim.provenance.batch == 3
+    _assert_prov_equal(padded.sim.provenance, plain.sim.provenance, "pad")
+
+
+def test_store_chunked_resume_keeps_provenance(tmp_path):
+    _, lat, _ = gset_ops()
+    topo = topology.ring(N)
+    spec = StoreSpec(objects=3, op_fn=_store_ops())
+    full_run = simulate_store("bp", lat, topo, spec, T, quiet_rounds=Q,
+                              provenance=ProvenanceSpec(), chunk_rounds=3,
+                              checkpoint=tmp_path)
+    resumed = resume_store("bp", lat, topo, spec, T, quiet_rounds=Q,
+                           checkpoint=tmp_path, step=3,
+                           provenance=ProvenanceSpec())
+    _assert_prov_equal(full_run.sim.provenance, resumed.sim.provenance,
+                       "resume")
+    # the fingerprint records the spec: a provenance bundle cannot restore
+    # into a run without it
+    with pytest.raises(ValueError, match="different store run"):
+        resume_store("bp", lat, topo, spec, T, quiet_rounds=Q,
+                     checkpoint=tmp_path, step=3)
+
+
+def test_store_provenance_requires_object_metrics():
+    _, lat, _ = gset_ops()
+    spec = StoreSpec(objects=3, op_fn=_store_ops())
+    with pytest.raises(ValueError, match="object_metrics"):
+        simulate_store("rr", lat, topology.ring(N), spec, T,
+                       provenance=ProvenanceSpec(), object_metrics=False)
+
+
+# -- anomaly detection ---------------------------------------------------------
+
+
+def test_detect_stalls_classification():
+    gap = np.zeros((10, 2), np.int64)
+    gap[2:9, 0] = 5                 # node 0: stuck 7 rounds (constant > 0)
+    gap[3:6, 1] = [4, 3, 2]         # node 1: shrinking — healthy
+    tx = np.zeros(10, np.int64)
+    tx[2:9] = 7                     # traffic flowed the whole window
+    evs = detect_stalls(gap, tx=tx, k=3)
+    assert len(evs) == 1
+    ev = evs[0]
+    assert (ev.node, ev.cause) == (0, FAULT_STALL)
+    assert (ev.start, ev.end, ev.gap, ev.rounds) == (2, 8, 5, 7)
+    quiet = detect_stalls(gap, tx=np.zeros(10, np.int64), k=3)
+    assert quiet[0].cause == NON_CONVERGENCE
+    # no tx: conservatively a fault stall (traffic unknown)
+    assert detect_stalls(gap, k=3)[0].cause == FAULT_STALL
+    # k longer than the window: nothing flagged
+    assert detect_stalls(gap, tx=tx, k=8) == []
+
+
+def test_detect_stalls_validation():
+    with pytest.raises(ValueError, match="single-run"):
+        detect_stalls(np.zeros((2, 3, 4)))
+    with pytest.raises(ValueError, match="k must be"):
+        detect_stalls(np.zeros((4, 2)), k=0)
+    with pytest.raises(ValueError, match="rounds"):
+        detect_stalls(np.zeros((4, 2)), tx=np.zeros(3))
+
+
+def test_steady_state_lag_vs_drain():
+    """The documented usage contract (DESIGN.md §19): while ops flow, a
+    diameter>1 topology holds a constant positive gap — steady-state
+    pipeline lag the detector dutifully reports as one long window — but
+    the drain window of a healthy fault-free run is clean."""
+    op_fn, lat, _ = gset_ops()
+    topo = topology.ring(N)
+    res = simulate("classic", lat, topo, op_fn, T, quiet_rounds=Q,
+                   telemetry=TelemetrySpec())
+    active = detect_stalls(res.telemetry, tx=res.tx, k=3)
+    assert active and all(ev.end < T + 3 for ev in active)
+    drain = detect_stalls(res.telemetry.div_gap[T:], tx=res.tx[T:], k=3)
+    assert drain == []
+
+
+def test_join_gap_vs_partition_stall():
+    """The two pathologies on real runs: bprr's join gap is algorithmic
+    (tx = 0), a partition stall under state sync is fault-induced."""
+    _, lat, _ = gset_ops()
+    topo = topology.ring(N)
+    u = N * T
+    x0 = np.zeros((N, u), bool)
+    x0[1:, : u // 2] = True
+
+    def no_op(x, t):
+        return jnp.zeros_like(x)
+
+    res = simulate("bprr", lat, topo, no_op, 0, quiet_rounds=8,
+                   x0=jnp.asarray(x0), telemetry=TelemetrySpec())
+    evs = detect_stalls(res.telemetry, tx=res.tx, k=3)
+    assert evs and all(ev.cause == NON_CONVERGENCE for ev in evs)
+    assert {ev.node for ev in evs} == {0}       # only the joiner starves
+
+    op_fn, lat, _ = gset_ops()
+    total = T + Q
+    cut = FaultSchedule.partition(topo, total, start=1, stop=total - 2,
+                                  groups=[0] * (N // 2) + [1] * (N - N // 2))
+    res = simulate("state", lat, topo, op_fn, 2, quiet_rounds=total - 2,
+                   faults=cut, telemetry=TelemetrySpec())
+    evs = detect_stalls(res.telemetry, tx=res.tx, k=3)
+    assert evs and all(ev.cause == FAULT_STALL for ev in evs)
+
+
+# -- propagation-span export ---------------------------------------------------
+
+
+def test_propagation_spans_export():
+    op_fn, lat, _ = gset_ops()
+    topo = topology.ring(N)
+    res = simulate("classic", lat, topo, op_fn, T, quiet_rounds=Q,
+                   provenance=ProvenanceSpec())
+    log = TraceLog()
+    log.add_propagation_spans(res.provenance, prefix="run/")
+    spans = [e for e in log.events if e["tid"] == TID_LINEAGE]
+    assert len(spans) == N * T                   # one span per element
+    s0 = next(e for e in spans if e["args"]["element"] == 0)
+    assert s0["name"] == "run/elem:0" and s0["ph"] == "X"
+    assert s0["args"]["nodes_covered"] == N
+    assert s0["args"]["origins"] == [0]
+    assert s0["args"]["full_coverage_round"] >= 0
+    assert s0["dur"] > 0
+    # subset selection and the batched refusal
+    log2 = TraceLog()
+    log2.add_propagation_spans(res.provenance, elems=[1, 2])
+    assert len(log2.events) == 2
+    spec = SweepSpec(batch=2, op_fn=SweepSpec.stack_op(
+        [_shifted_ops(s) for s in range(2)]))
+    sw = simulate_sweep("classic", lat, topo, spec, T, quiet_rounds=Q,
+                        provenance=ProvenanceSpec())
+    with pytest.raises(ValueError, match="single-run"):
+        log.add_propagation_spans(sw.provenance)
+    log.add_propagation_spans(sw.provenance.cell(0), elems=[3])

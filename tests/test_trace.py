@@ -1,0 +1,111 @@
+"""TraceLog export edge cases (DESIGN.md §18): empty logs, zero-round
+simulations, and JSONL↔Chrome equivalence under generated event
+sequences. test_telemetry.py covers the happy path; this file pins the
+degenerate shapes tooling actually hits (a crashed run exports an empty
+trace, a 0-round sweep cell has no counter ticks) and the invariant the
+two renderings rely on: they serialize the SAME event list.
+"""
+
+import json
+import pathlib
+import tempfile
+
+import jax.numpy as jnp
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import GSet
+from repro.obs import TelemetrySpec, TraceLog
+from repro.sync import simulate, topology
+
+N = 4
+
+
+def _load_both(log, tmp_path):
+    chrome, jsonl = tmp_path / "t.json", tmp_path / "t.jsonl"
+    log.export_chrome(chrome)
+    log.export_jsonl(jsonl)
+    doc = json.loads(chrome.read_text())
+    lines = [json.loads(ln) for ln in jsonl.read_text().splitlines()]
+    return doc, lines
+
+
+def test_empty_log_exports(tmp_path):
+    """A log with no events must still render valid, loadable documents
+    (a run that fails before its first span exports what it has)."""
+    doc, lines = _load_both(TraceLog(), tmp_path)
+    assert doc["traceEvents"] == [] and doc["displayTimeUnit"] == "ms"
+    assert lines == []
+
+
+def test_zero_round_simulation_exports(tmp_path):
+    """total rounds == 0: channels are [0, N], counter rendering emits
+    nothing, and the export is still well-formed."""
+    lat = GSet(universe=8).lattice
+
+    def no_op(x, t):
+        return jnp.zeros_like(x)
+
+    res = simulate("state", lat, topology.ring(N), no_op, 0,
+                   quiet_rounds=0, telemetry=TelemetrySpec())
+    assert res.telemetry.recv_elems.shape == (0, N)
+    log = TraceLog()
+    log.add_round_counters(res.telemetry, prefix="zero/")
+    assert log.events == []
+    doc, lines = _load_both(log, tmp_path)
+    assert doc["traceEvents"] == [] and lines == []
+
+
+def test_span_context_survives_exception(tmp_path):
+    """span() closes its complete event even when the body raises — the
+    trace of a failed run shows where it died."""
+    log = TraceLog()
+    with pytest.raises(RuntimeError, match="boom"):
+        with log.span("doomed", stage=1):
+            raise RuntimeError("boom")
+    doc, lines = _load_both(log, tmp_path)
+    assert [e["name"] for e in doc["traceEvents"]] == ["doomed"]
+    assert doc["traceEvents"] == lines
+
+
+_EVENTS = st.lists(
+    st.tuples(
+        st.sampled_from(["instant", "complete", "counter"]),
+        st.text(alphabet="abcxyz/:_0", min_size=1, max_size=12),
+        st.integers(0, 2**31),
+        st.integers(0, 10**6),
+    ),
+    max_size=40,
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(events=_EVENTS)
+def test_jsonl_chrome_round_trip(events):
+    """The two exports serialize the SAME event list: reloading the
+    Chrome doc's traceEvents and the JSONL lines yields identical objects
+    in identical order, for any interleaving of event kinds."""
+    log = TraceLog()
+    for kind, name, a, b in events:
+        if kind == "instant":
+            log.instant(name, detail=a)
+        elif kind == "complete":
+            log.complete(name, float(a), float(b), arg=b)
+        else:
+            log.counter(name, {"v": a, "w": b})
+    with tempfile.TemporaryDirectory() as td:
+        doc, lines = _load_both(log, pathlib.Path(td))
+    assert doc["traceEvents"] == lines
+    assert len(lines) == len(events)
+    for (kind, name, a, b), ev in zip(events, lines):
+        assert ev["name"] == name
+        assert ev["ph"] == {"instant": "i", "complete": "X",
+                            "counter": "C"}[kind]
+        # reloaded events carry their payload through both renderings
+        if kind == "complete":
+            assert ev["ts"] == float(a) and ev["dur"] == float(b)
+            assert ev["args"]["arg"] == b
+        elif kind == "counter":
+            assert ev["args"] == {"v": float(a), "w": float(b)}
+        else:
+            assert ev["args"]["detail"] == a
